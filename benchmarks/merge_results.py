@@ -1,0 +1,41 @@
+"""Merge dry-run artifact files: the LAST record per (arch, shape, mesh)
+wins (later runs supersede earlier failures/retries)."""
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+
+def merge(paths, out):
+    best = {}
+    order = []
+    for p in paths:
+        try:
+            with open(p) as f:
+                for line in f:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    r = json.loads(line)
+                    key = (r["arch"], r["shape"], r["mesh"])
+                    if key not in best:
+                        order.append(key)
+                    # prefer ok records; otherwise latest
+                    if key in best and best[key].get("ok") and not r.get("ok"):
+                        continue
+                    best[key] = r
+        except FileNotFoundError:
+            pass
+    with open(out, "w") as f:
+        for key in order:
+            f.write(json.dumps(best[key]) + "\n")
+    return best
+
+
+if __name__ == "__main__":
+    paths = sorted(glob.glob("benchmarks/dryrun_results*.jsonl"))
+    out = "benchmarks/dryrun_merged.jsonl"
+    best = merge(paths, out)
+    ok = sum(1 for r in best.values() if r.get("ok"))
+    print(f"merged {len(best)} cells ({ok} ok) from {paths} -> {out}")

@@ -1,0 +1,86 @@
+"""Roofline-term computation from dry-run artifacts (assignment §Roofline).
+
+Hardware constants (TPU v5e per chip):
+  peak bf16 compute  197 TFLOP/s
+  HBM bandwidth      819 GB/s
+  ICI link bandwidth ~50 GB/s (per link; collective payload / link BW)
+
+Terms (seconds, per step, per chip -- all dry-run numbers are per-device):
+  compute    = HLO_FLOPs_per_device / 197e12      (trip-count-aware walker)
+  memory     = analytic_bytes_per_device / 819e9  (documented model; the
+               CPU-backend HLO's byte counts over-estimate TPU HBM traffic,
+               see EXPERIMENTS.md §Dry-run)
+  collective = collective_bytes_per_device / 50e9 (walker, payload x trips)
+
+bottleneck = argmax term; roofline_fraction = compute / max(all terms) --
+the fraction of peak the step would reach if perfectly overlapped, i.e.
+compute-bound cells score ~1 x useful_ratio.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def load_cells(path: str) -> List[dict]:
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+def roofline_terms(cell: dict) -> Optional[Dict[str, float]]:
+    if not cell.get("ok"):
+        return None
+    compute = cell["flops_per_device"] / PEAK_FLOPS
+    memory = cell["analytic_bytes_per_device"]["total"] / HBM_BW
+    coll = sum(cell["collective_bytes_per_device"].values()) / LINK_BW
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    bottleneck = max(terms, key=terms.get)
+    step = max(terms.values())
+    model_flops_dev = cell["model_flops"] / cell["n_chips"]
+    useful = model_flops_dev / max(cell["flops_per_device"], 1e-30)
+    return {
+        "compute_ms": compute * 1e3,
+        "memory_ms": memory * 1e3,
+        "collective_ms": coll * 1e3,
+        "bottleneck": bottleneck,
+        "step_us": step * 1e6,
+        "useful_ratio": min(useful, 9.99),
+        # fraction of the compute roofline actually achieved given the
+        # dominating term (counting only model-useful flops as progress)
+        "roofline_fraction": model_flops_dev / PEAK_FLOPS / step,
+    }
+
+
+def markdown_table(cells: List[dict]) -> str:
+    lines = [
+        "| arch | shape | mesh | compute ms | memory ms | collective ms "
+        "| bound | useful | roofline |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for c in cells:
+        t = roofline_terms(c)
+        if t is None:
+            lines.append(f"| {c['arch']} | {c['shape']} | {c['mesh']} | "
+                         f"FAIL: {c.get('error', '')[:40]} | | | | | |")
+            continue
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {c['mesh']} "
+            f"| {t['compute_ms']:.2f} | {t['memory_ms']:.2f} "
+            f"| {t['collective_ms']:.2f} | {t['bottleneck']} "
+            f"| {t['useful_ratio']:.2f} | {t['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    import sys
+    path = sys.argv[1] if len(sys.argv) > 1 else "benchmarks/dryrun_results.jsonl"
+    print(markdown_table(load_cells(path)))

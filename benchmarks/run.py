@@ -1,0 +1,105 @@
+"""Benchmark harness -- one section per paper table/figure.
+
+  B1 (Fig. 2): five workloads x queue x thread count -> simulated throughput
+  B2 (§5/§6 accounting): fences/op + post-flush accesses/op per queue
+  B3 (§2.1): ONLL upper-bound construction accounting
+  B4 (assignment): roofline terms per (arch x shape x mesh) from the
+      dry-run artifacts (benchmarks/dryrun_results.jsonl if present)
+
+Prints ``name,us_per_call,derived`` CSV lines per the harness contract.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import ALL_QUEUES, NVRAM, ONLL  # noqa: E402
+from benchmarks.workloads import run_workload   # noqa: E402
+
+DURABLE = ["DurableMSQ", "IzraelevitzQ", "NVTraverseQ", "UnlinkedQ",
+           "LinkedQ", "OptUnlinkedQ", "OptLinkedQ"]
+WORKLOADS = ["mixed5050", "pairs", "producers", "consumers", "prodcons"]
+
+
+def bench_fig2(ops_per_thread: int = 60) -> list:
+    rows = []
+    print("# B1: Fig.2 workloads (simulated Optane latency model)")
+    print("name,us_per_call,derived")
+    for wl in WORKLOADS:
+        threads = [1, 2, 4, 8] if wl == "mixed5050" else [1, 8]
+        for nt in threads:
+            for q in DURABLE:
+                r = run_workload(q, wl, nt, ops_per_thread)
+                rows.append(r)
+                print(f"fig2/{wl}/t{nt}/{q},{r['us_per_op']:.3f},"
+                      f"mops={r['mops_per_s']:.3f}")
+    return rows
+
+
+def bench_persist_counts() -> list:
+    print("\n# B2: persist-op accounting (200 ops, single thread)")
+    print("name,us_per_call,derived")
+    rows = []
+    for q in DURABLE:
+        r = run_workload(q, "pairs", 1, 200)
+        rows.append(r)
+        print(f"counts/{q},{r['us_per_op']:.3f},"
+              f"fences_per_op={r['fences_per_op']:.2f};"
+              f"post_flush_per_op={r['post_flush_per_op']:.2f}")
+    return rows
+
+
+def bench_onll() -> None:
+    print("\n# B3: ONLL universal construction (upper bound, §2.1)")
+    print("name,us_per_call,derived")
+    nv = NVRAM(1)
+    obj = ONLL(nv, 1, lambda s, o: (s + o, s + o), 0)
+    base = nv.total_stats()
+    n = 200
+    for i in range(n):
+        obj.update(0, 1)
+    d = nv.total_stats().minus(base)
+    print(f"onll/update,{d.time_ns / n / 1e3:.3f},"
+          f"fences_per_op={d.fences / n:.2f};"
+          f"post_flush_per_op={d.post_flush_accesses / n:.2f}")
+
+
+def bench_roofline(path: str = None) -> None:
+    base = os.path.dirname(__file__)
+    merged = os.path.join(base, "dryrun_merged.jsonl")
+    path = path or (merged if os.path.exists(merged)
+                    else os.path.join(base, "dryrun_results.jsonl"))
+    print("\n# B4: roofline terms from the multi-pod dry-run")
+    if not os.path.exists(path):
+        print(f"(no dry-run artifacts at {path}; run "
+              "`python -m repro.launch.dryrun` first)")
+        return
+    print("name,us_per_call,derived")
+    from benchmarks.roofline import load_cells, roofline_terms
+    for cell in load_cells(path):
+        t = roofline_terms(cell)
+        if t is None:
+            print(f"roofline/{cell['arch']}/{cell['shape']}/{cell['mesh']},"
+                  f"nan,error={cell.get('error', '?')[:60]}")
+            continue
+        dom = t["bottleneck"]
+        print(f"roofline/{cell['arch']}/{cell['shape']}/{cell['mesh']},"
+              f"{t['step_us']:.1f},"
+              f"compute_ms={t['compute_ms']:.2f};mem_ms={t['memory_ms']:.2f};"
+              f"coll_ms={t['collective_ms']:.2f};bound={dom};"
+              f"useful={t['useful_ratio']:.2f};"
+              f"roofline_frac={t['roofline_fraction']:.3f}")
+
+
+def main() -> None:
+    bench_fig2()
+    bench_persist_counts()
+    bench_onll()
+    bench_roofline()
+
+
+if __name__ == "__main__":
+    main()

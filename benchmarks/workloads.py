@@ -1,0 +1,93 @@
+"""Paper §10 workload definitions over the simulated-NVRAM queues.
+
+Five workloads following Figure 2:
+  * ``mixed5050``   -- each op uniformly enqueue/dequeue (initial size 10)
+  * ``pairs``       -- each thread runs enqueue-dequeue pairs
+  * ``producers``   -- enqueues only, starting from empty
+  * ``consumers``   -- dequeues only, from a pre-filled queue
+  * ``prodcons``    -- 1/4 of threads dequeue-then-enqueue blocks, the rest
+                       enqueue-then-dequeue (queue never drains)
+
+Throughput is simulated time (per-thread latency-model clocks under the
+deterministic scheduler; see repro.core.nvram for constants + citations):
+ops / max(thread clock).  The paper's claims are about *orderings and
+ratios*, which is what these reproduce.
+"""
+from __future__ import annotations
+
+import random
+from typing import Dict, List, Tuple
+
+from repro.core import ALL_QUEUES, QueueHarness
+
+
+def _plan_5050(tid: int, n_ops: int, seed: int):
+    rng = random.Random(seed * 7919 + tid)
+    plan = []
+    for i in range(n_ops):
+        if rng.random() < 0.5:
+            plan.append(("enq", (tid, i)))
+        else:
+            plan.append(("deq", None))
+    return plan
+
+
+def make_plans(workload: str, nthreads: int, ops_per_thread: int,
+               seed: int = 0) -> Tuple[List[list], int]:
+    """Returns (plans, prefill) -- prefill items are enqueued before timing."""
+    if workload == "mixed5050":
+        return [_plan_5050(t, ops_per_thread, seed)
+                for t in range(nthreads)], 10
+    if workload == "pairs":
+        plans = []
+        for t in range(nthreads):
+            p = []
+            for i in range(ops_per_thread // 2):
+                p.append(("enq", (t, i)))
+                p.append(("deq", None))
+            plans.append(p)
+        return plans, 10
+    if workload == "producers":
+        return [[("enq", (t, i)) for i in range(ops_per_thread)]
+                for t in range(nthreads)], 0
+    if workload == "consumers":
+        return [[("deq", None)] * ops_per_thread
+                for t in range(nthreads)], nthreads * ops_per_thread + 8
+    if workload == "prodcons":
+        plans = []
+        half = ops_per_thread // 2
+        for t in range(nthreads):
+            if t % 4 == 0:
+                p = [("deq", None)] * half + \
+                    [("enq", (t, i)) for i in range(half)]
+            else:
+                p = [("enq", (t, i)) for i in range(half)] + \
+                    [("deq", None)] * half
+            plans.append(p)
+        return plans, 10
+    raise ValueError(workload)
+
+
+def run_workload(queue_name: str, workload: str, nthreads: int,
+                 ops_per_thread: int = 60, seed: int = 0) -> Dict[str, float]:
+    h = QueueHarness(ALL_QUEUES[queue_name], nthreads=nthreads,
+                     area_nodes=4096)
+    plans, prefill = make_plans(workload, nthreads, ops_per_thread, seed)
+    # prefill outside the measured window
+    for i in range(prefill):
+        h.queue.enqueue(0, ("pre", i))
+    base = h.nvram.total_stats()
+    base_time = h.nvram.sim_time_ns()
+    res = h.run_scheduled(plans, seed=seed)
+    d = h.nvram.total_stats().minus(base)
+    ops = res.ops_completed
+    span = h.nvram.sim_time_ns() - base_time
+    return {
+        "queue": queue_name, "workload": workload, "threads": nthreads,
+        "ops": ops,
+        "mops_per_s": ops / max(span, 1) * 1e3,
+        "us_per_op": span / max(ops, 1) / 1e3,
+        "fences_per_op": d.fences / max(ops, 1),
+        "flushes_per_op": d.flushes / max(ops, 1),
+        "post_flush_per_op": d.post_flush_accesses / max(ops, 1),
+    }

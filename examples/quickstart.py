@@ -1,0 +1,48 @@
+"""Quickstart: the paper's durable queues on simulated NVRAM, end to end.
+
+Runs OptUnlinkedQ (the headline algorithm) under a deterministic concurrent
+schedule, injects a full-system crash, recovers, and prints the two metrics
+the paper is about: blocking fences per operation and accesses to flushed
+cache lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import (ALL_QUEUES, QueueHarness,
+                        check_durable_linearizability, split_at_crash)
+
+
+def main() -> None:
+    for name in ("DurableMSQ", "UnlinkedQ", "OptUnlinkedQ"):
+        h = QueueHarness(ALL_QUEUES[name], nthreads=3, area_nodes=512)
+        plans = []
+        for t in range(3):
+            plan = []
+            for i in range(12):
+                plan.append(("enq", (t, i)))
+                if i % 2:
+                    plan.append(("deq", None))
+            plans.append(plan)
+        res = h.run_scheduled(plans, seed=7, crash_at=400)
+        pre_events, _ = split_at_crash(h.events)
+        pre_ops = list(res.ops)
+        h.crash_and_recover(mode="random", seed=1)
+        recovered = h.queue.drain(0)
+        ok, why = check_durable_linearizability(pre_ops, pre_events,
+                                                recovered)
+        s = res.stats
+        ops = max(res.ops_completed, 1)
+        print(f"{name:14s} crash@400 -> recovered {len(recovered):2d} items "
+              f"(durably linearizable: {ok})")
+        print(f"{'':14s} fences/op={s.fences / ops:.2f}  "
+              f"post-flush-accesses/op={s.post_flush_accesses / ops:.2f}  "
+              f"sim-throughput={ops / (res.sim_time_ns / 1e3):.2f} Mops/s")
+    print("\nThe second amendment (OptUnlinkedQ): one fence per op AND zero"
+          " post-flush accesses -- that is the whole paper.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Durable batched serving (deliverable (b), serving flavor).
+
+Submits a burst of requests to the durable request queue (ONE fsync for the
+burst -- the group-commit fence), serves them in batches through the KV-cache
+decode path, durably commits responses (one fence per batch), then crashes
+the queue object and proves recovery re-serves exactly the unserved ones.
+
+  PYTHONPATH=src python examples/serve_batch.py
+"""
+import shutil
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.configs import reduced_config
+from repro.serving import DurableRequestQueue, ServeEngine
+
+DIR = "/tmp/repro_serve_example"
+
+
+def main() -> None:
+    shutil.rmtree(DIR, ignore_errors=True)
+    cfg = reduced_config("yi-6b")
+    q = DurableRequestQueue(DIR)
+    rng = np.random.RandomState(0)
+    q.submit([{"id": f"r{i}", "prompt": rng.randint(0, cfg.vocab, (4,)).tolist()}
+              for i in range(10)])
+    print(f"submitted 10 requests ({q.req_wal.stats.fences} fence)")
+
+    eng = ServeEngine(cfg, q, max_len=32)
+    eng.serve_once(batch_size=4, max_new=6)
+    print(f"served first batch of 4; responses durable "
+          f"({q.resp_wal.stats.fences} fence)")
+
+    q.close()   # crash
+    q2 = DurableRequestQueue(DIR)
+    pending = q2.recover()
+    print(f"recovered: {pending} requests still pending (expected 6)")
+    eng2 = ServeEngine(cfg, q2, max_len=32)
+    n = eng2.run(batch_size=4, max_new=6)
+    print(f"served remaining {n}; total responses: {len(q2.responses())}")
+    ids = sorted(r["id"] for r in q2.responses())
+    assert ids == sorted(f"r{i}" for i in range(10)), ids
+    print("every request answered exactly once across the crash.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .checkpointer import DurableCheckpointer
+
+__all__ = ["DurableCheckpointer"]

@@ -1,0 +1,42 @@
+"""Core reproduction of "Durable Queues: The Second Amendment" (SPAA'21).
+
+Simulated NVRAM (cache-line model with CLWB-invalidation semantics and
+Assumption-1 crash prefixes), a deterministic interleaving scheduler, the
+ssmem designated-area allocator, and the seven queue algorithms:
+
+========================  ======================  ==========================
+queue                     fences / update op      post-flush accesses
+========================  ======================  ==========================
+MSQ (volatile)            0 (not durable)         --
+IzraelevitzQ              many (per shared op)    yes
+NVTraverseQ               several                 yes
+DurableMSQ (Friedman'18)  2 enq / 1 deq           yes
+UnlinkedQ   (1st amend.)  1                       yes
+LinkedQ     (1st amend.)  1                       yes
+OptUnlinkedQ (2nd amend.) 1                       **0**
+OptLinkedQ   (2nd amend.) 1                       **0**
+========================  ======================  ==========================
+"""
+from .nvram import NVRAM, LINE_WORDS, Stats, ThreadCrashed
+from .scheduler import Scheduler
+from .ssmem import SSMem, VolatileAlloc
+from .queue_base import NULL, QueueAlgorithm
+from .msq import MSQueue
+from .durable_msq import DurableMSQueue
+from .izraelevitz import IzraelevitzQueue, NVTraverseQueue
+from .unlinked import UnlinkedQueue
+from .linked import LinkedQueue
+from .opt_unlinked import OptUnlinkedQueue
+from .opt_linked import OptLinkedQueue
+from .onll import ONLL
+from .harness import (ALL_QUEUES, DURABLE_QUEUES, QueueHarness,
+                      check_durable_linearizability, split_at_crash)
+
+__all__ = [
+    "NVRAM", "LINE_WORDS", "Stats", "ThreadCrashed", "Scheduler", "SSMem",
+    "VolatileAlloc", "NULL", "QueueAlgorithm", "MSQueue", "DurableMSQueue",
+    "IzraelevitzQueue", "NVTraverseQueue", "UnlinkedQueue", "LinkedQueue",
+    "OptUnlinkedQueue", "OptLinkedQueue", "ONLL", "ALL_QUEUES",
+    "DURABLE_QUEUES", "QueueHarness", "check_durable_linearizability",
+    "split_at_crash",
+]

@@ -1,0 +1,128 @@
+"""DurableMSQ -- the thinned Friedman et al. (PPoPP'18) durable queue.
+
+The paper's baseline (§10): the original durable queue minus the
+returned-value recovery mechanism (which durable linearizability does not
+require).  Persist schedule:
+
+* enqueue: persist the node content before linking (flush+fence #1), link
+  with CAS, persist the predecessor's ``next`` (flush+fence #2), advance tail
+  -- **2 blocking fences per enqueue**;
+* dequeue: CAS the head forward and persist it (flush+fence) -- **1 fence**;
+  a failing dequeue also persists the head to make preceding dequeues
+  durable.
+
+Recovery walks the persisted ``next`` chain from the persisted head.  Note
+the post-flush accesses this design incurs (and the paper measures): each
+enqueue re-reads the flushed tail node's line, each dequeue re-reads the
+flushed head line and the flushed node content.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+from .nvram import LINE_WORDS, NVRAM
+from .queue_base import NULL, QueueAlgorithm, alloc_root_lines
+from .ssmem import SSMem
+
+# persistent node layout (one cache line)
+ITEM, NEXT = 0, 1
+
+
+class DurableMSQueue(QueueAlgorithm):
+    NAME = "DurableMSQ"
+
+    def __init__(self, nvram: NVRAM, mem: SSMem, nthreads: int, on_event=None,
+                 _recovering: bool = False, roots=None):
+        super().__init__(nvram, mem, nthreads, on_event)
+        nv = self.nvram
+        if roots is None:
+            roots = alloc_root_lines(nv, 2, "durablemsq:roots")
+        self.HEAD, self.TAIL = roots
+        self.roots = roots
+        if not _recovering:
+            dummy = self.mem.alloc(0)
+            nv.write_full_line(dummy, [None, NULL, 0, 0, 0, 0, 0, 0])
+            nv.write(self.HEAD, dummy)
+            nv.write(self.TAIL, dummy)
+            nv.flush(dummy)
+            nv.flush(self.HEAD)
+            nv.fence()
+
+    # ------------------------------------------------------------------ ops
+    def enqueue(self, tid: int, item: Any) -> None:
+        nv = self.nvram
+        self.mem.op_begin(tid)
+        node = self.mem.alloc(tid)
+        nv.write_full_line(node, [item, NULL, 0, 0, 0, 0, 0, 0])
+        nv.flush(node)
+        nv.fence()                       # fence #1: node content durable
+        while True:
+            tail = nv.read(self.TAIL)
+            nxt = nv.read(tail + NEXT)
+            if nxt == NULL:
+                if nv.cas(tail + NEXT, NULL, node):
+                    self._ev("enq", item)
+                    nv.flush(tail + NEXT)
+                    nv.fence()           # fence #2: link durable
+                    nv.cas(self.TAIL, tail, node)
+                    return
+            else:
+                # help: persist the obstructing link before advancing tail
+                nv.flush(tail + NEXT)
+                nv.fence()
+                nv.cas(self.TAIL, tail, nxt)
+
+    def dequeue(self, tid: int) -> Any:
+        nv = self.nvram
+        self.mem.op_begin(tid)
+        while True:
+            head = nv.read(self.HEAD)
+            nxt = nv.read(head + NEXT)
+            if nxt == NULL:
+                nv.flush(self.HEAD)
+                nv.fence()               # make prior dequeues durable
+                self._ev("empty")
+                return None
+            # MSQ guard: head must not overtake tail (reclamation safety)
+            tail = nv.read(self.TAIL)
+            if head == tail:
+                nv.flush(tail + NEXT)
+                nv.fence()
+                nv.cas(self.TAIL, tail, nxt)
+                continue
+            item = nv.read(nxt + ITEM)
+            if nv.cas(self.HEAD, head, nxt):
+                self._ev("deq", item)
+                nv.flush(self.HEAD)
+                nv.fence()               # 1 fence per dequeue
+                self.mem.retire(tid, head)
+                return item
+
+    # ------------------------------------------------------------- recovery
+    @classmethod
+    def recover(cls, nvram: NVRAM, mem: SSMem, nthreads: int, roots,
+                on_event=None) -> "DurableMSQueue":
+        q = cls(nvram, mem, nthreads, on_event, _recovering=True, roots=roots)
+        head = nvram.pread(q.HEAD) or NULL
+        assert head != NULL, "initial head was persisted at construction"
+        # the persisted chain from head is the queue
+        cur = head
+        while True:
+            nxt = nvram.pread(cur + NEXT) or NULL
+            if nxt == NULL:
+                break
+            cur = nxt
+        nvram.pwrite(q.TAIL, cur)
+        # reconstruct free lists: every area node not on the chain is free
+        chain = set()
+        c = head
+        while c != NULL:
+            chain.add(c)
+            c = nvram.pread(c + NEXT) or NULL
+        for base, nnodes in mem.area_addrs():
+            for i in range(nnodes):
+                a = base + i * LINE_WORDS
+                if a not in chain:
+                    mem.free_now(0, a)
+        nvram.reset_after_recovery()
+        return q

@@ -1,0 +1,200 @@
+"""Test/benchmark harness: workloads, crash injection, durable-linearizability
+checking for the queue family.
+
+The checker implements the paper's correctness criterion (§3.2, §7): a
+post-crash recovered state is durably linearizable iff the history with the
+crash removed is linearizable.  For a FIFO queue with uniquely-tagged items
+and a serialized (scheduler-ordered) event log this reduces to:
+
+* let L  = items in volatile-linearization (link CAS) order,
+* let Ec = items whose enqueue *completed* (returned before the crash),
+* let Dc = items returned by *completed* successful dequeues,
+* the recovered queue R is valid iff there is a way to drop a subset of
+  *pending* enqueues' items from L (completed ones may not be dropped) such
+  that R equals the remaining sequence minus a removed *prefix*, where the
+  removed prefix contains every item of Dc and removes a completed-enqueue
+  item only if it is in Dc or its removal is attributable to a pending
+  dequeue (at most |pending dequeues| such extra removals).
+"""
+from __future__ import annotations
+
+import itertools
+import random
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple, Type
+
+from .nvram import NVRAM, Stats
+from .scheduler import Scheduler
+from .ssmem import SSMem
+from .queue_base import QueueAlgorithm
+from .msq import MSQueue
+from .durable_msq import DurableMSQueue
+from .izraelevitz import IzraelevitzQueue, NVTraverseQueue
+from .unlinked import UnlinkedQueue
+from .linked import LinkedQueue
+from .opt_unlinked import OptUnlinkedQueue
+from .opt_linked import OptLinkedQueue
+
+ALL_QUEUES: Dict[str, Type[QueueAlgorithm]] = {
+    q.NAME: q for q in (MSQueue, DurableMSQueue, IzraelevitzQueue,
+                        NVTraverseQueue, UnlinkedQueue, LinkedQueue,
+                        OptUnlinkedQueue, OptLinkedQueue)
+}
+DURABLE_QUEUES = {k: v for k, v in ALL_QUEUES.items() if k != "MSQ"}
+
+
+@dataclass
+class OpRecord:
+    tid: int
+    kind: str            # 'enq' | 'deq'
+    item: Any = None     # for enq: item; for deq: returned item (or None)
+    completed: bool = False
+
+
+@dataclass
+class RunResult:
+    crashed: bool
+    ops: List[OpRecord]
+    events: List[tuple]          # serialized volatile-linearization events
+    stats: Stats
+    ops_completed: int
+    sim_time_ns: float
+
+    def throughput_mops(self) -> float:
+        if self.sim_time_ns <= 0:
+            return 0.0
+        return self.ops_completed / (self.sim_time_ns / 1e9) / 1e6
+
+
+class QueueHarness:
+    """Owns an NVRAM + SSMem + queue instance and runs workloads over it."""
+
+    def __init__(self, queue_cls: Type[QueueAlgorithm], nthreads: int,
+                 area_nodes: int = 4096):
+        self.queue_cls = queue_cls
+        self.nthreads = nthreads
+        self.nvram = NVRAM(nthreads)
+        self.mem = SSMem(self.nvram, nthreads, area_nodes=area_nodes)
+        self.events: List[tuple] = []
+        self.queue = queue_cls(self.nvram, self.mem, nthreads,
+                               on_event=self.events.append)
+        self.ops: List[OpRecord] = []
+
+    # ------------------------------------------------------------- workloads
+    def make_worker(self, tid: int, plan: List[Tuple[str, Any]]):
+        """plan: list of ('enq', item) / ('deq', None) steps."""
+        def run(_tid: int):
+            for kind, item in plan:
+                rec = OpRecord(tid=tid, kind=kind, item=item)
+                self.ops.append(rec)
+                if kind == "enq":
+                    self.queue.enqueue(tid, item)
+                else:
+                    rec.item = self.queue.dequeue(tid)
+                rec.completed = True
+        return run
+
+    def run_scheduled(self, plans: List[List[Tuple[str, Any]]], seed: int = 0,
+                      crash_at: Optional[int] = None,
+                      policy: str = "random") -> RunResult:
+        sched = Scheduler(self.nvram, seed=seed, policy=policy,
+                          crash_at=crash_at)
+        workers = [self.make_worker(t, plans[t]) for t in range(len(plans))]
+        crashed = sched.run(workers)
+        done = sum(1 for r in self.ops if r.completed)
+        return RunResult(crashed=crashed, ops=self.ops, events=self.events,
+                         stats=self.nvram.total_stats(), ops_completed=done,
+                         sim_time_ns=self.nvram.sim_time_ns())
+
+    def run_single(self, plan: List[Tuple[str, Any]]) -> RunResult:
+        """No scheduler: sequential single-thread execution (tid 0)."""
+        self.nvram.set_tid(0)
+        w = self.make_worker(0, plan)
+        w(0)
+        done = sum(1 for r in self.ops if r.completed)
+        return RunResult(crashed=False, ops=self.ops, events=self.events,
+                         stats=self.nvram.total_stats(), ops_completed=done,
+                         sim_time_ns=self.nvram.sim_time_ns())
+
+    # --------------------------------------------------------------- recovery
+    def crash_and_recover(self, mode: str = "random", seed: int = 0):
+        self.nvram.crash(mode=mode, seed=seed)
+        self.events.append(("crash",))
+        # allocator state is volatile: recovery rebuilds the free lists from
+        # the (persistent) designated areas (paper §9)
+        self.mem = SSMem(self.nvram, self.nthreads,
+                         area_nodes=self.mem.area_nodes)
+        roots = getattr(self.queue, "roots", None)
+        self.queue = self.queue_cls.recover(self.nvram, self.mem,
+                                            self.nthreads, roots,
+                                            on_event=self.events.append)
+        return self.queue
+
+
+# ---------------------------------------------------------------------------
+# durable linearizability checking
+# ---------------------------------------------------------------------------
+def check_durable_linearizability(ops: List[OpRecord], events: List[tuple],
+                                  recovered: List[Any]) -> Tuple[bool, str]:
+    """Validate the recovered queue contents against the pre-crash history.
+
+    See module docstring for the rule.  Events/ops cover the pre-crash
+    execution only (pass the slices up to the ("crash",) marker).
+    """
+    link_order = [ev[1] for ev in events if ev[0] == "enq"]
+    deq_order = [ev[1] for ev in events if ev[0] == "deq"]
+    enq_completed = {r.item for r in ops if r.kind == "enq" and r.completed}
+    deq_completed = {r.item for r in ops
+                     if r.kind == "deq" and r.completed and r.item is not None}
+    pending_deqs = sum(1 for r in ops if r.kind == "deq" and not r.completed)
+
+    # sanity: recovered items must come from linked enqueues, no duplicates
+    linkset = set(link_order)
+    if len(set(recovered)) != len(recovered):
+        return False, "duplicate items in recovered queue"
+    for it in recovered:
+        if it not in linkset:
+            return False, f"recovered item {it!r} was never linked"
+        if it in deq_completed:
+            return False, f"recovered item {it!r} was dequeued (completed)"
+
+    # every completed enqueue must survive unless dequeued
+    must_have = [it for it in link_order
+                 if it in enq_completed and it not in deq_completed]
+    rset = set(recovered)
+    # Walk link_order: the removed part must be a prefix (FIFO, Observation 2)
+    # of the *kept* sequence; pending enqueues may be dropped anywhere.
+    kept = [it for it in link_order if it in rset]
+    if kept != recovered:
+        return False, (f"recovered order {recovered!r} != link order "
+                       f"{kept!r}")
+    # removed completed-enqueue items must be explained: either completed
+    # dequeues or at most `pending_deqs` pending ones, and removals must form
+    # a prefix of the surviving sequence.
+    removed_completed = [it for it in must_have if it not in rset]
+    extra = [it for it in removed_completed if it not in deq_completed]
+    if len(extra) > pending_deqs:
+        return False, (f"items {extra!r} vanished without a dequeue")
+    # prefix check: in link_order restricted to surviving items (recovered +
+    # removed-by-dequeue), all removed items must precede all recovered ones.
+    surviving = [it for it in link_order
+                 if it in rset or it in deq_completed or it in extra]
+    seen_kept = False
+    for it in surviving:
+        if it in rset:
+            seen_kept = True
+        elif seen_kept:
+            return False, f"non-prefix removal: {it!r} removed after kept item"
+    # completed dequeues must have dequeued in FIFO order of linked items
+    # (checked against link order restricted to dequeued items)
+    deq_link_order = [it for it in link_order if it in set(deq_order)]
+    if deq_link_order != deq_order:
+        return False, "dequeue order violates FIFO"
+    return True, "ok"
+
+
+def split_at_crash(events: List[tuple]) -> Tuple[List[tuple], List[tuple]]:
+    if ("crash",) in events:
+        i = events.index(("crash",))
+        return events[:i], events[i + 1:]
+    return list(events), []   # copy: callers may keep appending to `events`

@@ -1,0 +1,128 @@
+"""IzraelevitzQ / NVTraverseQ -- general-transform baselines (paper §10).
+
+Izraelevitz et al. (DISC'16): any linearizable lock-free object becomes
+durably linearizable by persisting (flush + fence) after **every** access to
+shared memory -- writes, CASes *and reads*.  Applied to MSQ this yields a
+correct but fence-heavy queue; it is the paper's "many fences" baseline.
+
+NVTraverseQ (Friedman et al., PLDI'20) is the same here except that flushes
+issued after *reads and CASes* are not followed by their own fence (the next
+update's fence covers them), since MSQ has an empty traversal phase.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from .nvram import LINE_WORDS, NVRAM
+from .queue_base import NULL, QueueAlgorithm, alloc_root_lines
+from .ssmem import SSMem
+
+ITEM, NEXT = 0, 1
+
+
+class IzraelevitzQueue(QueueAlgorithm):
+    NAME = "IzraelevitzQ"
+    FENCE_AFTER_READ = True
+
+    def __init__(self, nvram: NVRAM, mem: SSMem, nthreads: int, on_event=None,
+                 _recovering: bool = False, roots=None):
+        super().__init__(nvram, mem, nthreads, on_event)
+        nv = self.nvram
+        if roots is None:
+            roots = alloc_root_lines(nv, 2, "izrq:roots")
+        self.HEAD, self.TAIL = roots
+        self.roots = roots
+        if not _recovering:
+            dummy = self.mem.alloc(0)
+            nv.write_full_line(dummy, [None, NULL, 0, 0, 0, 0, 0, 0])
+            nv.write(self.HEAD, dummy)
+            nv.write(self.TAIL, dummy)
+            nv.flush(dummy)
+            nv.flush(self.HEAD)
+            nv.flush(self.TAIL)
+            nv.fence()
+
+    # -- transformed accessors ---------------------------------------------
+    def _pread(self, addr: int) -> Any:
+        v = self.nvram.read(addr)
+        self.nvram.flush(addr)
+        if self.FENCE_AFTER_READ:
+            self.nvram.fence()
+        return v
+
+    def _pwrite(self, addr: int, v: Any) -> None:
+        self.nvram.write(addr, v)
+        self.nvram.flush(addr)
+        self.nvram.fence()
+
+    def _pcas(self, addr: int, exp: Any, new: Any, ev=None) -> bool:
+        ok = self.nvram.cas(addr, exp, new)
+        if ok and ev is not None:
+            self._ev(*ev)    # event exactly at the linearizing CAS
+        self.nvram.flush(addr)
+        if self.FENCE_AFTER_READ or ok:
+            self.nvram.fence()
+        return ok
+
+    # ------------------------------------------------------------------ ops
+    def enqueue(self, tid: int, item: Any) -> None:
+        nv = self.nvram
+        self.mem.op_begin(tid)
+        node = self.mem.alloc(tid)
+        nv.write_full_line(node, [item, NULL, 0, 0, 0, 0, 0, 0])
+        nv.flush(node)
+        nv.fence()
+        while True:
+            tail = self._pread(self.TAIL)
+            nxt = self._pread(tail + NEXT)
+            if nxt == NULL:
+                if self._pcas(tail + NEXT, NULL, node, ev=("enq", item)):
+                    self._pcas(self.TAIL, tail, node)
+                    return
+            else:
+                self._pcas(self.TAIL, tail, nxt)
+
+    def dequeue(self, tid: int) -> Any:
+        self.mem.op_begin(tid)
+        while True:
+            head = self._pread(self.HEAD)
+            nxt = self._pread(head + NEXT)
+            if nxt == NULL:
+                self._ev("empty")
+                return None
+            # MSQ guard: head must not overtake tail (reclamation safety)
+            tail = self._pread(self.TAIL)
+            if head == tail:
+                self._pcas(self.TAIL, tail, nxt)
+                continue
+            item = self._pread(nxt + ITEM)
+            if self._pcas(self.HEAD, head, nxt, ev=("deq", item)):
+                self.mem.retire(tid, head)
+                return item
+
+    @classmethod
+    def recover(cls, nvram: NVRAM, mem: SSMem, nthreads: int, roots,
+                on_event=None):
+        q = cls(nvram, mem, nthreads, on_event, _recovering=True, roots=roots)
+        head = nvram.pread(q.HEAD) or NULL
+        cur = head
+        chain = {head}
+        while True:
+            nxt = nvram.pread(cur + NEXT) or NULL
+            if nxt == NULL:
+                break
+            cur = nxt
+            chain.add(cur)
+        nvram.pwrite(q.TAIL, cur)
+        for base, nnodes in mem.area_addrs():
+            for i in range(nnodes):
+                a = base + i * LINE_WORDS
+                if a not in chain:
+                    mem.free_now(0, a)
+        nvram.reset_after_recovery()
+        return q
+
+
+class NVTraverseQueue(IzraelevitzQueue):
+    NAME = "NVTraverseQ"
+    FENCE_AFTER_READ = False

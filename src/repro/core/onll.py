@@ -1,0 +1,130 @@
+"""ONLL with cache-line-aligned logs -- the paper's §2.1 upper bound.
+
+Cohen et al.'s universal construction achieves the fence lower bound (one
+per update); the paper's observation is that aligning each per-thread log
+entry to its own cache line *also* achieves **zero post-flush accesses**,
+proving the two optima compose for any object with a deterministic
+sequential specification.
+
+Components (faithful to §2.1):
+* a shared **volatile execution trace** with a persistent-prefix marker
+  (never flushed, not used by recovery);
+* **per-thread persistent logs**; an update appends the trace suffix that is
+  not yet marked persistent to its own log -- one record per cache line,
+  full-line writes, flushed and fenced ONCE -- then advances the marker.
+  Log lines are written once and never read again (recovery reads the
+  persistent image directly), hence zero post-flush accesses.
+* recovery: collect all log records from all threads, order by trace
+  sequence number, deduplicate, replay into the object's sequential spec.
+
+The object is pluggable: ``apply(state, op) -> (state', response)``.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List, Tuple
+
+from .nvram import LINE_WORDS, NVRAM
+from .queue_base import NULL
+
+LOG_LINES = 8192   # per-thread log capacity (records)
+
+
+class ONLL:
+    NAME = "ONLL"
+
+    def __init__(self, nvram: NVRAM, nthreads: int,
+                 apply_fn: Callable[[Any, Any], Tuple[Any, Any]],
+                 init_state: Any, _recovering: bool = False, roots=None):
+        self.nvram = nvram
+        self.nthreads = nthreads
+        self.apply_fn = apply_fn
+        self.init_state = init_state
+        nv = nvram
+        if roots is None:
+            roots = [nv.alloc_region(LOG_LINES * LINE_WORDS, f"onll:log:t{t}")
+                     for t in range(nthreads)]
+        self.logs = roots
+        self.roots = roots
+        self._log_pos = [0] * nthreads          # volatile cursors
+        # volatile execution trace: list of (seq, op); marker = persisted len
+        self.TRACE_LEN = nv.alloc_region(1, "onll:tracelen", persistent=False)
+        self.MARKER = nv.alloc_region(1, "onll:marker", persistent=False)
+        self._trace: List[Tuple[int, Any]] = []
+        if not _recovering:
+            nv.write(self.TRACE_LEN, 0)
+            nv.write(self.MARKER, 0)
+
+    # ------------------------------------------------------------------- ops
+    def update(self, tid: int, op: Any) -> Any:
+        nv = self.nvram
+        # 1. append to the shared volatile trace (CAS-reserve a slot)
+        while True:
+            n = nv.read(self.TRACE_LEN)
+            if nv.cas(self.TRACE_LEN, n, n + 1):
+                seq = n
+                self._trace.append((seq, op))   # python list: volatile body
+                break
+        # 2. copy the not-yet-persistent suffix into my log, one record per
+        #    cache line (the paper's alignment amendment), flush each line
+        marker = nv.read(self.MARKER)
+        suffix = [e for e in self._trace if e[0] >= marker and e[0] <= seq]
+        for (s, o) in suffix:
+            line_addr = self.logs[tid] + self._log_pos[tid] * LINE_WORDS
+            assert self._log_pos[tid] < LOG_LINES, "log full"
+            nv.write_full_line(line_addr, [1, s, o, 0, 0, 0, 0, 0])
+            nv.flush(line_addr)
+            self._log_pos[tid] += 1
+        nv.fence()                               # the ONE fence
+        # 3. advance the persistent-prefix marker (volatile, monotone)
+        while True:
+            m = nv.read(self.MARKER)
+            if m >= seq + 1 or nv.cas(self.MARKER, m, seq + 1):
+                break
+        # response from replaying the trace prefix (volatile computation)
+        state = self.init_state
+        resp = None
+        for (s, o) in sorted(self._trace):
+            state, r = self.apply_fn(state, o)
+            if s == seq:
+                resp = r
+        return resp
+
+    def read_state(self) -> Any:
+        """Read-only operation: zero fences (the lower bound's read side)."""
+        nv = self.nvram
+        marker = nv.read(self.MARKER)
+        state = self.init_state
+        for (s, o) in sorted(self._trace):
+            if s < marker:
+                state, _ = self.apply_fn(state, o)
+        return state
+
+    # -------------------------------------------------------------- recovery
+    @classmethod
+    def recover(cls, nvram: NVRAM, nthreads: int, apply_fn, init_state,
+                roots) -> Tuple["ONLL", Any]:
+        obj = cls(nvram, nthreads, apply_fn, init_state,
+                  _recovering=True, roots=roots)
+        records = {}
+        for t in range(nthreads):
+            pos = 0
+            for i in range(LOG_LINES):
+                a = roots[t] + i * LINE_WORDS
+                if not nvram.pread(a):          # valid-flag word
+                    break
+                seq, op = nvram.pread(a + 1), nvram.pread(a + 2)
+                records[seq] = op
+                pos = i + 1
+            obj._log_pos[t] = pos                # append after old records
+        state = init_state
+        replayed = []
+        for seq in sorted(records):
+            if seq != len(replayed):
+                break                            # stop at the first gap
+            state, _ = obj.apply_fn(state, records[seq])
+            replayed.append((seq, records[seq]))
+        obj._trace = replayed
+        nvram.write(obj.TRACE_LEN, len(replayed))
+        nvram.write(obj.MARKER, len(replayed))
+        nvram.reset_after_recovery()
+        return obj, state

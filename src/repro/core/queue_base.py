@@ -1,0 +1,63 @@
+"""Shared scaffolding for the durable queue implementations.
+
+All queues expose the same interface::
+
+    q = SomeQueue(nvram, mem, nthreads, on_event=cb)   # fresh, persisted init
+    q.enqueue(tid, item)
+    item = q.dequeue(tid)          # None == failing dequeue (empty)
+    q2 = SomeQueue.recover(nvram, mem, nthreads, roots, on_event=cb)
+
+``on_event`` receives volatile-linearization events -- ``("enq", item)`` at
+the successful link CAS and ``("deq", item)`` at the successful head CAS --
+which the harness uses for durable-linearizability checking (the scheduler
+serializes primitives, so event order == linearization order).
+
+NULL pointers are address 0 (reserved in the simulator).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+from .nvram import LINE_WORDS, NVRAM
+from .ssmem import SSMem, VolatileAlloc
+
+NULL = 0
+Event = Callable[[tuple], None]
+
+
+class QueueAlgorithm:
+    """Base class; concrete queues define NAME and the three operations."""
+
+    NAME = "abstract"
+
+    def __init__(self, nvram: NVRAM, mem: SSMem, nthreads: int,
+                 on_event: Optional[Event] = None):
+        self.nvram = nvram
+        self.mem = mem
+        self.nthreads = nthreads
+        self.on_event = on_event or (lambda ev: None)
+
+    # -- helpers ------------------------------------------------------------
+    def _ev(self, *ev: Any) -> None:
+        self.on_event(tuple(ev))
+
+    def enqueue(self, tid: int, item: Any) -> None:
+        raise NotImplementedError
+
+    def dequeue(self, tid: int) -> Any:
+        raise NotImplementedError
+
+    def drain(self, tid: int = 0) -> list:
+        """Dequeue until empty (testing helper)."""
+        out = []
+        while True:
+            it = self.dequeue(tid)
+            if it is None:
+                return out
+            out.append(it)
+
+
+def alloc_root_lines(nvram: NVRAM, n: int, name: str, persistent: bool = True) -> list:
+    """n root words, each on its own cache line (no false sharing)."""
+    base = nvram.alloc_region(n * LINE_WORDS, name=name, persistent=persistent)
+    return [base + i * LINE_WORDS for i in range(n)]

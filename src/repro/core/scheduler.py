@@ -1,0 +1,115 @@
+"""Deterministic cooperative scheduler for concurrency + crash testing.
+
+Queue algorithms call into :class:`repro.core.nvram.NVRAM` primitives; each
+primitive is a *yield point* (``NVRAM.step_hook``).  The scheduler serializes
+primitives: real OS threads run the algorithm code, but exactly one thread is
+granted one primitive at a time, in a seed-determined order.  This gives:
+
+* reproducible interleavings (seeded random / round-robin policies),
+* crash injection at an exact global step index (``crash_at``), after which
+  every thread observes :class:`ThreadCrashed` at its next primitive -- the
+  full-system-crash model of Izraelevitz et al. adopted by the paper (§2).
+
+This is the standard model-checking-style harness for persistency algorithms;
+it is how we validate durable linearizability without NVRAM hardware.
+"""
+from __future__ import annotations
+
+import random
+import threading
+from typing import Callable, List, Optional
+
+from .nvram import NVRAM, ThreadCrashed
+
+
+class Scheduler:
+    def __init__(self, nvram: NVRAM, seed: int = 0, policy: str = "random",
+                 crash_at: Optional[int] = None, max_steps: int = 2_000_000):
+        self.nvram = nvram
+        self.rng = random.Random(seed)
+        self.policy = policy
+        self.crash_at = crash_at
+        self.max_steps = max_steps
+        self.steps = 0
+        self.crashed = False
+        self._cv = threading.Condition()
+        self._waiting: set = set()
+        self._done: set = set()
+        self._grant: Optional[int] = None
+        self._started = 0
+        nvram.step_hook = self.step
+
+    # ------------------------------------------------------------ worker side
+    def step(self, tid: int, kind: str) -> None:
+        with self._cv:
+            if self.crashed:
+                raise ThreadCrashed()
+            self._waiting.add(tid)
+            self._cv.notify_all()
+            while self._grant != tid:
+                if self.crashed:
+                    self._waiting.discard(tid)
+                    self._cv.notify_all()
+                    raise ThreadCrashed()
+                self._cv.wait()
+            # granted: consume and run one primitive
+            self._grant = None
+            self._waiting.discard(tid)
+            self._cv.notify_all()
+
+    # ------------------------------------------------------- coordinator side
+    def run(self, workers: List[Callable[[int], None]]) -> bool:
+        """Run worker callables (one per thread).  Returns True if a crash
+        was injected."""
+        n = len(workers)
+        threads = []
+
+        def _wrap(tid: int, fn: Callable[[int], None]):
+            self.nvram.set_tid(tid)
+            try:
+                fn(tid)
+            except ThreadCrashed:
+                pass
+            finally:
+                with self._cv:
+                    self._done.add(tid)
+                    self._waiting.discard(tid)
+                    self._cv.notify_all()
+
+        for i, fn in enumerate(workers):
+            t = threading.Thread(target=_wrap, args=(i, fn), daemon=True)
+            threads.append(t)
+            t.start()
+
+        with self._cv:
+            while len(self._done) < n:
+                # wait until every live thread is parked at a yield point
+                self._cv.wait_for(
+                    lambda: len(self._waiting) + len(self._done) >= n
+                    or len(self._done) == n)
+                if len(self._done) == n:
+                    break
+                live = sorted(self._waiting)
+                if not live:
+                    continue
+                if (self.crash_at is not None and self.steps >= self.crash_at) \
+                        or self.steps >= self.max_steps:
+                    self.crashed = True
+                    self._cv.notify_all()
+                    self._cv.wait_for(lambda: len(self._done) == n)
+                    break
+                if self.policy == "rr":
+                    tid = live[self.steps % len(live)]
+                else:
+                    tid = self.rng.choice(live)
+                self._grant = tid
+                self.steps += 1
+                self._cv.notify_all()
+                # wait for the grant to be consumed
+                self._cv.wait_for(lambda: self._grant is None
+                                  or len(self._done) == n)
+
+        for t in threads:
+            t.join()
+        self.nvram.step_hook = None
+        return self.crashed

@@ -1,0 +1,142 @@
+"""UnlinkedQ -- first amendment, design #1 (paper §5.1, Figure 1).
+
+One blocking fence per operation (meets the Cohen et al. lower bound).  Node
+links are *not* persisted; recovery identifies queue nodes by scanning the
+designated allocation areas for nodes with a set ``linked`` flag and an
+``index`` larger than the persisted head index, then orders them by index.
+
+The head is a double-width ``(ptr, index)`` word updated with DWCAS; a
+dequeue persists the head's *index* (its whole line, of course) with one
+flush+fence.  The enqueue persists the fully-initialized node with one
+flush+fence after the link CAS succeeds; Assumption 1 (same-line store order
+is preserved) makes ``linked=True`` reach NVRAM only after item/index.
+
+This queue deliberately *does* access flushed content -- reading
+``tail->index`` (flushed by the previous enqueuer), the dequeued node's
+``item``/``index``, and the head line after its own flush -- which is exactly
+the cost the second amendment removes.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Tuple
+
+from .nvram import LINE_WORDS, NVRAM
+from .queue_base import NULL, QueueAlgorithm, alloc_root_lines
+from .ssmem import SSMem
+
+# persistent node layout (one cache line): Figure 1's class Node
+ITEM, NEXT, LINKED, INDEX = 0, 1, 2, 3
+
+
+class UnlinkedQueue(QueueAlgorithm):
+    NAME = "UnlinkedQ"
+
+    def __init__(self, nvram: NVRAM, mem: SSMem, nthreads: int, on_event=None,
+                 _recovering: bool = False, roots=None):
+        super().__init__(nvram, mem, nthreads, on_event)
+        nv = self.nvram
+        if roots is None:
+            roots = alloc_root_lines(nv, 2, "unlinkedq:roots")
+        self.HEAD, self.TAIL = roots       # HEAD holds a (ptr, index) tuple
+        self.roots = roots
+        self.node_to_retire = [NULL] * nthreads   # volatile, Figure 1
+        if not _recovering:
+            dummy = self.mem.alloc(0)
+            # dummy: linked=0 so recovery never resurrects it; index=0
+            nv.write_full_line(dummy, [None, NULL, 0, 0, 0, 0, 0, 0])
+            nv.write(self.HEAD, (dummy, 0))
+            nv.write(self.TAIL, dummy)
+            nv.flush(self.HEAD)
+            nv.fence()
+
+    # --------------------------------------------------------------- enqueue
+    def enqueue(self, tid: int, item: Any) -> None:
+        nv = self.nvram
+        self.mem.op_begin(tid)
+        node = self.mem.alloc(tid)                        # Line 21
+        # full-line init: item, next=NULL, linked=false (Lines 22-24)
+        nv.write_full_line(node, [item, NULL, 0, 0, 0, 0, 0, 0])
+        while True:
+            tail = nv.read(self.TAIL)                     # Line 26
+            if nv.read(tail + NEXT) == NULL:              # Line 27
+                # Line 28: reads the flushed tail node's line (post-flush!)
+                nv.write(node + INDEX, nv.read(tail + INDEX) + 1)
+                if nv.cas(tail + NEXT, NULL, node):       # Line 29
+                    self._ev("enq", item)
+                    nv.write(node + LINKED, 1)            # Line 30
+                    nv.flush(node)                        # Line 31
+                    nv.fence()                            # the ONE fence
+                    nv.cas(self.TAIL, tail, node)         # Line 32
+                    return
+            else:
+                nv.cas(self.TAIL, tail, nv.read(tail + NEXT))   # Line 34
+
+    # --------------------------------------------------------------- dequeue
+    def dequeue(self, tid: int) -> Any:
+        nv = self.nvram
+        self.mem.op_begin(tid)
+        while True:
+            head = nv.read(self.HEAD)                     # Line 8: (ptr, idx)
+            head_ptr, _head_idx = head
+            head_next = nv.read(head_ptr + NEXT)          # Line 9
+            if head_next == NULL:                         # Line 10
+                nv.flush(self.HEAD)                       # Line 11
+                nv.fence()
+                self._ev("empty")
+                return None                               # Line 12
+            # MSQ guard: head must not overtake tail (reclamation safety)
+            tail = nv.read(self.TAIL)
+            if head_ptr == tail:
+                nv.cas(self.TAIL, tail, head_next)
+                continue
+            # Line 13: DWCAS to (next, next->index) -- reads flushed node
+            nidx = nv.read(head_next + INDEX)
+            item = nv.read(head_next + ITEM)              # Line 14
+            if nv.cas(self.HEAD, head, (head_next, nidx)):
+                self._ev("deq", item)
+                nv.flush(self.HEAD)                       # Line 15
+                nv.fence()                                # the ONE fence
+                if self.node_to_retire[tid] != NULL:      # Lines 16-17
+                    self.mem.retire(tid, self.node_to_retire[tid])
+                self.node_to_retire[tid] = head_ptr       # Line 18
+                return item                               # Line 19
+
+    # -------------------------------------------------------------- recovery
+    @classmethod
+    def recover(cls, nvram: NVRAM, mem: SSMem, nthreads: int, roots,
+                on_event=None) -> "UnlinkedQueue":
+        q = cls(nvram, mem, nthreads, on_event, _recovering=True, roots=roots)
+        head_val = nvram.pread(q.HEAD)
+        head_idx = head_val[1] if isinstance(head_val, tuple) else 0
+        # scan designated areas for linked nodes with index > head_idx (§5.1.3)
+        live: List[Tuple[int, int]] = []
+        free: List[int] = []
+        for base, nnodes in mem.area_addrs():
+            for i in range(nnodes):
+                a = base + i * LINE_WORDS
+                linked = nvram.pread(a + LINKED)
+                idx = nvram.pread(a + INDEX) or 0
+                if linked and idx > head_idx:
+                    live.append((idx, a))
+                else:
+                    free.append(a)
+        live.sort()
+        # fresh dummy with the head's index
+        dummy = free.pop() if free else mem.alloc(0)
+        nvram.pwrite(dummy + ITEM, None)
+        nvram.pwrite(dummy + LINKED, 0)
+        nvram.pwrite(dummy + INDEX, head_idx)
+        nvram.pwrite(dummy + NEXT, NULL)
+        # stitch next pointers in index order (links are volatile-only data,
+        # but recovery writes them straight into the persistent image)
+        prev = dummy
+        for idx, a in live:
+            nvram.pwrite(prev + NEXT, a)
+            prev = a
+        nvram.pwrite(prev + NEXT, NULL)
+        nvram.pwrite(q.HEAD, (dummy, head_idx))
+        nvram.pwrite(q.TAIL, prev)
+        for a in free:
+            mem.free_now(0, a)
+        nvram.reset_after_recovery()
+        return q

@@ -1,0 +1,3 @@
+from .pipeline import DurableShardQueue, TokenSource
+
+__all__ = ["DurableShardQueue", "TokenSource"]

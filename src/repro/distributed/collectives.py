@@ -1,0 +1,71 @@
+"""Distributed-optimization helpers: gradient compression with error
+feedback, and microbatch compute/comm overlap accounting.
+
+``compress_grads``/``decompress_grads`` implement bf16 (or int8 blockwise)
+gradient compression with an error-feedback accumulator (Karimireddy et al.
+-- the residual of the quantization is added back into the next step's
+gradient), halving/quartering the all-reduce payload.  Pure functions:
+numerics are unit-tested on CPU; at scale the compressed tensors are what
+the pod-axis all-reduce moves.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+_BLOCK = 256
+
+
+def init_error_feedback(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads: PyTree, error: PyTree,
+                   method: str = "bf16") -> Tuple[PyTree, PyTree]:
+    """Returns (compressed, new_error).  compressed is what goes on the
+    wire; new_error is the quantization residual to re-inject next step."""
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        if method == "bf16":
+            c = g.astype(jnp.bfloat16)
+            back = c.astype(jnp.float32)
+        elif method == "int8":
+            flat = g.reshape(-1)
+            pad = (-flat.shape[0]) % _BLOCK
+            fp = jnp.pad(flat, (0, pad)).reshape(-1, _BLOCK)
+            scale = jnp.max(jnp.abs(fp), axis=1, keepdims=True) / 127.0
+            q = jnp.round(fp / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+            c = {"q": q, "s": scale, "shape": g.shape}
+            back = (q.astype(jnp.float32) * scale).reshape(-1)[
+                :flat.shape[0]].reshape(g.shape)
+        else:
+            raise ValueError(method)
+        return c, g - back
+    flat, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(error)
+    pairs = [one(g, e) for g, e in zip(flat, flat_e)]
+    return tdef.unflatten([p[0] for p in pairs]), \
+        tdef.unflatten([p[1] for p in pairs])
+
+
+def decompress_grads(compressed: PyTree) -> PyTree:
+    def one(c):
+        if isinstance(c, dict) and "q" in c:
+            flat = (c["q"].astype(jnp.float32) * c["s"]).reshape(-1)
+            n = 1
+            for s in c["shape"]:
+                n *= s
+            return flat[:n].reshape(c["shape"])
+        return c.astype(jnp.float32)
+    return jax.tree.map(one, compressed,
+                        is_leaf=lambda x: isinstance(x, dict) and "q" in x)
+
+
+def compressed_bytes(compressed: PyTree) -> int:
+    tot = 0
+    for leaf in jax.tree.leaves(compressed):
+        tot += leaf.size * leaf.dtype.itemsize
+    return tot

@@ -1,0 +1,262 @@
+"""Sharding rules: logical parameter/activation layouts -> NamedSharding.
+
+Mesh axes (launch/mesh.py):
+  single-pod:  ("data", "model")           = (16, 16)   -- 256 chips
+  multi-pod:   ("pod", "data", "model")    = (2, 16, 16) -- 512 chips
+
+Strategy (MaxText-style 2D sharding + ZeRO):
+  * batch: sharded over ("pod", "data");
+  * parameters: tensor-parallel over "model" on the contracting/expert axis,
+    FSDP over "data" on the other axis (GSPMD inserts the all-gathers);
+    pods hold replicas (gradient all-reduce over "pod" -- hierarchical DP);
+  * optimizer state (AdamW m/v): additionally sharded over "pod" (ZeRO-1
+    across pods) -- states are only touched at the update, so the extra
+    gather cost is off the critical path;
+  * activations (residual stream): batch-sharded + sequence-sharded over
+    "model" between layers (Megatron-style sequence parallelism) for long
+    sequences, controlled by ``seq_shard``.
+
+Rules are matched on parameter-tree paths; stacked (scanned) layers have a
+leading period axis which is never sharded.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# (regex on param path, spec WITHOUT the stacked leading axis)
+# fsdp == data axis; tp == model axis
+_PARAM_RULES = [
+    (r"embed$", ("tp", "fsdp")),
+    (r"lm_head$", ("fsdp", "tp")),
+    (r"final_norm$", (None,)),
+    (r"norm1$|norm2$|q_norm$|k_norm$", (None,)),
+    # attention
+    (r"mixer/w[qkv]$", ("fsdp", "tp")),
+    (r"mixer/wo$", ("tp", "fsdp")),
+    # mamba
+    (r"mixer/in_proj$", ("fsdp", "tp")),
+    (r"mixer/conv_w$", (None, "tp")),
+    (r"mixer/x_proj$", ("tp", None)),
+    (r"mixer/dt_proj$", (None, "tp")),
+    (r"mixer/dt_bias$", ("tp",)),
+    (r"mixer/A_log$", ("tp", None)),
+    (r"mixer/D$", ("tp",)),
+    (r"mixer/out_proj$", ("tp", "fsdp")),
+    # moe first: experts over the model axis (EP == TP axis) -- these MUST
+    # precede the dense-ffn rules, which also match "ffn/w1" etc.
+    (r"ffn/router$", ("fsdp", None)),
+    (r"ffn/(w1|w3)$__moe", ("tp", "fsdp", None)),
+    (r"ffn/w2$__moe", ("tp", None, "fsdp")),
+    # dense ffn
+    (r"ffn/w1$|ffn/w3$", ("fsdp", "tp")),
+    (r"ffn/w2$", ("tp", "fsdp")),
+    (r"ffn/sh_w1$|ffn/sh_w3$", ("fsdp", "tp")),
+    (r"ffn/sh_w2$", ("tp", "fsdp")),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if isinstance(p, jax.tree_util.DictKey):
+            parts.append(str(p.key))
+        elif isinstance(p, jax.tree_util.SequenceKey):
+            parts.append(str(p.idx))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _axis(mesh: Mesh, logical: Optional[str], params_over_pod: bool,
+          fsdp: bool = True):
+    if logical is None:
+        return None
+    if logical == "tp":
+        return "model"
+    if logical == "fsdp":
+        if not fsdp:
+            return None     # replicate over data: no per-layer weight
+                            # all-gathers (wins for models whose TP shard
+                            # already fits HBM -- see EXPERIMENTS.md §Perf)
+        if params_over_pod and "pod" in mesh.axis_names:
+            return ("pod", "data")
+        return "data"
+    raise ValueError(logical)
+
+
+def spec_for_param(mesh: Mesh, path, leaf, *, stacked_depth: int,
+                   is_moe: bool, params_over_pod: bool = False,
+                   fsdp: bool = True) -> P:
+    s = _path_str(path)
+    for pat, logical in _PARAM_RULES:
+        pat_re, suffix = (pat.split("$__")[0] + "$", "__moe") \
+            if pat.endswith("__moe") else (pat, "")
+        if suffix and not is_moe:
+            continue
+        if re.search(pat_re, s):
+            axes = tuple(_axis(mesh, a, params_over_pod, fsdp)
+                         for a in logical)
+            lead = (None,) * stacked_depth
+            full = lead + axes
+            if len(full) < leaf.ndim:
+                full = full + (None,) * (leaf.ndim - len(full))
+            return P(*full[:leaf.ndim])
+    return P()   # replicate by default (small tensors)
+
+
+def _is_moe_param(path_str: str) -> bool:
+    # moe expert weights have a leading E dim; identified by rank at caller
+    return False
+
+
+def param_shardings(mesh: Mesh, params: PyTree,
+                    params_over_pod: bool = False,
+                    fsdp: bool = True) -> PyTree:
+    """NamedSharding tree matching `params` (works on ShapeDtypeStructs)."""
+    def one(path, leaf):
+        s = _path_str(path)
+        in_stack = s.startswith("stack/")
+        # moe expert tensors: ffn/w{1,2,3} with an expert axis => rank 3 body
+        body_rank = leaf.ndim - (1 if in_stack else 0)
+        is_moe = bool(re.search(r"ffn/(w1|w2|w3)$", s)) and body_rank == 3
+        return NamedSharding(mesh, spec_for_param(
+            mesh, path, leaf, stacked_depth=1 if in_stack else 0,
+            is_moe=is_moe, params_over_pod=params_over_pod, fsdp=fsdp))
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def opt_state_shardings(mesh: Mesh, opt_state: PyTree, params: PyTree) -> PyTree:
+    """m/v inherit parameter shardings ZeRO-extended over the pod axis;
+    int8-quantized states (dicts of q/s) are sharded on the flat block dim."""
+    pshard = param_shardings(mesh, params, params_over_pod=True)
+
+    def map_mv(ps, leaf_tree):
+        if not isinstance(leaf_tree, dict):
+            return ps      # fp32 state mirrors the parameter layout
+        # int8-quantized {q: (nblk, BLOCK), s: (nblk, 1)}: shard the flat
+        # block dim across (pod, data) -- pure ZeRO layout; small tensors
+        # whose block count doesn't divide the axes stay replicated
+        ax = ("pod", "data") if "pod" in mesh.axis_names else "data"
+        return {k: NamedSharding(mesh, P(_fit(mesh, v.shape[0], ax, "data"),
+                                         None))
+                for k, v in leaf_tree.items()}
+
+    m = jax.tree.map(map_mv, pshard, opt_state["m"],
+                     is_leaf=lambda x: isinstance(x, NamedSharding))
+    v = jax.tree.map(map_mv, pshard, opt_state["v"],
+                     is_leaf=lambda x: isinstance(x, NamedSharding))
+    return {"step": NamedSharding(mesh, P()), "m": m, "v": v}
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fit(mesh: Mesh, dim: int, *candidates):
+    """First candidate axis (or axis tuple) that divides `dim`, else None."""
+    for c in candidates:
+        if c is None:
+            continue
+        if dim % _axes_size(mesh, c) == 0:
+            return c
+    return None
+
+
+def _batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def batch_shardings(mesh: Mesh, batch: PyTree) -> PyTree:
+    bx = _batch_axes(mesh)
+
+    def one(leaf):
+        ax = _fit(mesh, leaf.shape[0], bx, "data")
+        spec = (ax,) + (None,) * (leaf.ndim - 1)
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree.map(one, batch)
+
+
+def cache_shardings(mesh: Mesh, cache: PyTree) -> PyTree:
+    """KV/SSM caches, divisibility-aware.
+
+    k/v (L?, B, S, KV, hd): batch over (pod,data) when divisible, sequence
+    over 'model' (kv-head counts are usually < 16, so heads stay local and
+    attention contracts over the sharded S with a psum); when B=1
+    (long-context) the sequence absorbs every mesh axis.
+    h (L?, B, din, ds) / conv (L?, B, k, din): d_inner over 'model'."""
+    bx = _batch_axes(mesh)
+    all_ax = tuple(mesh.axis_names)
+
+    def one(path, leaf):
+        s = _path_str(path)
+        stacked = s.startswith("stack/")
+        lead = (None,) if stacked else ()
+        name = s.rsplit("/", 1)[-1]
+        nd = leaf.ndim - len(lead)
+        dims = leaf.shape[len(lead):]
+        if name in ("k", "v") and nd == 4:
+            b_ax = _fit(mesh, dims[0], bx, "data")
+            if b_ax is None:
+                s_ax = _fit(mesh, dims[1], all_ax, ("data", "model"), "model")
+            else:
+                s_ax = _fit(mesh, dims[1], "model")
+            spec = lead + (b_ax, s_ax, None, None)
+        elif name == "h" and nd == 3:
+            b_ax = _fit(mesh, dims[0], bx, "data")
+            d_ax = _fit(mesh, dims[1],
+                        ("data", "model") if b_ax is None else "model",
+                        "model")
+            spec = lead + (b_ax, d_ax, None)
+        elif name == "conv" and nd == 3:
+            b_ax = _fit(mesh, dims[0], bx, "data")
+            d_ax = _fit(mesh, dims[2],
+                        ("data", "model") if b_ax is None else "model",
+                        "model")
+            spec = lead + (b_ax, None, d_ax)
+        else:
+            b_ax = _fit(mesh, dims[0], bx, "data")
+            spec = lead + (b_ax,) + (None,) * (nd - 1)
+        return NamedSharding(mesh, P(*spec[:leaf.ndim]))
+    return jax.tree_util.tree_map_with_path(one, cache)
+
+
+def activation_constrainer(mesh: Mesh, seq_shard: bool = False):
+    """Activation constraints for the model code.
+
+    kind="residual": batch-shard (optionally sequence-shard) the stream.
+    kind="moe_xe":   dispatch buffer (E, C, d) pinned to (model, data, None)
+                     so the expert einsum gathers *weights* (FSDP-style, MBs)
+                     instead of replicating the token buffer (GBs)."""
+    bx = _batch_axes(mesh)
+
+    def cons(x, kind: str = "residual"):
+        if kind == "moe_xe" and x.ndim == 3:
+            e_ax = _fit(mesh, x.shape[0], "model")
+            c_ax = _fit(mesh, x.shape[1], bx, "data")
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(e_ax, c_ax, None)))
+        if kind == "moe_ye" and x.ndim == 4:
+            c_ax = _fit(mesh, x.shape[0], bx, "data")
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(c_ax, None, None, None)))
+        if kind == "residual" and x.ndim == 3:
+            b_ax = _fit(mesh, x.shape[0], bx, "data")
+            s_ax = _fit(mesh, x.shape[1], "model") if seq_shard else None
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(b_ax, s_ax, None)))
+        return x
+    return cons

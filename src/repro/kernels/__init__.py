@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compute hot spots.
+
+Each kernel ships as <name>/kernel.py (pl.pallas_call + explicit BlockSpec
+VMEM tiling), <name>/ops.py (jit'd wrapper with XLA fallback) and
+<name>/ref.py (pure-jnp oracle).  Kernels target TPU (MXU-aligned tiles);
+on this CPU container they are validated with interpret=True.
+"""

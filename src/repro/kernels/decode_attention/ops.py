@@ -1,0 +1,15 @@
+"""jit'd public wrapper for flash-decode."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import decode_attention_kernel
+from .ref import decode_attention_ref
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     lengths: jax.Array) -> jax.Array:
+    platform = jax.devices()[0].platform
+    if platform == "tpu":
+        return decode_attention_kernel(q, k, v, lengths)
+    return decode_attention_kernel(q, k, v, lengths, interpret=True)

@@ -1,0 +1,17 @@
+"""jit'd public wrapper: Pallas on TPU, chunked-XLA fallback elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from .kernel import flash_attention_kernel
+from .ref import flash_attention_ref
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True) -> jax.Array:
+    """Dispatch: Pallas kernel on TPU backends; interpretable elsewhere for
+    correctness (the model's XLA fallback lives in models/attention.py)."""
+    platform = jax.devices()[0].platform
+    if platform == "tpu":
+        return flash_attention_kernel(q, k, v, causal=causal)
+    return flash_attention_kernel(q, k, v, causal=causal, interpret=True)

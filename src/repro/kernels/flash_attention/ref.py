@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for causal GQA flash attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True) -> jax.Array:
+    """q: (B, S, H, hd); k, v: (B, S, KV, hd); H % KV == 0.
+    Returns (B, S, H, hd), accumulation in fp32."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, S, KV, G, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, kf) / jnp.sqrt(hd)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        scores = jnp.where(mask, scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, vf)
+    return out.reshape(B, S, H, hd).astype(q.dtype)

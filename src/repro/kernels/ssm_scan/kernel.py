@@ -1,0 +1,91 @@
+"""Mamba selective scan as a Pallas TPU kernel.
+
+Adaptation notes (GPU selective-scan -> TPU, per DESIGN.md §3):
+* the CUDA kernel parallelizes over (batch, channel) threads with a
+  sequential time loop in registers; the TPU version tiles **channels onto
+  the 128-lane VPU** -- each grid cell owns a (BLOCK_D channels x ds states)
+  state matrix resident in VMEM and walks the sequence in TIME CHUNKS,
+  so the (S, BLOCK_D) input tile streams HBM->VMEM once;
+* the grid is (batch, d_inner/BLOCK_D, S/chunk); Pallas TPU executes the
+  last grid dim sequentially on a core, so the running state h lives in a
+  VMEM scratch carried across chunk cells (the TPU analogue of the GPU
+  kernel's register-resident recurrence);
+* within a chunk the recurrence is a fori_loop of fused multiply-adds on
+  (BLOCK_D, ds) tiles -- elementwise VPU work, no MXU needed.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(dt_ref, b_ref, c_ref, x_ref, a_ref, y_ref, hout_ref, h_scr, *,
+                chunk: int, n_chunks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    A = a_ref[...].astype(jnp.float32)               # (block_d, ds)
+    h = h_scr[...]
+
+    def step(t, h):
+        dti = dt_ref[t, :].astype(jnp.float32)       # (block_d,)
+        xi = x_ref[t, :].astype(jnp.float32)         # (block_d,)
+        Bi = b_ref[t, :].astype(jnp.float32)         # (ds,)
+        Ci = c_ref[t, :].astype(jnp.float32)         # (ds,)
+        a = jnp.exp(dti[:, None] * A)                # (block_d, ds)
+        h = a * h + (dti * xi)[:, None] * Bi[None, :]
+        y = h @ Ci                                   # (block_d,)
+        y_ref[t, :] = y.astype(y_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h)
+    h_scr[...] = h
+
+    @pl.when(ci == n_chunks - 1)
+    def _fin():
+        hout_ref[...] = h
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "chunk", "interpret"))
+def ssm_scan_kernel(dt: jax.Array, Bt: jax.Array, Ct: jax.Array,
+                    x: jax.Array, A: jax.Array, block_d: int = 512,
+                    chunk: int = 128,
+                    interpret: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """dt, x: (B,S,din); Bt,Ct: (B,S,ds); A: (din,ds) ->
+    (y (B,S,din) fp32, h_final (B,din,ds) fp32)."""
+    B, S, din = x.shape
+    ds = Bt.shape[-1]
+    block_d = min(block_d, din)
+    chunk = min(chunk, S)
+    assert din % block_d == 0 and S % chunk == 0
+    grid = (B, din // block_d, S // chunk)
+    y, h = pl.pallas_call(
+        functools.partial(_ssm_kernel, chunk=chunk, n_chunks=S // chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((None, chunk, ds), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, ds), lambda b, d, c: (b, c, 0)),
+            pl.BlockSpec((None, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((block_d, ds), lambda b, d, c: (d, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, chunk, block_d), lambda b, d, c: (b, c, d)),
+            pl.BlockSpec((None, block_d, ds), lambda b, d, c: (b, d, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, din), jnp.float32),
+            jax.ShapeDtypeStruct((B, din, ds), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, ds), jnp.float32)],
+        interpret=interpret,
+    )(dt, Bt, Ct, x, A)
+    return y, h

@@ -1,0 +1,17 @@
+"""jit'd public wrapper for the selective scan."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+
+from .kernel import ssm_scan_kernel
+from .ref import ssm_scan_ref
+
+
+def ssm_scan(dt: jax.Array, Bt: jax.Array, Ct: jax.Array, x: jax.Array,
+             A: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    platform = jax.devices()[0].platform
+    if platform == "tpu":
+        return ssm_scan_kernel(dt, Bt, Ct, x, A)
+    return ssm_scan_kernel(dt, Bt, Ct, x, A, interpret=True)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the Mamba selective scan (sequential over time)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def ssm_scan_ref(dt: jax.Array, Bt: jax.Array, Ct: jax.Array, x: jax.Array,
+                 A: jax.Array, h0=None) -> Tuple[jax.Array, jax.Array]:
+    """dt, x: (B, S, din); Bt, Ct: (B, S, ds); A: (din, ds).
+    h_t = exp(dt_t A) h_{t-1} + (dt_t x_t) B_t ;  y_t = C_t . h_t
+    Returns (y (B, S, din), h_final (B, din, ds)); fp32 math."""
+    Bsz, S, din = x.shape
+    ds = Bt.shape[-1]
+    dt = dt.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    Btf = Bt.astype(jnp.float32)
+    Ctf = Ct.astype(jnp.float32)
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, din, ds), jnp.float32)
+
+    def step(h, args):
+        dti, xi, Bi, Ci = args
+        a = jnp.exp(dti[..., None] * A)                   # (B, din, ds)
+        h = a * h + (dti * xi)[..., None] * Bi[:, None, :]
+        y = jnp.einsum("bds,bs->bd", h, Ci)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h0,
+                         (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(x, 1, 0),
+                          jnp.moveaxis(Btf, 1, 0), jnp.moveaxis(Ctf, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), h

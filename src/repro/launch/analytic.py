@@ -1,0 +1,120 @@
+"""Analytic per-device cost model for the roofline's memory term.
+
+Why analytic: the CPU-backend compiled HLO contains copy-insertion
+artifacts and materialized fp32 intermediates that a TPU compilation keeps
+in VMEM/registers, so byte counts walked from that HLO over-estimate TPU
+HBM traffic by >10x (measured; see EXPERIMENTS.md §Dry-run).  FLOPs and
+collective payloads parse exactly, so §Roofline uses:
+
+    compute term    <- HLO walker  (exact, trip-count aware)
+    memory term     <- THIS model  (documented per-component formulas)
+    collective term <- HLO walker  (exact payload bytes x trip counts)
+
+All results are bytes PER DEVICE PER STEP.  Components are returned
+separately so EXPERIMENTS.md can show the breakdown.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.models.config import ModelConfig, ShapeConfig
+
+BF16 = 2
+F32 = 4
+
+
+def _layer_act_io(cfg: ModelConfig, spec, tokens_dev: float) -> float:
+    """HBM bytes moved by one layer's activations for one forward pass.
+    Counts reads+writes of matmul/norm boundary tensors at bf16; block
+    internals (attention probabilities, gate products) stay on chip."""
+    d = cfg.d_model
+    mixer, ffn = spec
+    io = 0.0
+    # pre-norm read+write, residual add read+write (x2 sublayers)
+    io += 4 * d * BF16 * (1 if ffn == "none" else 2)
+    if mixer == "attn":
+        H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+        io += (d + H * hd) * 2 * BF16          # q proj in/out
+        io += (d + 2 * KV * hd) * BF16         # kv proj out (input shared)
+        io += (H * hd + d) * 2 * BF16          # out proj in/out
+        io += 2 * (H + 2 * KV) * hd * BF16     # flash attn reads q,k,v + out
+    else:
+        din, ds, dtr = cfg.d_inner, cfg.ssm_state, cfg.dt_rank_
+        io += (d + 2 * din) * 2 * BF16         # in_proj
+        io += 4 * din * BF16                   # conv + silu r/w
+        io += (din + dtr + 2 * ds) * 2 * BF16  # x_proj
+        io += (din * 2) * F32 * 2              # scan in/out (fp32)
+        io += (din + d) * 2 * BF16             # out_proj
+    if ffn in ("dense", "dense_first"):
+        dff = cfg.dense_ff_first if ffn == "dense_first" else cfg.d_ff
+        gated = cfg.act in ("swiglu", "geglu")
+        io += (d + dff * (2 if gated else 1)) * 2 * BF16   # up (w1[,w3])
+        io += (dff + d) * 2 * BF16                         # down
+    elif ffn == "moe":
+        dff = cfg.d_ff
+        k = cfg.top_k
+        gated = cfg.act in ("swiglu", "geglu")
+        io += (d + cfg.n_experts) * 2 * F32                # router
+        io += 2 * k * d * BF16 * 2                         # dispatch+combine
+        io += k * (d + dff * (2 if gated else 1)) * 2 * BF16
+        io += k * (dff + d) * 2 * BF16
+        sh = cfg.n_shared_experts
+        if sh:
+            io += sh * ((d + dff * (2 if gated else 1)) + (dff + d)) * 2 * BF16
+    return io * tokens_dev
+
+
+def analytic_bytes(cfg: ModelConfig, shape: ShapeConfig, n_chips: int,
+                   tp: int = 16, accum: int = 1) -> Dict[str, float]:
+    """Per-device HBM bytes for one step of this (arch x shape) cell."""
+    prefix, periods, pattern = cfg.layer_pattern()
+    N = cfg.n_params()
+    layers = list(prefix) + list(pattern) * periods
+    dp = n_chips // tp
+    out: Dict[str, float] = {}
+
+    if shape.kind == "train":
+        tokens_dev = shape.seq_len * shape.global_batch / dp
+        passes = 3.0           # fwd + remat-recompute + bwd activation IO
+        out["weights"] = 3.0 * N * BF16 / tp      # read fwd/remat/bwd (gathered per TP shard)
+        out["grads"] = 2.0 * N * BF16 / tp        # write + reduce read
+        state_b = 1 if cfg.n_params() > 2e11 else F32    # int8 vs fp32 m,v
+        out["optimizer"] = N * (2 * 2 * state_b + 2 * BF16 + F32) / n_chips
+        out["activations"] = passes * sum(
+            _layer_act_io(cfg, s, tokens_dev) for s in layers)
+        out["logits"] = tokens_dev * cfg.vocab / tp * F32 * 3
+        out["embed"] = tokens_dev * cfg.d_model * BF16 * 3
+    elif shape.kind == "prefill":
+        tokens_dev = shape.seq_len * shape.global_batch / dp
+        out["weights"] = N * BF16 / tp
+        out["activations"] = sum(_layer_act_io(cfg, s, tokens_dev)
+                                 for s in layers)
+        out["logits"] = tokens_dev * cfg.vocab / tp * BF16
+        out["embed"] = tokens_dev * cfg.d_model * BF16
+    else:   # decode: one token per sequence against a seq_len cache
+        bdev = max(1.0, shape.global_batch / dp)
+        out["weights"] = N * BF16 / tp            # every weight read once
+        kv_layers = sum(1 for (m, _) in layers if m == "attn")
+        ssm_layers = len(layers) - kv_layers
+        cache_per_seq = (kv_layers * 2 * shape.seq_len * cfg.n_kv_heads
+                         * cfg.head_dim * BF16
+                         + ssm_layers * (cfg.d_inner * cfg.ssm_state * F32 * 2
+                                         if cfg.ssm_state else 0))
+        # the whole cache is read once per decoded token, sharded over chips
+        out["kv_cache"] = cache_per_seq * shape.global_batch / n_chips
+        out["activations"] = sum(_layer_act_io(cfg, s, bdev) for s in layers)
+        out["logits"] = bdev * cfg.vocab / tp * BF16
+    out["total"] = sum(out.values())
+    return out
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6*N_active*D for train; 2*N_active*D forward-only for
+    prefill; 2*N_active per token for decode (assignment convention)."""
+    D = shape.seq_len * shape.global_batch
+    Na = cfg.n_active_params()
+    if shape.kind == "train":
+        return 6.0 * Na * D
+    if shape.kind == "prefill":
+        return 2.0 * Na * D
+    return 2.0 * Na * shape.global_batch   # one new token per sequence

@@ -1,0 +1,263 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST set XLA_FLAGS before any jax import (jax locks the device count on
+first init) -- hence the first two lines.
+
+For each cell this driver:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. constructs abstract params/opt/cache (ShapeDtypeStruct, no allocation),
+  3. jit-lowers the step function with in/out shardings and compiles,
+  4. records memory_analysis() (proves it fits), cost_analysis() (FLOPs,
+     bytes) and the collective-transfer bytes parsed from the optimized HLO
+     (all-gather / all-reduce / reduce-scatter / all-to-all /
+     collective-permute operand sizes),
+  5. appends a JSON line to --out (benchmarks/roofline.py consumes it).
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+if not os.environ.get("REPRO_DRYRUN_FULL_OPT"):
+    # the dry-run needs lowering/partitioning/compilation to SUCCEED and the
+    # compiled artifact to be analyzable; LLVM optimization effort on the CPU
+    # stand-in backend is irrelevant to that and costs 2-3x compile time.
+    os.environ["XLA_FLAGS"] += (" --xla_llvm_disable_expensive_passes=true"
+                                " --xla_backend_optimization_level=0")
+
+# ruff: noqa: E402
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, applicable_shapes, get_config
+from repro.distributed.sharding import (activation_constrainer,
+                                        batch_shardings, cache_shardings,
+                                        opt_state_shardings, param_shardings)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.analytic import analytic_bytes, model_flops
+from repro.launch.hlo_analysis import analyze as hlo_analyze
+from repro.launch.steps import (abstract_cache, abstract_opt_state,
+                                abstract_params, accum_steps, input_specs,
+                                make_prefill_step, make_serve_step,
+                                make_train_step)
+from repro.models.config import SHAPES
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+# --------------------------------------------------------- HLO text parsing --
+_SHAPE_RE = re.compile(r"(f32|bf16|f16|s32|u32|s8|u8|pred|s64|u64|f64)"
+                       r"\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "bf16": 2, "f16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def _first_shape_bytes(line: str) -> int:
+    """Bytes of the op's result shape(s) -- for collectives the result size
+    equals the transferred payload (per participating device)."""
+    total = 0
+    # result may be a tuple: take every shape before ' = ' ... simpler: take
+    # all shapes on the LHS (before the op name) -- the '=' splits it.
+    lhs = line.split("=")[0] if "=" in line else line
+    for m in _SHAPE_RE.finditer(lhs):
+        dtype, dims = m.group(1), m.group(2)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op in the optimized HLO.
+    Ops inside while-loop bodies are multiplied by an estimated trip count
+    when XLA annotates it; otherwise counted once (documented in
+    EXPERIMENTS.md)."""
+    out = {k: 0 for k in COLLECTIVE_OPS}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        for op in COLLECTIVE_OPS:
+            # match op invocations like '%x = bf16[..] all-gather(...'
+            if re.search(rf"= [a-z0-9\[\],() ]*{op}", ls) or \
+               re.search(rf"{op}-start", ls):
+                out[op] += _first_shape_bytes(ls)
+                out["count"] += 1
+                break
+    return out
+
+
+def _cost_get(cost: dict, key: str) -> float:
+    return float(cost.get(key, 0.0) or 0.0)
+
+
+# ------------------------------------------------------------------ lowering --
+def build_cell(arch: str, shape_name: str, mesh, *, seq_shard: bool = True,
+               use_pallas: bool = False, remat_policy: str = "nothing",
+               accum_override=None, fsdp: bool = True,
+               unroll_attn: bool = False):
+    import dataclasses
+    cfg = get_config(arch)
+    if unroll_attn:
+        cfg = dataclasses.replace(cfg, attn_unroll_q=True)
+    shape = SHAPES[shape_name]
+    cons = activation_constrainer(mesh, seq_shard=seq_shard and
+                                  shape.kind != "decode")
+    specs = input_specs(cfg, shape)
+    params = abstract_params(cfg)
+    pshard = param_shardings(mesh, params, fsdp=fsdp)
+    bshard = batch_shardings(mesh, {k: v for k, v in specs.items()})
+
+    n_data = 1
+    for ax in ("pod", "data"):
+        if ax in mesh.axis_names:
+            n_data *= mesh.shape[ax]
+
+    if shape.kind == "train":
+        accum = accum_override or accum_steps(cfg, shape, n_data, seq_shard)
+        # when params are DP-replicated, still accumulate grads SHARDED over
+        # data (ZeRO grads): per-microbatch reduce-scatter, one reduction
+        grad_sh = param_shardings(mesh, params, fsdp=True) if not fsdp \
+            else None
+        step = make_train_step(
+            cfg, accum=accum, use_pallas=use_pallas,
+            remat_policy=remat_policy, constrain=cons,
+            accum_dtype=jnp.bfloat16 if cfg.n_params() > 2e11 else jnp.float32,
+            grad_shardings=grad_sh)
+        opt = abstract_opt_state(cfg, params)
+        oshard = opt_state_shardings(mesh, opt, params)
+        jitted = jax.jit(step,
+                         in_shardings=(pshard, oshard, bshard),
+                         out_shardings=(pshard, oshard, None))
+        args = (params, opt, specs)
+        meta = {"accum": accum}
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg, use_pallas=use_pallas, constrain=cons)
+        jitted = jax.jit(step, in_shardings=(pshard, bshard),
+                         out_shardings=None)
+        args = (params, specs)
+        meta = {}
+    else:
+        step = make_serve_step(cfg, use_pallas=use_pallas, constrain=cons)
+        cache = abstract_cache(cfg, shape)
+        cshard = cache_shardings(mesh, cache)
+        jitted = jax.jit(step, in_shardings=(pshard, cshard, bshard),
+                         out_shardings=(None, cshard))
+        args = (params, cache, specs)
+        meta = {}
+    return jitted, args, meta
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             **kw) -> Dict[str, Any]:
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_chips": 512 if multi_pod else 256,
+        "opts": {k: v for k, v in kw.items()},
+    }
+    try:
+        with mesh:
+            jitted, args, meta = build_cell(arch, shape_name, mesh, **kw)
+            lowered = jitted.lower(*args)
+            compiled = lowered.compile()
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+        rec.update(meta)
+        rec["ok"] = True
+        rec["compile_s"] = round(time.time() - t0, 1)
+        # raw XLA numbers (per device, while-bodies counted ONCE -- kept for
+        # reference; see EXPERIMENTS.md §Dry-run for the discrepancy note)
+        rec["xla_flops_raw"] = _cost_get(cost, "flops")
+        rec["xla_bytes_raw"] = _cost_get(cost, "bytes accessed")
+        # trip-count-aware per-device costs (the §Roofline source of truth)
+        costs = hlo_analyze(hlo)
+        rec["flops_per_device"] = costs.flops
+        rec["bytes_per_device"] = costs.bytes
+        rec["collective_bytes_per_device"] = costs.coll_bytes
+        rec["collective_count"] = costs.coll_count
+        rec["memory"] = {
+            "argument_size": getattr(mem, "argument_size_in_bytes", 0),
+            "output_size": getattr(mem, "output_size_in_bytes", 0),
+            "temp_size": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_size": getattr(mem, "generated_code_size_in_bytes", 0),
+        }
+        cfg = get_config(arch)
+        rec["n_params"] = cfg.n_params()
+        rec["n_active_params"] = cfg.n_active_params()
+        rec["model_flops"] = model_flops(cfg, SHAPES[shape_name])
+        rec["analytic_bytes_per_device"] = analytic_bytes(
+            cfg, SHAPES[shape_name], rec["n_chips"],
+            accum=rec.get("accum", 1))
+    except Exception as e:   # noqa: BLE001 -- report, don't die mid-sweep
+        rec["ok"] = False
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", choices=["no", "yes", "both"], default="no")
+    ap.add_argument("--out", default="benchmarks/dryrun_results.jsonl")
+    ap.add_argument("--no-seq-shard", action="store_true")
+    ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--remat", default="nothing")
+    ap.add_argument("--accum", type=int, default=None)
+    ap.add_argument("--no-fsdp", action="store_true",
+                    help="replicate params over the data axis (DP)")
+    ap.add_argument("--unroll-attn", action="store_true")
+    args = ap.parse_args()
+
+    # smallest-first so the roofline table fills up front under a time budget
+    archs = sorted(ARCHS, key=lambda a: ARCHS[a].n_params()) \
+        if args.arch == "all" else [args.arch]
+    pods = {"no": [False], "yes": [True], "both": [False, True]}[args.multi_pod]
+    failures = 0
+    with open(args.out, "a") as f:
+        for arch in archs:
+            shapes = ([s.name for s in applicable_shapes(arch)]
+                      if args.shape == "all" else [args.shape])
+            for shape in shapes:
+                for mp in pods:
+                    rec = run_cell(arch, shape, mp,
+                                   seq_shard=not args.no_seq_shard,
+                                   use_pallas=args.use_pallas,
+                                   remat_policy=args.remat,
+                                   accum_override=args.accum,
+                                   fsdp=not args.no_fsdp,
+                                   unroll_attn=args.unroll_attn)
+                    tb = rec.pop("traceback", None)
+                    line = json.dumps(rec)
+                    f.write(line + "\n")
+                    f.flush()
+                    status = "OK " if rec["ok"] else "FAIL"
+                    print(f"[{status}] {arch} × {shape} × {rec['mesh']} "
+                          f"({rec.get('compile_s', '-')}s)", flush=True)
+                    if not rec["ok"]:
+                        failures += 1
+                        print(rec["error"], flush=True)
+                        if tb:
+                            print(tb, flush=True)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

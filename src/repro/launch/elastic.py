@@ -1,0 +1,103 @@
+"""Elastic scaling + straggler mitigation planning (pure logic, fully
+testable without hardware).
+
+``plan_remesh`` decides the new (pod, data, model) factorization when hosts
+fail, preferring to shrink the data axis (cheapest resharding: optimizer
+shards re-gather along data only; TP layout untouched).  ``ReshardPlan``
+spells out which collective moves what -- the launcher executes it with a
+checkpoint-restore into the new mesh (parameters are layout-portable because
+checkpoints store unsharded logical tensors per shard group).
+
+``StragglerPolicy`` implements deadline-based gradient skipping: a step's
+all-reduce proceeds with the contributions that arrived by the deadline and
+rescales by the participation fraction (bounded staleness, standard at
+1000-node scale); hosts that miss repeatedly are evicted -> plan_remesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+
+@dataclasses.dataclass
+class ReshardPlan:
+    old_mesh: Tuple[int, ...]
+    new_mesh: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    moves: List[str]
+    restart_from_checkpoint: bool
+
+
+def factorize_mesh(n_chips: int, model_parallel: int,
+                   chips_per_pod: int = 256) -> Optional[Tuple[int, int, int]]:
+    """(pods, data, model) for n_chips, keeping TP intact."""
+    if n_chips % model_parallel:
+        return None
+    rest = n_chips // model_parallel
+    pods = max(1, n_chips // chips_per_pod)
+    while pods > 1 and rest % pods:
+        pods -= 1
+    data = rest // pods
+    if data < 1:
+        return None
+    return (pods, data, model_parallel)
+
+
+def plan_remesh(n_healthy: int, old: Tuple[int, int, int],
+                chips_per_host: int = 4) -> ReshardPlan:
+    """Choose the largest usable mesh after failures.
+
+    TP ('model') is pinned (changing it would re-layout every weight);
+    the data axis absorbs the loss; pods collapse when a whole pod is gone.
+    """
+    pods_o, data_o, model_o = old
+    usable = (n_healthy * chips_per_host // model_o) * model_o
+    best = None
+    for pods in range(pods_o, 0, -1):
+        per_pod = usable // pods
+        data = per_pod // model_o
+        if data >= 1:
+            best = (pods, data, model_o)
+            break
+    assert best is not None, "not enough healthy chips for one TP group"
+    moves = []
+    if best[1] != data_o:
+        moves.append(
+            f"re-partition optimizer state (ZeRO shards): data {data_o} -> "
+            f"{best[1]} (all-gather m/v along old data axis, re-scatter)")
+        moves.append("rebalance data-queue cursors: max() over worker "
+                     "cursors stays valid (paper §6.1 recovery rule)")
+    if best[0] != pods_o:
+        moves.append(f"pod replicas {pods_o} -> {best[0]}: drop pod-axis "
+                     "gradient all-reduce groups; no tensor movement")
+    return ReshardPlan(old_mesh=old, new_mesh=best,
+                       axis_names=("pod", "data", "model"), moves=moves,
+                       restart_from_checkpoint=True)
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    deadline_ms: float = 500.0
+    min_participation: float = 0.75
+    evict_after_misses: int = 3
+
+    def step_outcome(self, arrival_ms: List[float]) -> dict:
+        """Given per-host gradient arrival times, decide the step."""
+        on_time = [t for t in arrival_ms if t <= self.deadline_ms]
+        frac = len(on_time) / max(len(arrival_ms), 1)
+        if frac >= self.min_participation:
+            return {"action": "proceed", "participation": frac,
+                    "grad_scale": 1.0 / max(frac, 1e-6)}
+        return {"action": "wait_full", "participation": frac,
+                "grad_scale": 1.0}
+
+    def track_misses(self, miss_counts: dict, arrival_ms: dict) -> List[str]:
+        evict = []
+        for host, t in arrival_ms.items():
+            if t > self.deadline_ms:
+                miss_counts[host] = miss_counts.get(host, 0) + 1
+                if miss_counts[host] >= self.evict_after_misses:
+                    evict.append(host)
+            else:
+                miss_counts[host] = 0
+        return evict

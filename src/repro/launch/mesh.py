@@ -1,0 +1,24 @@
+"""Production mesh construction (assignment-mandated shapes).
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (tests run with 1 CPU device; only dryrun.py forces
+512 host devices).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh():
+    """Tiny (2,2) mesh over available devices (subprocess tests force >=4
+    host devices); falls back to (1,1) on a single device."""
+    n = len(jax.devices())
+    if n >= 4:
+        return jax.make_mesh((2, 2), ("data", "model"))
+    return jax.make_mesh((1, 1), ("data", "model"))

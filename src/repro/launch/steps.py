@@ -1,0 +1,162 @@
+"""Step functions + abstract input specs for every (arch × shape) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (no allocation), which is
+what the multi-pod dry-run lowers against.  The same step functions back the
+real train/serve drivers on concrete arrays.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import (SHAPES, forward, init_cache, init_params, loss_fn,
+                          serve_step)
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim import AdamWConfig, adamw_update, init_opt_state
+
+PyTree = Any
+
+
+def opt_config(cfg: ModelConfig) -> AdamWConfig:
+    """int8-quantized AdamW state for the largest models (>=200B params) --
+    the 4x optimizer-memory cut that fits 340B on a 16GB/chip pod slice."""
+    big = cfg.n_params() > 200e9
+    return AdamWConfig(state_dtype="int8" if big else "float32")
+
+
+def accum_steps(cfg: ModelConfig, shape: ShapeConfig, n_data_shards: int,
+                seq_shard: bool, budget_bytes: float = 2.5e9) -> int:
+    """Gradient-accumulation factor bounding per-chip saved-activation
+    memory: scan carries are (B/dp/accum, S[, /tp], D) bf16 x n_periods.
+    SSM/hybrid configs additionally bound the selective-scan transient,
+    (B_mb, chunk, d_inner, ds) fp32 blocks, which dwarfs the carry."""
+    _, periods, _ = cfg.layer_pattern()
+    per_seq = shape.seq_len * cfg.d_model * 2
+    if seq_shard:
+        per_seq = per_seq / 16
+    b_shard = max(1, shape.global_batch // n_data_shards)
+    total = b_shard * per_seq * periods
+    accum = max(1, int(math.ceil(total / budget_bytes)))
+    if cfg.ssm_state:
+        # keep ~3 live (B_mb, 128, din, ds) fp32 scan blocks under budget
+        per_b = 3 * 128 * cfg.d_inner * cfg.ssm_state * 4
+        accum = max(accum, int(math.ceil(b_shard * per_b / budget_bytes)))
+    # accum must divide the per-shard batch
+    while b_shard % accum and accum < b_shard:
+        accum += 1
+    return min(accum, b_shard)
+
+
+# -------------------------------------------------------------- input specs --
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    B, S = shape.global_batch, shape.seq_len
+    tok = jnp.int32
+    if shape.kind == "train":
+        if cfg.embed_stub:
+            return {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                   jnp.bfloat16),
+                    "labels": jax.ShapeDtypeStruct((B, S), tok)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), tok),
+                "labels": jax.ShapeDtypeStruct((B, S), tok)}
+    if shape.kind == "prefill":
+        if cfg.embed_stub:
+            return {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model),
+                                                   jnp.bfloat16)}
+        return {"tokens": jax.ShapeDtypeStruct((B, S), tok)}
+    # decode: one new token against a cache of S
+    if cfg.embed_stub:
+        batch = {"embeds": jax.ShapeDtypeStruct((B, 1, cfg.d_model),
+                                                jnp.bfloat16)}
+    else:
+        batch = {"tokens": jax.ShapeDtypeStruct((B, 1), tok)}
+    batch["position"] = jax.ShapeDtypeStruct((B,), jnp.int32)
+    return batch
+
+
+def abstract_params(cfg: ModelConfig) -> PyTree:
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+def abstract_opt_state(cfg: ModelConfig, params: PyTree) -> PyTree:
+    ocfg = opt_config(cfg)
+    return jax.eval_shape(lambda p: init_opt_state(ocfg, p), params)
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig) -> PyTree:
+    return jax.eval_shape(
+        lambda: init_cache(cfg, shape.global_batch, shape.seq_len))
+
+
+# ------------------------------------------------------------------- steps --
+def make_train_step(cfg: ModelConfig, accum: int = 1,
+                    use_pallas: bool = False,
+                    remat_policy: str = "nothing",
+                    constrain=None,
+                    accum_dtype=jnp.float32,
+                    grad_shardings=None) -> Callable:
+    """``grad_shardings``: optional NamedSharding tree for the gradient
+    accumulator.  Sharding it over the data axis turns the per-microbatch
+    gradient all-reduce into a reduce-scatter (ZeRO-style accumulation);
+    the full reduction then happens ONCE at the optimizer update."""
+    ocfg = opt_config(cfg)
+
+    def _constrain_grads(g):
+        if grad_shardings is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g,
+                            grad_shardings)
+
+    def train_step(params, opt_state, batch):
+        def one_loss(p, mb):
+            return loss_fn(cfg, p, mb, use_pallas, remat_policy, constrain)
+
+        if accum == 1:
+            loss, grads = jax.value_and_grad(one_loss)(params, batch)
+            grads = _constrain_grads(grads)
+        else:
+            def split(x):
+                return x.reshape((accum, x.shape[0] // accum) + x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def acc_step(carry, mb):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(one_loss)(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(accum_dtype), gsum, g)
+                return (_constrain_grads(gsum), lsum + l), None
+
+            zeros = _constrain_grads(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, accum_dtype), params))
+            (gsum, lsum), _ = jax.lax.scan(acc_step, (zeros, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / accum, gsum)
+            loss = lsum / accum
+        new_params, new_opt, metrics = adamw_update(ocfg, params, grads,
+                                                    opt_state)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, use_pallas: bool = False,
+                      constrain=None) -> Callable:
+    def prefill_step(params, batch):
+        logits = forward(cfg, params, batch, use_pallas,
+                         remat_policy="none_inference", constrain=constrain)
+        return logits[:, -1]
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, use_pallas: bool = False,
+                    constrain=None) -> Callable:
+    def step(params, cache, batch):
+        position = batch["position"]
+        toks = {k: v for k, v in batch.items() if k != "position"}
+        return serve_step(cfg, params, cache, toks, position, use_pallas,
+                          constrain=constrain)
+    return step

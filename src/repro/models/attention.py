@@ -1,0 +1,200 @@
+"""GQA attention: training/prefill (chunked flash-style) and decode paths.
+
+The chunked path is the pure-JAX oracle of the Pallas flash kernel in
+``repro.kernels.flash_attention`` (online softmax over KV blocks; memory
+O(S·block) instead of O(S²)), and is what the dry-run lowers for long
+sequences.  ``use_pallas`` switches the hot spot to the TPU kernel.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_mrope, apply_rope, dense_init, rms_norm
+from .config import ModelConfig
+
+NEG_INF = -1e30
+
+
+def init_attention(cfg: ModelConfig, key) -> dict:
+    d, hd, H, KV = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(k1, (d, H * hd), dt),
+        "wk": dense_init(k2, (d, KV * hd), dt),
+        "wv": dense_init(k3, (d, KV * hd), dt),
+        "wo": dense_init(k4, (H * hd, d), dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dt)
+        p["k_norm"] = jnp.ones((hd,), dt)
+    return p
+
+
+def _rope(cfg: ModelConfig, x, positions):
+    if cfg.rope == "none":
+        return x
+    if cfg.rope == "mrope":
+        # text-only stub: all three section position ids coincide
+        pos3 = jnp.broadcast_to(positions[..., None, :],
+                                positions.shape[:-1] + (3, positions.shape[-1]))
+        return apply_mrope(x, pos3, cfg.rope_theta)
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+def _qkv(cfg: ModelConfig, params, x, positions):
+    B, S, _ = x.shape
+    hd, H, KV = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = (x @ params["wq"]).reshape(B, S, H, hd)
+    k = (x @ params["wk"]).reshape(B, S, KV, hd)
+    v = (x @ params["wv"]).reshape(B, S, KV, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, params["k_norm"], cfg.norm_eps)
+    q = _rope(cfg, q, positions)
+    k = _rope(cfg, k, positions)
+    return q, k, v
+
+
+def causal_attention_reference(q, k, v, n_kv_groups: int) -> jax.Array:
+    """O(S²) einsum attention -- oracle + short-sequence path.
+    q: (B,S,H,hd); k,v: (B,S,KV,hd); H = KV * n_kv_groups."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    qg = q.reshape(B, S, KV, n_kv_groups, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k) / jnp.sqrt(hd)
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    scores = jnp.where(mask, scores.astype(jnp.float32), NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w.astype(v.dtype), v)
+    return out.reshape(B, S, H, hd)
+
+
+def causal_attention_chunked(q, k, v, n_kv_groups: int,
+                             block: int = 1024,
+                             unroll_q: bool = False) -> jax.Array:
+    """Flash-style chunked causal attention (online softmax over KV blocks).
+
+    Memory O(B·S·block) -- this is what makes 32k prefill fit.  Processes Q
+    in blocks via scan; for each Q block, scans KV blocks up to the diagonal
+    using a lax.scan with running (max, sum, acc)."""
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    if S <= 2 * block:
+        return causal_attention_reference(q, k, v, n_kv_groups)
+    assert S % block == 0
+    nb = S // block
+    qg = q.reshape(B, nb, block, KV, n_kv_groups, hd)
+    kb = k.reshape(B, nb, block, KV, hd)
+    vb = v.reshape(B, nb, block, KV, hd)
+    scale = 1.0 / jnp.sqrt(hd)
+
+    def q_block_impl(qi, q_i, n_kv_blocks):
+        # q_i: (B, block, KV, G, hd); attend to kv blocks 0..qi
+        def kv_step(carry, j):
+            m, l, acc = carry
+            k_j = jax.lax.dynamic_index_in_dim(kb, j, axis=1, keepdims=False)
+            v_j = jax.lax.dynamic_index_in_dim(vb, j, axis=1, keepdims=False)
+            s = jnp.einsum("bqkgh,btkh->bkgqt", q_i, k_j) * scale
+            s = s.astype(jnp.float32)
+            # masking: full blocks below diagonal; triangular on diagonal
+            q_pos = qi * block + jnp.arange(block)
+            t_pos = j * block + jnp.arange(block)
+            mask = q_pos[:, None] >= t_pos[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bkgqt,btkh->bkgqh", p.astype(v_j.dtype), v_j)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KV, n_kv_groups, block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, n_kv_groups, block), jnp.float32)
+        a0 = jnp.zeros((B, KV, n_kv_groups, block, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            jax.checkpoint(kv_step), (m0, l0, a0), jnp.arange(n_kv_blocks),
+            unroll=False)
+        # kv blocks beyond the diagonal contribute nothing (masked to -inf),
+        # but scanning them wastes FLOPs; they are masked fully so l is safe.
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out  # (B, KV, G, block, hd)
+
+    q_block = jax.checkpoint(
+        lambda qi, q_i: q_block_impl(qi, q_i, nb))
+    q_block_bounded = jax.checkpoint(
+        q_block_impl, static_argnums=(2,))
+
+    if unroll_q:
+        # python-unrolled q blocks with STATIC per-block KV extents: the
+        # scan for q-block qi only covers kv blocks 0..qi -- no masked-block
+        # MXU waste, and the HLO keeps known trip counts (honest accounting)
+        outs = jnp.stack([q_block_bounded(qi, qg[:, qi], qi + 1)
+                          for qi in range(nb)])
+    else:
+        outs = jax.lax.map(lambda i: q_block(i, qg[:, i]), jnp.arange(nb))
+    # (nb, B, KV, G, block, hd) -> (B, S, H, hd)
+    out = jnp.moveaxis(outs, 0, 1)                    # (B, nb, KV, G, blk, hd)
+    out = jnp.moveaxis(out, -2, 2)                    # (B, nb, blk, KV, G, hd)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def attention_block(cfg: ModelConfig, params, x, positions,
+                    use_pallas: bool = False) -> jax.Array:
+    """Full training/prefill attention sub-layer (no cache)."""
+    B, S, _ = x.shape
+    G = cfg.n_heads // cfg.n_kv_heads
+    q, k, v = _qkv(cfg, params, x, positions)
+    if use_pallas:
+        from repro.kernels.flash_attention.ops import flash_attention
+        out = flash_attention(q, k, v, causal=True)
+    else:
+        out = causal_attention_chunked(q, k, v, G,
+                                       unroll_q=cfg.attn_unroll_q)
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    return out @ params["wo"]
+
+
+# ------------------------------------------------------------------ decode --
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dt = jnp.dtype(cfg.compute_dtype)
+    kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, max_len, kv, hd), dt),
+        "v": jnp.zeros((batch, max_len, kv, hd), dt),
+    }
+
+
+def decode_attention_block(cfg: ModelConfig, params, x, cache: dict,
+                           position: jax.Array,
+                           use_pallas: bool = False) -> Tuple[jax.Array, dict]:
+    """One-token decode: x (B, 1, d); cache holds max_len KV; position (B,)
+    is the index of the new token.  Returns (out (B,1,d), new cache)."""
+    B = x.shape[0]
+    hd, H, KV = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    G = H // KV
+    q, k, v = _qkv(cfg, params, x, position[:, None])
+    # write the new kv at `position`
+    upd = jax.vmap(lambda c, u, p: jax.lax.dynamic_update_slice_in_dim(
+        c, u, p, axis=0))
+    ck = upd(cache["k"], k[:, 0:1].astype(cache["k"].dtype), position)
+    cv = upd(cache["v"], v[:, 0:1].astype(cache["v"].dtype), position)
+    if use_pallas:
+        from repro.kernels.decode_attention.ops import decode_attention
+        out = decode_attention(q[:, 0], ck, cv, position + 1)
+    else:
+        S = ck.shape[1]
+        qg = q.reshape(B, 1, KV, G, hd)
+        s = jnp.einsum("bqkgh,btkh->bkgqt", qg, ck) / jnp.sqrt(hd)
+        valid = jnp.arange(S)[None, :] <= position[:, None]      # (B, S)
+        s = jnp.where(valid[:, None, None, None, :],
+                      s.astype(jnp.float32), NEG_INF)
+        w = jax.nn.softmax(s, axis=-1).astype(cv.dtype)
+        out = jnp.einsum("bkgqt,btkh->bqkgh", w, cv)[:, 0]   # (B, KV, G, hd)
+    out = out.reshape(B, 1, H * hd)
+    return out @ params["wo"], {"k": ck, "v": cv}

@@ -1,0 +1,104 @@
+"""Layer composition: (mixer, ffn) sub-layer pairs with pre-RMSNorm."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (attention_block, decode_attention_block,
+                        init_attention, init_attn_cache)
+from .common import act_fn, dense_init, rms_norm
+from .config import LayerSpec, ModelConfig
+from .mamba import (init_mamba, init_mamba_cache, mamba_block,
+                    mamba_decode_step)
+from .moe import init_moe, moe_ffn
+
+
+def init_dense_ffn(cfg: ModelConfig, key, d_ff: int) -> dict:
+    d = cfg.d_model
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    gated = cfg.act in ("swiglu", "geglu")
+    p = {"w1": dense_init(k1, (d, d_ff), dt),
+         "w2": dense_init(k2, (d_ff, d), dt)}
+    if gated:
+        p["w3"] = dense_init(k3, (d, d_ff), dt)
+    return p
+
+
+def dense_ffn(cfg: ModelConfig, params, x: jax.Array) -> jax.Array:
+    act = act_fn(cfg.act)
+    h = x @ params["w1"]
+    if cfg.act in ("swiglu", "geglu"):
+        h = act(h) * (x @ params["w3"])
+    else:
+        h = act(h)
+    return h @ params["w2"]
+
+
+def init_layer(cfg: ModelConfig, spec: LayerSpec, key) -> dict:
+    mixer, ffn = spec
+    k1, k2 = jax.random.split(key)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {"norm1": jnp.ones((cfg.d_model,), dt)}
+    p["mixer"] = (init_attention(cfg, k1) if mixer == "attn"
+                  else init_mamba(cfg, k1))
+    if ffn != "none":
+        p["norm2"] = jnp.ones((cfg.d_model,), dt)
+        if ffn == "moe":
+            p["ffn"] = init_moe(cfg, k2)
+        elif ffn == "dense_first":
+            p["ffn"] = init_dense_ffn(cfg, k2, cfg.dense_ff_first)
+        else:
+            p["ffn"] = init_dense_ffn(cfg, k2, cfg.d_ff)
+    return p
+
+
+def apply_layer(cfg: ModelConfig, spec: LayerSpec, params, x, positions,
+                use_pallas: bool = False, cons=None) -> jax.Array:
+    mixer, ffn = spec
+    h = rms_norm(x, params["norm1"], cfg.norm_eps)
+    if mixer == "attn":
+        h = attention_block(cfg, params["mixer"], h, positions, use_pallas)
+    else:
+        h = mamba_block(cfg, params["mixer"], h, use_pallas)
+    x = x + h
+    if ffn != "none":
+        h = rms_norm(x, params["norm2"], cfg.norm_eps)
+        if ffn == "moe":
+            h = moe_ffn(cfg, params["ffn"], h, cons)
+        else:
+            h = dense_ffn(cfg, params["ffn"], h)
+        x = x + h
+    return x
+
+
+# ------------------------------------------------------------------ decode --
+def init_layer_cache(cfg: ModelConfig, spec: LayerSpec, batch: int,
+                     max_len: int) -> dict:
+    mixer, _ = spec
+    if mixer == "attn":
+        return init_attn_cache(cfg, batch, max_len)
+    return init_mamba_cache(cfg, batch)
+
+
+def apply_layer_decode(cfg: ModelConfig, spec: LayerSpec, params, x, cache,
+                       position, use_pallas: bool = False, cons=None
+                       ) -> Tuple[jax.Array, dict]:
+    mixer, ffn = spec
+    h = rms_norm(x, params["norm1"], cfg.norm_eps)
+    if mixer == "attn":
+        h, cache = decode_attention_block(cfg, params["mixer"], h, cache,
+                                          position, use_pallas)
+    else:
+        h, cache = mamba_decode_step(cfg, params["mixer"], h, cache)
+    x = x + h
+    if ffn != "none":
+        h = rms_norm(x, params["norm2"], cfg.norm_eps)
+        if ffn == "moe":
+            h = moe_ffn(cfg, params["ffn"], h, cons)
+        else:
+            h = dense_ffn(cfg, params["ffn"], h)
+        x = x + h
+    return x, cache

@@ -1,0 +1,82 @@
+"""Shared building blocks: norms, rotary embeddings, activations, init."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt) * scale
+
+
+def act_fn(name: str):
+    if name in ("swiglu", "geglu"):
+        inner = jax.nn.silu if name == "swiglu" else jax.nn.gelu
+        return inner
+    if name == "sq_relu":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(name)
+
+
+# ----------------------------------------------------------------- rotary --
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), dtype=jnp.float32)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs   # (..., S, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., :, None, :]      # broadcast over heads
+    sin = sin[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections=None) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the rotary dims are partitioned into
+    (temporal, height, width) sections, each rotated by its own position id.
+    positions: (..., 3, S) -- for pure text all three ids coincide.
+    x: (..., S, H, hd)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    if sections is None:
+        # Qwen2-VL proportions (16,24,24)/64, scaled to the head dim
+        s1 = half // 4
+        s2 = (half - s1 + 1) // 2
+        sections = (s1, s2, half - s1 - s2)
+    assert sum(sections) == half, (sections, hd)
+    freqs = jnp.asarray(rope_freqs(hd, theta), dtype=jnp.float32)  # (half,)
+    # positions (..., 3, S) -> per-frequency positions (..., S, half).
+    # Static concat (NOT a gather): SPMD-partitions cleanly; a fancy-index
+    # here triggered involuntary full rematerialization in GSPMD.
+    p = jnp.moveaxis(positions, -2, -1)       # (..., S, 3)
+    per_freq = jnp.concatenate(
+        [jnp.broadcast_to(p[..., i:i + 1], p.shape[:-1] + (s,))
+         for i, s in enumerate(sections)], axis=-1)   # (..., S, half)
+    ang = per_freq.astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------- init --
+def dense_init(key, shape, dtype, scale: float = 1.0):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    std = scale / np.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * std).astype(dtype)
+
+
+def keygen(key):
+    while True:
+        key, sub = jax.random.split(key)
+        yield sub

@@ -1,0 +1,156 @@
+"""CausalLM: init / forward / loss / prefill / decode over the layer stack.
+
+Layers are grouped as (optional unstacked prefix) + (pattern × n_periods)
+with ``jax.lax.scan`` over stacked period parameters -- HLO stays one period
+big regardless of depth, which keeps 80+ dry-run compiles tractable.
+Remat (``jax.checkpoint``) wraps the scan body; the policy is configurable
+for the perf loop.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import (apply_layer, apply_layer_decode, init_layer,
+                     init_layer_cache)
+from .common import dense_init, rms_norm
+from .config import ModelConfig
+
+PyTree = Any
+
+
+def init_params(cfg: ModelConfig, key) -> PyTree:
+    prefix, periods, pattern = cfg.layer_pattern()
+    dt = jnp.dtype(cfg.param_dtype)
+    keys = jax.random.split(key, 4)
+    params: Dict[str, PyTree] = {
+        "embed": dense_init(keys[0], (cfg.vocab, cfg.d_model), dt, scale=1.0),
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = dense_init(keys[1], (cfg.d_model, cfg.vocab), dt)
+    params["prefix"] = [
+        init_layer(cfg, spec, k)
+        for spec, k in zip(prefix, jax.random.split(keys[2], max(len(prefix), 1)))
+    ] if prefix else []
+
+    def init_period(k):
+        sub = jax.random.split(k, len(pattern))
+        return {f"sub{i}": init_layer(cfg, spec, sub[i])
+                for i, spec in enumerate(pattern)}
+
+    params["stack"] = jax.vmap(init_period)(jax.random.split(keys[3], periods))
+    return params
+
+
+def _lm_head(cfg: ModelConfig, params, x: jax.Array) -> jax.Array:
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return x @ w
+
+
+def forward(cfg: ModelConfig, params, batch: Dict[str, jax.Array],
+            use_pallas: bool = False,
+            remat_policy: str = "nothing",
+            constrain=None) -> jax.Array:
+    """Returns logits (B, S, V).  ``constrain`` is an optional callable
+    applied to the residual stream at layer-group boundaries (the sharding
+    layer injects `with_sharding_constraint` here)."""
+    prefix, periods, pattern = cfg.layer_pattern()
+    if "embeds" in batch:
+        x = batch["embeds"]
+        B, S = x.shape[:2]
+    else:
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = params["embed"][tokens]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    cons = constrain or (lambda t, kind=None: t)
+    x = cons(x)
+    for spec, lp in zip(prefix, params.get("prefix", [])):
+        x = cons(apply_layer(cfg, spec, lp, x, positions, use_pallas,
+                             cons))
+
+    def body(carry, period_params):
+        h = carry
+        for i, spec in enumerate(pattern):
+            h = apply_layer(cfg, spec, period_params[f"sub{i}"], h,
+                            positions, use_pallas, cons)
+        return cons(h), None
+
+    if remat_policy == "nothing":
+        body = jax.checkpoint(body)
+    elif remat_policy == "dots":
+        body = jax.checkpoint(
+            body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    x, _ = jax.lax.scan(body, x, params["stack"])
+    return _lm_head(cfg, params, x)
+
+
+def loss_fn(cfg: ModelConfig, params, batch, use_pallas: bool = False,
+            remat_policy: str = "nothing", constrain=None) -> jax.Array:
+    logits = forward(cfg, params, batch, use_pallas, remat_policy, constrain)
+    labels = batch["labels"]
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ------------------------------------------------------------------ decode --
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> PyTree:
+    prefix, periods, pattern = cfg.layer_pattern()
+    cache: Dict[str, PyTree] = {
+        "prefix": [init_layer_cache(cfg, spec, batch, max_len)
+                   for spec in prefix],
+    }
+
+    def one_period(_):
+        return {f"sub{i}": init_layer_cache(cfg, spec, batch, max_len)
+                for i, spec in enumerate(pattern)}
+
+    # stack per-period caches along a leading axis for the scan
+    per = one_period(None)
+    cache["stack"] = jax.tree.map(
+        lambda leaf: jnp.broadcast_to(leaf, (periods,) + leaf.shape).copy()
+        if periods else leaf, per)
+    return cache
+
+
+def serve_step(cfg: ModelConfig, params, cache: PyTree,
+               batch: Dict[str, jax.Array], position: jax.Array,
+               use_pallas: bool = False,
+               constrain=None) -> Tuple[jax.Array, PyTree]:
+    """One decode step: batch has "tokens" (B,1) (or "embeds" (B,1,d));
+    position (B,) is the write index.  Returns (logits (B,V), new cache)."""
+    prefix, periods, pattern = cfg.layer_pattern()
+    if "embeds" in batch:
+        x = batch["embeds"]
+    else:
+        x = params["embed"][batch["tokens"]]
+    cons = constrain or (lambda t, kind=None: t)
+    x = cons(x)
+    new_prefix = []
+    for spec, lp, lc in zip(prefix, params.get("prefix", []),
+                            cache.get("prefix", [])):
+        x, c = apply_layer_decode(cfg, spec, lp, x, lc, position, use_pallas,
+                                  cons)
+        new_prefix.append(c)
+
+    def body(carry, xs):
+        h = carry
+        period_params, period_cache = xs
+        new_cache = {}
+        for i, spec in enumerate(pattern):
+            h, c = apply_layer_decode(cfg, spec, period_params[f"sub{i}"], h,
+                                      period_cache[f"sub{i}"], position,
+                                      use_pallas, cons)
+            new_cache[f"sub{i}"] = c
+        return cons(h), new_cache
+
+    x, new_stack = jax.lax.scan(body, x, (params["stack"], cache["stack"]))
+    logits = _lm_head(cfg, params, x)[:, 0]
+    return logits, {"prefix": new_prefix, "stack": new_stack}

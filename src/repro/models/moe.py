@@ -1,0 +1,165 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch.
+
+Design goals:
+* compiled FLOPs track *active* experts (top-k routing with capacity C =
+  ceil(T·k/E · capacity_factor)), so the roofline's MODEL_FLOPS/HLO_FLOPs
+  ratio stays honest -- no dense all-experts einsum;
+* expert-parallel shardable: expert weights carry a leading E dim that the
+  sharding rules place on the 'model' mesh axis; dispatch/combine are
+  gather/scatters that GSPMD turns into all-to-alls;
+* fine-grained MoE (DeepSeekMoE): optional always-on shared experts.
+
+Dispatch: tokens' (token, expert) assignments are sorted by expert id
+(stable argsort), positions within each expert computed from the sorted
+order; tokens beyond capacity are dropped (standard GShard/Switch
+semantics -- tests use a high capacity factor to validate equivalence
+against the dense reference).
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import act_fn, dense_init
+from .config import ModelConfig
+
+
+def init_moe(cfg: ModelConfig, key) -> dict:
+    d, dff, E, S = cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.n_shared_experts
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 7)
+    gated = cfg.act in ("swiglu", "geglu")
+    p = {
+        "router": dense_init(ks[0], (d, E), dt),
+        "w1": dense_init(ks[1], (E, d, dff), dt),
+        "w2": dense_init(ks[2], (E, dff, d), dt),
+    }
+    if gated:
+        p["w3"] = dense_init(ks[3], (E, d, dff), dt)
+    if S:
+        p["sh_w1"] = dense_init(ks[4], (d, S * dff), dt)
+        p["sh_w2"] = dense_init(ks[5], (S * dff, d), dt)
+        if gated:
+            p["sh_w3"] = dense_init(ks[6], (d, S * dff), dt)
+    return p
+
+
+def _moe_chunks(T: int) -> int:
+    """Token chunks for locality: sorts/dispatch run per chunk, so with the
+    chunk axis batch-sharded the routing never leaves the device; only the
+    (chunk,E)->(E,chunk) transpose for the expert einsum moves tokens --
+    exactly the canonical expert-parallel all-to-all."""
+    for nc in (32, 16, 8, 4, 2, 1):
+        if T % nc == 0 and T // nc >= 16:
+            return nc
+    return 1
+
+
+def moe_ffn(cfg: ModelConfig, params, x: jax.Array,
+            cons=None) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d)."""
+    cons = cons or (lambda t, kind=None: t)
+    import math
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    nc = _moe_chunks(T)
+    tc = T // nc                                # tokens per chunk
+    xt = x.reshape(nc, tc, d)
+    act = act_fn(cfg.act)
+    gated = cfg.act in ("swiglu", "geglu")
+    cap = int(max(1, math.ceil(tc * k / E * cfg.capacity_factor)))
+
+    # ---- routing + chunk-local sort-based capacity dispatch ---------------
+    def route_chunk(xc):
+        logits = (xc @ params["router"]).astype(jnp.float32)    # (tc, E)
+        gates = jax.nn.softmax(logits, axis=-1)
+        top_g, top_e = jax.lax.top_k(gates, k)                  # (tc, k)
+        top_g = top_g / jnp.maximum(top_g.sum(-1, keepdims=True), 1e-9)
+        flat_e = top_e.reshape(-1)                              # (tc*k,)
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        idx = jnp.arange(tc * k)
+        seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))
+        pos_in_e = idx - seg_start[sorted_e]
+        keep = pos_in_e < cap
+        slot = sorted_e * cap + pos_in_e
+        token_of = order // k
+        buf = jnp.zeros((E * cap, d), x.dtype)
+        # out-of-bounds slot for dropped tokens => the write is discarded
+        buf = buf.at[jnp.where(keep, slot, E * cap)].set(
+            xc[token_of], mode="drop")
+        gate_of = top_g.reshape(-1)[order]
+        return buf.reshape(E, cap, d), (slot, keep, token_of, gate_of)
+
+    xe, combine_info = jax.vmap(route_chunk)(xt)   # xe: (nc, E, cap, d)
+
+    # ---- expert computation (active FLOPs; EP all-to-all at the transpose)
+    xe = jnp.swapaxes(xe, 0, 1).reshape(E, nc * cap, d)
+    xe = cons(xe, "moe_xe")   # pin (E@model, C@data): see sharding.py
+    h = jnp.einsum("ecd,edf->ecf", xe, params["w1"])
+    if gated:
+        h = act(h) * jnp.einsum("ecd,edf->ecf", xe, params["w3"])
+    else:
+        h = act(h)
+    ye = jnp.einsum("ecf,efd->ecd", h, params["w2"])    # (E, nc*cap, d)
+    ye = jnp.swapaxes(ye.reshape(E, nc, cap, d), 0, 1)  # (nc, E, cap, d)
+    # NOTE(perf, measured): constraining ye back to chunk-local here
+    # (cons(ye, "moe_ye")) converts the combine's fp32 masked psums into a
+    # bf16 all-gather, but the gather volume exceeds the psum saving
+    # (313+236 GB vs 486+19 GB/device on deepseek train_4k) -- refuted,
+    # see EXPERIMENTS.md §Perf iteration log.  The canonical fix is a
+    # shard_map all-to-all combine (future work, napkin floor ~3.5s).
+
+    # ---- chunk-local combine ----------------------------------------------
+    def combine_chunk(ye_c, info):
+        slot, keep, token_of, gate_of = info
+        yflat = ye_c.reshape(E * cap, d)
+        contrib = yflat[jnp.where(keep, slot, 0)] * keep[:, None]
+        contrib = contrib * gate_of[:, None].astype(x.dtype)
+        return jax.ops.segment_sum(contrib, token_of, num_segments=tc)
+
+    y = jax.vmap(combine_chunk)(ye, combine_info).reshape(T, d)
+    xt = xt.reshape(T, d)
+
+    # ---- shared experts (always on) ---------------------------------------
+    if cfg.n_shared_experts:
+        hs = xt @ params["sh_w1"]
+        if gated:
+            hs = act(hs) * (xt @ params["sh_w3"])
+        else:
+            hs = act(hs)
+        y = y + hs @ params["sh_w2"]
+    return y.reshape(B, S, d).astype(x.dtype)
+
+
+def moe_ffn_dense_reference(cfg: ModelConfig, params, x: jax.Array) -> jax.Array:
+    """Oracle: evaluate every expert densely, weight by top-k gates.
+    Used by tests (equivalence when capacity is not binding)."""
+    B, S, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    xt = x.reshape(-1, d)
+    act = act_fn(cfg.act)
+    gated = cfg.act in ("swiglu", "geglu")
+    logits = (xt @ params["router"]).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)
+    top_g, top_e = jax.lax.top_k(gates, k)
+    top_g = top_g / jnp.maximum(top_g.sum(-1, keepdims=True), 1e-9)
+    w = jnp.zeros_like(gates).at[jnp.arange(xt.shape[0])[:, None], top_e].set(top_g)
+    h = jnp.einsum("td,edf->tef", xt, params["w1"])
+    if gated:
+        h = act(h) * jnp.einsum("td,edf->tef", xt, params["w3"])
+    else:
+        h = act(h)
+    ye = jnp.einsum("tef,efd->ted", h, params["w2"])
+    y = jnp.einsum("ted,te->td", ye, w.astype(x.dtype))
+    if cfg.n_shared_experts:
+        hs = xt @ params["sh_w1"]
+        if gated:
+            hs = act(hs) * (xt @ params["sh_w3"])
+        else:
+            hs = act(hs)
+        y = y + hs @ params["sh_w2"]
+    return y.reshape(B, S, d).astype(x.dtype)

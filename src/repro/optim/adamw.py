@@ -1,0 +1,111 @@
+"""Sharded AdamW with optional block-wise int8 state quantization.
+
+The int8 mode (per-128-block absmax scales, bitsandbytes-style) cuts
+optimizer memory 4x -- what lets the 340B config fit a 16GB/chip pod slice
+under ZeRO-1 sharding.  Pure JAX; states inherit the parameter shardings
+plus extra data-axis sharding from the sharding rules.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+BLOCK = 128
+
+
+class AdamWConfig(NamedTuple):
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"      # float32 | int8
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+
+
+def _q8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Block-wise int8 quantization along the flattened last axis."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _dq8(q: jax.Array, scale: jax.Array, shape) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def _sched(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = 0.5 * (1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * warm * (0.1 + 0.9 * cos)
+
+
+def init_opt_state(cfg: AdamWConfig, params: PyTree) -> PyTree:
+    def zero_like(p):
+        if cfg.state_dtype == "int8":
+            q, s = _q8(jnp.zeros_like(p, jnp.float32))
+            return {"q": q, "s": s}
+        return jnp.zeros_like(p, jnp.float32)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zero_like, params),
+        "v": jax.tree.map(zero_like, params),
+    }
+
+
+def adamw_update(cfg: AdamWConfig, params: PyTree, grads: PyTree,
+                 state: PyTree) -> Tuple[PyTree, PyTree, dict]:
+    step = state["step"] + 1
+    # global-norm clip
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = _sched(cfg, step)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        if cfg.state_dtype == "int8":
+            m_f = _dq8(m["q"], m["s"], p.shape)
+            v_f = _dq8(v["q"], v["s"], p.shape)
+        else:
+            m_f, v_f = m, v
+        m_f = cfg.b1 * m_f + (1 - cfg.b1) * g
+        v_f = cfg.b2 * v_f + (1 - cfg.b2) * jnp.square(g)
+        mhat = m_f / (1 - cfg.b1 ** step.astype(jnp.float32))
+        vhat = v_f / (1 - cfg.b2 ** step.astype(jnp.float32))
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        if cfg.state_dtype == "int8":
+            mq, ms = _q8(m_f)
+            vq, vs = _q8(v_f)
+            return p_new, {"q": mq, "s": ms}, {"q": vq, "s": vs}
+        return p_new, m_f, v_f
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_m = tdef.flatten_up_to(state["m"])
+    flat_v = tdef.flatten_up_to(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = tdef.unflatten([o[0] for o in out])
+    new_m = tdef.unflatten([o[1] for o in out])
+    new_v = tdef.unflatten([o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"step": step, "m": new_m, "v": new_v}, metrics

@@ -1,0 +1,4 @@
+from .engine import ServeEngine
+from .request_queue import DurableRequestQueue
+
+__all__ = ["DurableRequestQueue", "ServeEngine"]

@@ -1,0 +1,68 @@
+"""Batched serving engine: durable request queue -> prefill+decode loop.
+
+Serves a (reduced-config) CausalLM: takes a batch of prompts, builds the KV
+cache by teacher-forcing the prompt tokens through ``serve_step`` (token at
+a time -- the cache path is the thing under test), then greedy-decodes
+``max_new`` tokens, and durably commits the responses with one fence."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import init_cache, init_params, serve_step
+from repro.models.config import ModelConfig
+
+from .request_queue import DurableRequestQueue
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, queue: DurableRequestQueue,
+                 params=None, seed: int = 0, max_len: int = 64):
+        self.cfg = cfg
+        self.queue = queue
+        self.max_len = max_len
+        self.params = params if params is not None \
+            else init_params(cfg, jax.random.PRNGKey(seed))
+        self._step = jax.jit(
+            lambda p, c, b, q: serve_step(cfg, p, c, b, q))
+
+    def _greedy(self, prompts: np.ndarray, max_new: int) -> np.ndarray:
+        B, P = prompts.shape
+        cache = init_cache(self.cfg, B, self.max_len)
+        tok = jnp.asarray(prompts[:, 0:1], jnp.int32)
+        outs = []
+        for t in range(P + max_new - 1):
+            pos = jnp.full((B,), t, jnp.int32)
+            logits, cache = self._step(self.params, cache,
+                                       {"tokens": tok}, pos)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+            if t + 1 < P:
+                tok = jnp.asarray(prompts[:, t + 1:t + 2], jnp.int32)
+            else:
+                tok = nxt
+                outs.append(np.asarray(nxt)[:, 0])
+        return np.stack(outs, axis=1)   # (B, max_new)
+
+    def serve_once(self, batch_size: int = 4, max_new: int = 8) -> List[dict]:
+        batch = self.queue.take_batch(batch_size)
+        if not batch:
+            return []
+        P = max(len(r["prompt"]) for r in batch)
+        prompts = np.zeros((len(batch), P), np.int32)
+        for i, r in enumerate(batch):
+            p = np.asarray(r["prompt"], np.int32)
+            prompts[i, :len(p)] = p
+        gen = self._greedy(prompts, max_new)
+        responses = [{"id": r["id"], "tokens": gen[i].tolist()}
+                     for i, r in enumerate(batch)]
+        self.queue.commit_responses(responses)   # ONE fence for the batch
+        return responses
+
+    def run(self, batch_size: int = 4, max_new: int = 8) -> int:
+        n = 0
+        while self.queue.pending_count():
+            n += len(self.serve_once(batch_size, max_new))
+        return n

@@ -1,0 +1,116 @@
+"""Per-architecture smoke tests: reduced config, one forward + train step +
+decode step on CPU; assert shapes and no NaNs (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, reduced_config
+from repro.models import forward, init_cache, init_params, loss_fn, serve_step
+from repro.optim import AdamWConfig, adamw_update, init_opt_state
+
+ARCH_IDS = sorted(ARCHS)
+
+
+def _batch(cfg, B=2, S=32, key=0):
+    rng = np.random.RandomState(key)
+    tokens = rng.randint(0, cfg.vocab, (B, S)).astype(np.int32)
+    labels = np.roll(tokens, -1, axis=1)
+    if cfg.embed_stub:
+        embeds = rng.randn(B, S, cfg.d_model).astype(np.float32) * 0.02
+        return {"embeds": jnp.asarray(embeds), "labels": jnp.asarray(labels)}
+    return {"tokens": jnp.asarray(tokens), "labels": jnp.asarray(labels)}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_shapes_no_nan(arch):
+    cfg = reduced_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch(cfg)
+    logits = jax.jit(lambda p, b: forward(cfg, p, b))(params, batch)
+    assert logits.shape == (2, 32, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits))), "NaN/Inf in logits"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_one_train_step(arch):
+    cfg = reduced_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    ocfg = AdamWConfig(lr=1e-3)
+    opt = init_opt_state(ocfg, params)
+    batch = _batch(cfg)
+
+    @jax.jit
+    def step(p, o, b):
+        loss, grads = jax.value_and_grad(
+            lambda pp: loss_fn(cfg, pp, b))(p)
+        p2, o2, met = adamw_update(ocfg, p, grads, o)
+        return p2, o2, loss, met
+
+    p2, o2, loss, met = step(params, opt, batch)
+    assert bool(jnp.isfinite(loss)), "loss is NaN"
+    assert float(loss) > 0
+    assert bool(jnp.isfinite(met["grad_norm"]))
+    # params actually changed
+    delta = sum(float(jnp.sum(jnp.abs(a.astype(jnp.float32)
+                                      - b.astype(jnp.float32))))
+                for a, b in zip(jax.tree.leaves(p2), jax.tree.leaves(params))
+                if a.dtype in (jnp.float32, jnp.bfloat16))
+    assert delta > 0
+    # second step reduces... at least runs and stays finite
+    p3, o3, loss2, _ = step(p2, o2, batch)
+    assert bool(jnp.isfinite(loss2))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = reduced_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(2))
+    B, S_max = 2, 16
+    cache = init_cache(cfg, B, S_max)
+    if cfg.embed_stub:
+        batch = {"embeds": jnp.zeros((B, 1, cfg.d_model), jnp.float32)}
+    else:
+        batch = {"tokens": jnp.zeros((B, 1), jnp.int32)}
+    pos = jnp.zeros((B,), jnp.int32)
+    logits, cache2 = jax.jit(
+        lambda p, c, b, q: serve_step(cfg, p, c, b, q))(params, cache, batch, pos)
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    # structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_matches_forward(arch):
+    """Greedy decode over a short prompt must match teacher-forced forward
+    logits position by position (cache correctness)."""
+    cfg = reduced_config(arch)
+    params = init_params(cfg, jax.random.PRNGKey(3))
+    B, S = 1, 8
+    batch = _batch(cfg, B=B, S=S, key=7)
+    full = forward(cfg, params, batch)            # (B,S,V)
+    cache = init_cache(cfg, B, S)
+    outs = []
+    for t in range(S):
+        if cfg.embed_stub:
+            step_in = {"embeds": batch["embeds"][:, t:t + 1]}
+        else:
+            step_in = {"tokens": batch["tokens"][:, t:t + 1]}
+        pos = jnp.full((B,), t, jnp.int32)
+        lg, cache = serve_step(cfg, params, cache, step_in, pos)
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full, np.float32),
+                               np.asarray(dec, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_param_counts_match_formula():
+    for arch in ARCH_IDS:
+        cfg = reduced_config(arch)
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        actual = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+        expected = cfg.n_params()
+        assert actual == expected, (
+            f"{arch}: counted {actual} != formula {expected}")

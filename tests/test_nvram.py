@@ -1,0 +1,156 @@
+"""Unit tests for the simulated NVRAM memory model (paper §2 semantics)."""
+from repro.core import NVRAM, LINE_WORDS
+
+
+def test_write_not_durable_without_flush():
+    nv = NVRAM(1)
+    a = nv.alloc_region(8, "r")
+    nv.write(a, 42)
+    nv.crash(mode="min")
+    assert nv.pread(a) is None
+
+
+def test_flush_fence_makes_durable():
+    nv = NVRAM(1)
+    a = nv.alloc_region(8, "r")
+    nv.write(a, 42)
+    nv.flush(a)
+    nv.fence()
+    nv.crash(mode="min")
+    assert nv.pread(a) == 42
+
+
+def test_flush_without_fence_may_be_dropped():
+    nv = NVRAM(1)
+    a = nv.alloc_region(8, "r")
+    nv.write(a, 42)
+    nv.flush(a)
+    nv.crash(mode="min")          # adversarial: pending flush dropped
+    assert nv.pread(a) is None
+
+
+def test_assumption1_prefix_of_same_line_stores():
+    """Persistent content of a line is always a prefix of its stores."""
+    for seed in range(40):
+        nv = NVRAM(1)
+        a = nv.alloc_region(8, "r")
+        for i in range(4):
+            nv.write(a + i, ("v", i))
+        nv.crash(mode="random", seed=seed)
+        vals = [nv.pread(a + i) for i in range(4)]
+        # must be a prefix: once None is seen, the rest are None
+        seen_none = False
+        for v, i in zip(vals, range(4)):
+            if v is None:
+                seen_none = True
+            else:
+                assert not seen_none, f"non-prefix survival: {vals}"
+                assert v == ("v", i)
+
+
+def test_clwb_invalidates_and_post_flush_access_is_counted():
+    nv = NVRAM(1)
+    a = nv.alloc_region(8, "r")
+    nv.write(a, 1)
+    assert nv.total_stats().post_flush_accesses == 0
+    nv.flush(a)
+    nv.fence()
+    assert nv.read(a) == 1        # miss: line was invalidated by CLWB
+    assert nv.total_stats().post_flush_accesses == 1
+    assert nv.read(a) == 1        # now cached again
+    assert nv.total_stats().post_flush_accesses == 1
+
+
+def test_movnti_bypasses_cache():
+    nv = NVRAM(1)
+    a = nv.alloc_region(8, "r")
+    nv.write(a, "old")
+    nv.flush(a)
+    nv.fence()
+    before = nv.total_stats().post_flush_accesses
+    nv.movnti(a, "new")           # no fetch of the invalidated line
+    nv.fence()
+    assert nv.total_stats().post_flush_accesses == before
+    nv.crash(mode="min")
+    assert nv.pread(a) == "new"
+
+
+def test_movnti_needs_fence():
+    nv = NVRAM(1)
+    a = nv.alloc_region(8, "r")
+    nv.movnti(a, 7)
+    nv.crash(mode="min")
+    assert nv.pread(a) is None
+
+
+def test_nt_store_prefix_on_crash():
+    """NT stores to one line survive as a prefix in issue order."""
+    for seed in range(30):
+        nv = NVRAM(1)
+        a = nv.alloc_region(8, "r")
+        for i in range(4):
+            nv.movnti(a + i, i)
+        nv.crash(mode="random", seed=seed)
+        vals = [nv.pread(a + i) for i in range(4)]
+        seen_none = False
+        for v in vals:
+            if v is None:
+                seen_none = True
+            else:
+                assert not seen_none, f"NT stores tore: {vals}"
+
+
+def test_cas_semantics():
+    nv = NVRAM(1)
+    a = nv.alloc_region(8, "r")
+    nv.write(a, 5)
+    assert not nv.cas(a, 4, 9)
+    assert nv.read(a) == 5
+    assert nv.cas(a, 5, 9)
+    assert nv.read(a) == 9
+
+
+def test_volatile_space_wiped_on_crash():
+    nv = NVRAM(1)
+    a = nv.alloc_region(8, "v", persistent=False)
+    nv.write(a, 42)
+    assert nv.read(a) == 42
+    nv.crash(mode="max")
+    assert nv.read(a) is None
+
+
+def test_interleaved_flush_fence_absolute_indices():
+    """Regression: stale pending flush entries must stay valid when other
+    fences apply and trim the same line's log (the compaction bug)."""
+    nv = NVRAM(2)
+    a = nv.alloc_region(8, "r")
+    nv.set_tid(0)
+    nv.write(a, 1)
+    nv.flush(a)             # t0 pending: stores [1]
+    nv.set_tid(1)
+    nv.write(a, 2)
+    nv.flush(a)
+    nv.fence()              # t1 persists prefix [1,2]
+    nv.set_tid(0)
+    nv.write(a, 3)
+    nv.fence()              # t0's stale entry must not clobber store 3
+    assert nv.read(a) == 3
+    nv.flush(a)
+    nv.fence()
+    nv.crash(mode="min")
+    assert nv.pread(a) == 3
+
+
+def test_time_accounting_post_flush_expensive():
+    nv = NVRAM(1)
+    a = nv.alloc_region(8, "r")
+    nv.write(a, 1)
+    t0 = nv.total_stats().time_ns
+    nv.read(a)                      # cache hit
+    hit_cost = nv.total_stats().time_ns - t0
+    nv.flush(a)
+    nv.fence()
+    t1 = nv.total_stats().time_ns
+    nv.read(a)                      # NVRAM-latency miss
+    miss_cost = nv.total_stats().time_ns - t1
+    assert miss_cost > 50 * hit_cost

@@ -1,0 +1,79 @@
+"""The paper's two headline metrics, asserted exactly.
+
+* fences per update operation: 1 for the four new queues (the Cohen et al.
+  lower bound), more for DurableMSQ, many for IzraelevitzQ;
+* post-flush accesses: **zero** for the second-amendment queues
+  (OptUnlinkedQ / OptLinkedQ), nonzero for everything else durable.
+"""
+import pytest
+
+from repro.core import ALL_QUEUES, QueueHarness
+
+OPTIMAL = ["UnlinkedQ", "LinkedQ", "OptUnlinkedQ", "OptLinkedQ"]
+ZERO_POST_FLUSH = ["OptUnlinkedQ", "OptLinkedQ"]
+
+
+def _run_ops(name, n_ops=200, area_nodes=1024):
+    h = QueueHarness(ALL_QUEUES[name], nthreads=1, area_nodes=area_nodes)
+    q = h.queue
+    base = h.nvram.total_stats()
+    for i in range(n_ops // 2):
+        q.enqueue(0, i)
+    for i in range(n_ops // 2):
+        assert q.dequeue(0) == i
+    delta = h.nvram.total_stats().minus(base)
+    return h, delta
+
+
+@pytest.mark.parametrize("name", OPTIMAL)
+def test_one_fence_per_op(name):
+    n_ops = 200
+    h, d = _run_ops(name, n_ops)
+    # allocator area setup adds one amortized fence; allow tiny slack
+    assert d.fences <= n_ops + 2, f"{name}: {d.fences} fences for {n_ops} ops"
+    assert d.fences >= n_ops, f"{name}: missing fences ({d.fences})"
+
+
+def test_durable_msq_more_fences():
+    n_ops = 200
+    _, d = _run_ops("DurableMSQ", n_ops)
+    # 2 per enqueue + 1 per dequeue = 1.5/op
+    assert d.fences >= int(1.5 * n_ops)
+
+
+def test_izraelevitz_many_fences():
+    n_ops = 100
+    _, d = _run_ops("IzraelevitzQ", n_ops)
+    assert d.fences >= 4 * n_ops   # one per shared access
+
+
+@pytest.mark.parametrize("name", ZERO_POST_FLUSH)
+def test_zero_post_flush_accesses(name):
+    _, d = _run_ops(name, n_ops=400, area_nodes=64)  # force node reuse too
+    assert d.post_flush_accesses == 0, (
+        f"{name}: {d.post_flush_accesses} accesses to flushed content")
+
+
+@pytest.mark.parametrize("name", ["UnlinkedQ", "LinkedQ", "DurableMSQ"])
+def test_first_amendment_has_post_flush_accesses(name):
+    _, d = _run_ops(name, n_ops=200)
+    assert d.post_flush_accesses > 0, (
+        f"{name} unexpectedly avoids flushed content -- metric broken?")
+
+
+@pytest.mark.parametrize("name", ZERO_POST_FLUSH)
+def test_zero_post_flush_multithreaded(name):
+    h = QueueHarness(ALL_QUEUES[name], nthreads=4, area_nodes=256)
+    plans = [[("enq", (t, i)) for i in range(30)] + [("deq", None)] * 30
+             for t in range(4)]
+    res = h.run_scheduled(plans, seed=11)
+    assert not res.crashed
+    assert res.stats.post_flush_accesses == 0
+
+
+def test_opt_faster_than_durable_msq_simulated():
+    """The paper's bottom line: the second amendment wins on simulated time."""
+    _, d_opt = _run_ops("OptUnlinkedQ", 400)
+    _, d_dur = _run_ops("DurableMSQ", 400)
+    assert d_opt.time_ns < d_dur.time_ns, (
+        f"OptUnlinkedQ {d_opt.time_ns:.0f}ns !< DurableMSQ {d_dur.time_ns:.0f}ns")

@@ -1,0 +1,157 @@
+"""WAL / cursor / checkpoint substrate: the paper's guidelines at file
+granularity, including torn-write (crash-prefix) recovery."""
+import os
+import struct
+
+import numpy as np
+import pytest
+
+from repro.persist import CursorFile, WriteAheadLog
+from repro.checkpoint import DurableCheckpointer
+
+
+def test_wal_roundtrip(tmp_path):
+    p = str(tmp_path / "a.wal")
+    w = WriteAheadLog(p)
+    for i in range(10):
+        w.append(f"rec{i}".encode())
+    w.fence()
+    w.close()
+    assert [r.decode() for r in WriteAheadLog.replay(p)] == \
+        [f"rec{i}" for i in range(10)]
+
+
+def test_wal_group_commit_one_fence(tmp_path):
+    w = WriteAheadLog(str(tmp_path / "a.wal"))
+    for i in range(100):
+        w.append(b"x" * 50)
+    w.fence()
+    assert w.stats.fences == 1
+    assert w.stats.appends == 100
+    assert w.stats.reads_after_write == 0
+
+
+def test_wal_torn_tail_is_prefix(tmp_path):
+    p = str(tmp_path / "a.wal")
+    w = WriteAheadLog(p)
+    for i in range(5):
+        w.append(f"rec{i}".encode())
+    w.fence()
+    w.close()
+    # simulate a torn tail: truncate mid-record
+    size = os.path.getsize(p)
+    with open(p, "r+b") as f:
+        f.truncate(size - 3)
+    got = [r.decode() for r in WriteAheadLog.replay(p)]
+    assert got == [f"rec{i}" for i in range(4)]   # longest valid prefix
+
+
+def test_wal_corrupt_middle_stops_prefix(tmp_path):
+    p = str(tmp_path / "a.wal")
+    w = WriteAheadLog(p)
+    for i in range(5):
+        w.append(f"rec{i}".encode())
+    w.fence()
+    w.close()
+    with open(p, "r+b") as f:
+        f.seek(20)
+        f.write(b"\xff\xff")
+    got = WriteAheadLog.replay(p)
+    assert len(got) < 5
+
+
+def test_cursor_monotone_recovery(tmp_path):
+    p = str(tmp_path / "c.bin")
+    c = CursorFile(p)
+    for v in (3, 7, 11):
+        c.advance(v)
+    c.close()
+    assert CursorFile.recover(p) == 11
+
+
+def test_cursor_torn_write_falls_back(tmp_path):
+    """Destroying the most recent slot must expose the penultimate value
+    (the paper's two-record trick)."""
+    p = str(tmp_path / "c.bin")
+    c = CursorFile(p)
+    c.advance(5)
+    c.advance(9)
+    c.close()
+    # seq=2 went to slot 0; corrupt it
+    with open(p, "r+b") as f:
+        f.seek(0)
+        f.write(b"\xde\xad\xbe\xef")
+    v = CursorFile.recover(p)
+    assert v == 5
+
+
+def test_cursor_max_across_workers(tmp_path):
+    paths = []
+    for w, v in enumerate((4, 9, 2)):
+        p = str(tmp_path / f"c{w}.bin")
+        c = CursorFile(p)
+        c.advance(v)
+        c.close()
+        paths.append(p)
+    assert CursorFile.recover_max(paths) == 9
+
+
+# ------------------------------------------------------------- checkpointer
+def _tree(step):
+    return {"w": np.full((4, 4), float(step)), "b": np.arange(3.0) + step,
+            "nested": [{"x": np.ones((2,)) * step}]}
+
+
+def test_checkpoint_save_restore(tmp_path):
+    ck = DurableCheckpointer(str(tmp_path), background=False)
+    ck.save(10, {0: _tree(10)}, meta={"data_cursor": 3})
+    step, shards, meta = ck.restore_latest()
+    assert step == 10 and meta["data_cursor"] == 3
+    np.testing.assert_array_equal(shards[0]["w"], _tree(10)["w"])
+    assert shards[0]["nested"][0]["x"][0] == 10
+
+
+def test_checkpoint_latest_wins_and_gc(tmp_path):
+    ck = DurableCheckpointer(str(tmp_path), keep=2, background=False)
+    for s in (10, 20, 30):
+        ck.save(s, {0: _tree(s)})
+    step, shards, _ = ck.restore_latest()
+    assert step == 30
+    steps = [s for s, _ in ck.scan()]
+    assert steps == [20, 30]     # keep=2
+
+
+def test_checkpoint_uncommitted_ignored(tmp_path):
+    """A crash mid-save leaves shards without COMMIT: recovery must ignore
+    it (the un-`linked` node rule)."""
+    ck = DurableCheckpointer(str(tmp_path), background=False)
+    ck.save(10, {0: _tree(10)})
+    # simulate crash during save of step 20: shard written, no COMMIT
+    ck._write_shard(20, 0, _tree(20))
+    step, shards, _ = ck.restore_latest()
+    assert step == 10
+    assert shards[0]["w"][0, 0] == 10.0
+
+
+def test_checkpoint_torn_commit_ignored(tmp_path):
+    ck = DurableCheckpointer(str(tmp_path), background=False)
+    ck.save(10, {0: _tree(10)})
+    ck._write_shard(20, 0, _tree(20))
+    with open(os.path.join(str(tmp_path), "step_00000020", "COMMIT"),
+              "wb") as f:
+        f.write(b"\x01\x02garbage")
+    step, _, _ = ck.restore_latest()
+    assert step == 10
+
+
+def test_checkpoint_one_commit_fence_per_save(tmp_path):
+    ck = DurableCheckpointer(str(tmp_path), background=False)
+    ck.save(1, {0: _tree(1), 1: _tree(2), 2: _tree(3)})   # 3 shards
+    assert ck.commit_fences == 1
+
+
+def test_checkpoint_background_async(tmp_path):
+    ck = DurableCheckpointer(str(tmp_path), background=True)
+    ck.save(5, {0: _tree(5)})
+    ck.wait()
+    assert ck.restore_latest()[0] == 5

@@ -1,0 +1,182 @@
+"""Exactly-once data delivery + durable serving + train crash-restart +
+elastic/compression units."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.data import DurableShardQueue, TokenSource
+from repro.serving import DurableRequestQueue, ServeEngine
+from repro.configs import reduced_config
+from repro.launch.elastic import StragglerPolicy, factorize_mesh, plan_remesh
+
+
+def test_shard_queue_order_and_recovery(tmp_path):
+    q = DurableShardQueue(str(tmp_path))
+    q.enqueue_shards([{"shard": i} for i in range(10)])
+    seen = []
+    for _ in range(4):
+        s = q.next_shard()
+        seen.append(s["shard"])
+    # commit only the first three
+    q.commit_consumed(2)
+    q.close()
+    # crash: new process view
+    q2 = DurableShardQueue(str(tmp_path))
+    resume = q2.recover()
+    assert resume == 3
+    nxt = q2.next_shard()
+    assert nxt["shard"] == 3, "uncommitted shard must be re-delivered"
+    q2.close()
+
+
+def test_exactly_once_across_crash(tmp_path):
+    """Effective (committed) consumption history has no gaps and no repeats
+    across a crash."""
+    q = DurableShardQueue(str(tmp_path))
+    q.enqueue_shards([{"shard": i} for i in range(8)])
+    committed = []
+    for i in range(5):
+        s = q.next_shard()
+        if i < 3:                       # only 3 consumptions get committed
+            q.commit_consumed(s["_queue_index"])
+            committed.append(s["shard"])
+    q.close()                           # crash after
+    q2 = DurableShardQueue(str(tmp_path))
+    q2.recover()
+    while True:
+        s = q2.next_shard()
+        if s is None:
+            break
+        q2.commit_consumed(s["_queue_index"])
+        committed.append(s["shard"])
+    assert committed == list(range(8))   # exactly once, in order
+    q2.close()
+
+
+def test_serving_durable_roundtrip(tmp_path):
+    cfg = reduced_config("musicgen-medium")
+    # musicgen is embed_stub for train, but serving uses token ids; use a
+    # token arch instead for the engine test:
+    cfg = reduced_config("yi-6b")
+    q = DurableRequestQueue(str(tmp_path))
+    reqs = [{"id": f"r{i}", "prompt": [1 + i, 2, 3]} for i in range(6)]
+    q.submit(reqs)
+    eng = ServeEngine(cfg, q, max_len=32)
+    n = eng.run(batch_size=4, max_new=4)
+    assert n == 6
+    resps = q.responses()
+    assert sorted(r["id"] for r in resps) == sorted(r["id"] for r in reqs)
+    assert all(len(r["tokens"]) == 4 for r in resps)
+    q.close()
+
+
+def test_serving_crash_replays_pending(tmp_path):
+    cfg = reduced_config("yi-6b")
+    q = DurableRequestQueue(str(tmp_path))
+    q.submit([{"id": f"r{i}", "prompt": [i + 1, 5]} for i in range(6)])
+    eng = ServeEngine(cfg, q, max_len=32)
+    eng.serve_once(batch_size=2, max_new=2)      # 2 responded
+    q.close()                                    # crash
+    q2 = DurableRequestQueue(str(tmp_path))
+    pending = q2.recover()
+    assert pending == 4
+    eng2 = ServeEngine(cfg, q2, max_len=32)
+    eng2.run(batch_size=4, max_new=2)
+    assert len(q2.responses()) == 6
+    ids = [r["id"] for r in q2.responses()]
+    assert len(set(ids)) == 6
+    q2.close()
+
+
+@pytest.mark.slow
+def test_train_crash_restart_end_to_end(tmp_path):
+    """Real abrupt-exit crash + restart through the driver subprocess."""
+    env = dict(os.environ, PYTHONPATH="src")
+    args = [sys.executable, "-m", "repro.launch.train", "--arch", "yi-6b",
+            "--steps", "12", "--ckpt-every", "4",
+            "--ckpt-dir", str(tmp_path), "--batch", "2", "--seq-len", "32"]
+    p1 = subprocess.run(args + ["--crash-at", "6"], env=env,
+                        capture_output=True, text=True, cwd="/root/repo")
+    assert p1.returncode == 42, p1.stderr[-2000:]
+    assert "checkpointed" in p1.stdout
+    p2 = subprocess.run(args, env=env, capture_output=True, text=True,
+                        cwd="/root/repo")
+    assert p2.returncode == 0, p2.stderr[-2000:]
+    assert "[recovery] resumed from step 4" in p2.stdout
+    assert "done: 12 steps" in p2.stdout
+
+
+# ----------------------------------------------------------- elastic planning
+def test_factorize_mesh():
+    assert factorize_mesh(512, 16) == (2, 16, 16)
+    assert factorize_mesh(256, 16) == (1, 16, 16)
+    assert factorize_mesh(100, 16) is None
+
+
+def test_plan_remesh_shrinks_data_axis():
+    plan = plan_remesh(n_healthy=120, old=(2, 16, 16), chips_per_host=4)
+    pods, data, model = plan.new_mesh
+    assert model == 16                   # TP pinned
+    assert pods * data * model <= 480
+    assert plan.restart_from_checkpoint
+    assert any("optimizer" in m for m in plan.moves)
+
+
+def test_straggler_policy():
+    pol = StragglerPolicy(deadline_ms=100, min_participation=0.75)
+    out = pol.step_outcome([10, 20, 50, 300])
+    assert out["action"] == "proceed"
+    assert abs(out["grad_scale"] - 4 / 3) < 1e-6
+    out2 = pol.step_outcome([10, 300, 300, 300])
+    assert out2["action"] == "wait_full"
+    misses = {}
+    for _ in range(3):
+        evict = pol.track_misses(misses, {"h0": 10, "h1": 500})
+    assert evict == ["h1"]
+
+
+# ------------------------------------------------------- gradient compression
+def test_grad_compression_error_feedback():
+    import jax.numpy as jnp
+    from repro.distributed.collectives import (compress_grads,
+                                               compressed_bytes,
+                                               decompress_grads,
+                                               init_error_feedback)
+    rng = np.random.RandomState(0)
+    grads = {"a": jnp.asarray(rng.randn(64, 64), jnp.float32),
+             "b": jnp.asarray(rng.randn(256), jnp.float32)}
+    err = init_error_feedback(grads)
+    # accumulated bf16-compressed grads with error feedback converge to the
+    # true running sum (the EF guarantee)
+    total_true = {k: np.zeros(v.shape, np.float32) for k, v in grads.items()}
+    total_comp = {k: np.zeros(v.shape, np.float32) for k, v in grads.items()}
+    for step in range(30):
+        c, err = compress_grads(grads, err, method="bf16")
+        d = decompress_grads(c)
+        for k in grads:
+            total_true[k] += np.asarray(grads[k])
+            total_comp[k] += np.asarray(d[k])
+    for k in grads:
+        err_now = np.abs(total_comp[k] - total_true[k]).max()
+        assert err_now < 0.05, f"error feedback diverged: {err_now}"
+    # wire size halves
+    c, _ = compress_grads(grads, init_error_feedback(grads), "bf16")
+    assert compressed_bytes(c) * 2 == sum(
+        v.size * 4 for v in grads.values())
+
+
+def test_grad_compression_int8():
+    import jax.numpy as jnp
+    from repro.distributed.collectives import (compress_grads,
+                                               decompress_grads,
+                                               init_error_feedback)
+    rng = np.random.RandomState(1)
+    grads = {"w": jnp.asarray(rng.randn(128, 32), jnp.float32)}
+    c, err = compress_grads(grads, init_error_feedback(grads), "int8")
+    d = decompress_grads(c)
+    rel = np.abs(np.asarray(d["w"]) - np.asarray(grads["w"])).max() \
+        / np.abs(np.asarray(grads["w"])).max()
+    assert rel < 0.02

@@ -1,0 +1,116 @@
+"""Hypothesis property tests: durable linearizability under randomized
+workloads, interleavings, crash points and crash modes -- for every durable
+queue. These are the system's core invariants:
+
+  P1. no loss: completed enqueues survive a crash unless dequeued;
+  P2. no duplication / invention: recovered items are exactly linked items;
+  P3. FIFO: recovered order = link order; removals form a prefix;
+  P4. one fence per update op for the four new queues;
+  P5. zero post-flush accesses for the second-amendment queues.
+"""
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import (ALL_QUEUES, DURABLE_QUEUES, QueueHarness,
+                        check_durable_linearizability, split_at_crash)
+
+QNAMES = sorted(DURABLE_QUEUES)
+
+
+def _build_plans(opseq, nthreads):
+    plans = [[] for _ in range(nthreads)]
+    counters = [0] * nthreads
+    for (t, is_enq) in opseq:
+        t = t % nthreads
+        if is_enq:
+            plans[t].append(("enq", (t, counters[t])))
+            counters[t] += 1
+        else:
+            plans[t].append(("deq", None))
+    return plans
+
+
+op_strategy = st.lists(
+    st.tuples(st.integers(0, 2), st.booleans()), min_size=4, max_size=40)
+
+
+@settings(max_examples=30, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(name=st.sampled_from(QNAMES), opseq=op_strategy,
+       seed=st.integers(0, 10_000), crash_frac=st.floats(0.05, 0.95),
+       mode=st.sampled_from(["min", "random", "max"]))
+def test_durable_linearizability_property(name, opseq, seed, crash_frac, mode):
+    nthreads = 3
+    plans = _build_plans(opseq, nthreads)
+    # discover total steps, then crash somewhere inside
+    probe = QueueHarness(DURABLE_QUEUES[name], nthreads, area_nodes=128)
+    from repro.core.scheduler import Scheduler
+    sched = Scheduler(probe.nvram, seed=seed)
+    sched.run([probe.make_worker(t, p) for t, p in enumerate(plans)])
+    total = max(sched.steps, 2)
+
+    h = QueueHarness(DURABLE_QUEUES[name], nthreads, area_nodes=128)
+    res = h.run_scheduled(plans, seed=seed,
+                          crash_at=max(1, int(total * crash_frac)))
+    pre_events, _ = split_at_crash(h.events)
+    pre_ops = list(res.ops)
+    h.crash_and_recover(mode=mode, seed=seed)
+    recovered = h.queue.drain(0)
+    ok, why = check_durable_linearizability(pre_ops, pre_events, recovered)
+    assert ok, f"{name}: {why} (recovered={recovered!r})"
+
+
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(name=st.sampled_from(["UnlinkedQ", "LinkedQ", "OptUnlinkedQ",
+                             "OptLinkedQ"]),
+       n_ops=st.integers(2, 60))
+def test_fence_lower_bound_property(name, n_ops):
+    """P4: exactly one fence per completed update op (single-threaded, so no
+    helping-induced extras; allocator-area fences amortize to <= 2 extra)."""
+    h = QueueHarness(ALL_QUEUES[name], nthreads=1, area_nodes=4096)
+    base = h.nvram.total_stats()
+    for i in range(n_ops):
+        if i % 3 == 2:
+            h.queue.dequeue(0)
+        else:
+            h.queue.enqueue(0, i)
+    d = h.nvram.total_stats().minus(base)
+    assert n_ops <= d.fences <= n_ops + 2
+
+
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(name=st.sampled_from(["OptUnlinkedQ", "OptLinkedQ"]),
+       opseq=op_strategy, seed=st.integers(0, 10_000))
+def test_zero_post_flush_property(name, opseq, seed):
+    """P5 under arbitrary concurrent interleavings."""
+    nthreads = 3
+    h = QueueHarness(ALL_QUEUES[name], nthreads, area_nodes=128)
+    res = h.run_scheduled(_build_plans(opseq, nthreads), seed=seed)
+    assert res.stats.post_flush_accesses == 0
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(opseq=op_strategy, seed=st.integers(0, 1000))
+def test_queues_agree_with_each_other(opseq, seed):
+    """All queues must produce the identical dequeue results under the SAME
+    deterministic schedule seed... they take different step counts, so we
+    compare against the sequential-spec outcome per thread plan instead:
+    single-threaded runs of the same plan must agree exactly."""
+    plan = _build_plans(opseq, 1)[0]
+    outs = {}
+    for name in QNAMES:
+        h = QueueHarness(DURABLE_QUEUES[name], 1, area_nodes=128)
+        got = []
+        for kind, item in plan:
+            if kind == "enq":
+                h.queue.enqueue(0, item)
+                got.append(("enq", item))
+            else:
+                got.append(("deq", h.queue.dequeue(0)))
+        outs[name] = got
+    vals = list(outs.values())
+    for name, v in outs.items():
+        assert v == vals[0], f"{name} diverges from {QNAMES[0]}"

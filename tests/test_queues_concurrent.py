@@ -1,0 +1,63 @@
+"""Concurrent (scheduler-interleaved) correctness + lock-freedom checks."""
+import pytest
+
+from repro.core import ALL_QUEUES, QueueHarness, check_durable_linearizability
+
+
+def _mixed_plans(nthreads, per_thread):
+    plans = []
+    for t in range(nthreads):
+        p = []
+        for i in range(per_thread):
+            p.append(("enq", (t, i)))
+            p.append(("deq", None))
+        plans.append(p)
+    return plans
+
+
+@pytest.mark.parametrize("name", sorted(ALL_QUEUES))
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_concurrent_no_loss_no_dup(name, seed):
+    """Across arbitrary interleavings: every enqueued item is dequeued
+    exactly once (after draining), FIFO per linearization order."""
+    nthreads = 3
+    h = QueueHarness(ALL_QUEUES[name], nthreads=nthreads, area_nodes=512)
+    plans = _mixed_plans(nthreads, 10)
+    res = h.run_scheduled(plans, seed=seed)
+    assert not res.crashed
+    rest = h.queue.drain(0)
+    got = [r.item for r in res.ops if r.kind == "deq" and r.item is not None]
+    enqueued = [r.item for r in res.ops if r.kind == "enq"]
+    assert sorted(got + rest) == sorted(enqueued)
+    # dequeue order must follow link (volatile linearization) order
+    link_order = [ev[1] for ev in res.events if ev[0] == "enq"]
+    deq_order = [ev[1] for ev in res.events if ev[0] == "deq"]
+    deq_set = set(deq_order)
+    assert [x for x in link_order if x in deq_set] == deq_order
+
+
+@pytest.mark.parametrize("name", ["OptUnlinkedQ", "OptLinkedQ"])
+def test_heavy_contention(name, seed=5):
+    nthreads = 6
+    h = QueueHarness(ALL_QUEUES[name], nthreads=nthreads, area_nodes=512)
+    plans = _mixed_plans(nthreads, 8)
+    res = h.run_scheduled(plans, seed=seed)
+    assert res.ops_completed == sum(len(p) for p in plans)
+    assert res.stats.post_flush_accesses == 0
+
+
+@pytest.mark.parametrize("name", sorted(ALL_QUEUES))
+def test_lock_freedom_bounded_steps(name):
+    """System-wide progress: all ops complete within a bounded number of
+    scheduler steps even under adversarial random scheduling (§8)."""
+    nthreads = 4
+    h = QueueHarness(ALL_QUEUES[name], nthreads=nthreads, area_nodes=512)
+    plans = _mixed_plans(nthreads, 5)
+    total_ops = sum(len(p) for p in plans)
+    # generous bound: if something livelocks/deadlocks, max_steps triggers
+    from repro.core.scheduler import Scheduler
+    sched = Scheduler(h.nvram, seed=13, policy="random", max_steps=400_000)
+    workers = [h.make_worker(t, plans[t]) for t in range(nthreads)]
+    crashed = sched.run(workers)
+    assert not crashed, "hit step bound: no progress (lock-freedom violated?)"
+    assert sum(1 for r in h.ops if r.completed) == total_ops

@@ -1,0 +1,55 @@
+"""Sequential FIFO semantics + persist-op accounting for every queue."""
+import pytest
+
+from repro.core import ALL_QUEUES, DURABLE_QUEUES, QueueHarness
+
+
+@pytest.mark.parametrize("name", sorted(ALL_QUEUES))
+def test_fifo_order_single_thread(name):
+    h = QueueHarness(ALL_QUEUES[name], nthreads=1, area_nodes=64)
+    q = h.queue
+    n = 50
+    for i in range(n):
+        q.enqueue(0, ("t0", i))
+    out = [q.dequeue(0) for _ in range(n)]
+    assert out == [("t0", i) for i in range(n)]
+    assert q.dequeue(0) is None
+
+
+@pytest.mark.parametrize("name", sorted(ALL_QUEUES))
+def test_interleaved_enq_deq(name):
+    h = QueueHarness(ALL_QUEUES[name], nthreads=1, area_nodes=64)
+    q = h.queue
+    model = []
+    import random
+    rng = random.Random(7)
+    for i in range(300):
+        if rng.random() < 0.55:
+            q.enqueue(0, i)
+            model.append(i)
+        else:
+            got = q.dequeue(0)
+            want = model.pop(0) if model else None
+            assert got == want
+    assert q.drain(0) == model
+
+
+@pytest.mark.parametrize("name", sorted(DURABLE_QUEUES))
+def test_empty_dequeue_returns_none(name):
+    h = QueueHarness(DURABLE_QUEUES[name], nthreads=1, area_nodes=64)
+    assert h.queue.dequeue(0) is None
+    h.queue.enqueue(0, "x")
+    assert h.queue.dequeue(0) == "x"
+    assert h.queue.dequeue(0) is None
+
+
+def test_node_reuse_through_ssmem():
+    """Allocator must recycle retired nodes (epochs advance)."""
+    h = QueueHarness(ALL_QUEUES["OptUnlinkedQ"], nthreads=1, area_nodes=64)
+    q = h.queue
+    # way more ops than area_nodes: must not exhaust if reuse works
+    for i in range(1000):
+        q.enqueue(0, i)
+        assert q.dequeue(0) == i
+    areas = h.mem.area_addrs()
+    assert len(areas) <= 4, f"allocator leaked: {len(areas)} areas"

@@ -1,0 +1,110 @@
+"""Units for the dry-run analysis stack: HLO walker exactness, analytic
+model sanity, roofline-term math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze
+from repro.launch.analytic import analytic_bytes, model_flops
+from repro.models.config import SHAPES
+from repro.configs import get_config
+
+
+def test_walker_counts_scan_trips_exactly():
+    n = 256
+    x = jax.ShapeDtypeStruct((n, n), jnp.float32)
+
+    def scanned(x):
+        return jax.lax.scan(lambda c, _: (c @ c, None), x, None, length=8)[0]
+
+    def unrolled(x):
+        for _ in range(8):
+            x = x @ x
+        return x
+
+    ref = 8 * 2 * n ** 3
+    for f in (scanned, unrolled):
+        c = jax.jit(f).lower(x).compile()
+        got = analyze(c.as_text()).flops
+        assert abs(got - ref) / ref < 1e-6, (f.__name__, got, ref)
+
+
+def test_walker_vs_xla_raw_discrepancy():
+    """Documents WHY we do not use compiled.cost_analysis() directly."""
+    n = 128
+    x = jax.ShapeDtypeStruct((n, n), jnp.float32)
+
+    def scanned(x):
+        return jax.lax.scan(lambda c, _: (c @ c, None), x, None, length=16)[0]
+
+    c = jax.jit(scanned).lower(x).compile()
+    xla_flops = float(c.cost_analysis().get("flops", 0))
+    walker = analyze(c.as_text()).flops
+    assert walker > 10 * xla_flops   # XLA counts the body once
+
+
+def test_walker_nested_scans_multiply():
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def nested(x):
+        def outer(c, _):
+            def inner(c2, _):
+                return c2 @ c2, None
+            c, _ = jax.lax.scan(inner, c, None, length=3)
+            return c, None
+        return jax.lax.scan(outer, x, None, length=5)[0]
+
+    c = jax.jit(nested).lower(x).compile()
+    got = analyze(c.as_text()).flops
+    ref = 15 * 2 * 64 ** 3
+    assert abs(got - ref) / ref < 1e-6
+
+
+def test_analytic_decode_dominated_by_cache_and_weights():
+    cfg = get_config("command-r-plus-104b")
+    b = analytic_bytes(cfg, SHAPES["decode_32k"], 256)
+    assert b["kv_cache"] > 0 and b["weights"] > 0
+    assert b["kv_cache"] + b["weights"] > 0.8 * b["total"]
+
+
+def test_analytic_train_scales_with_tokens():
+    cfg = get_config("yi-6b")
+    t4k = analytic_bytes(cfg, SHAPES["train_4k"], 256)
+    pf = analytic_bytes(cfg, SHAPES["prefill_32k"], 256)
+    # same total token count (1M): prefill (1 pass) < train (3 passes + opt)
+    assert pf["total"] < t4k["total"]
+
+
+def test_model_flops_conventions():
+    cfg = get_config("yi-6b")
+    tr = model_flops(cfg, SHAPES["train_4k"])
+    pf = model_flops(cfg, SHAPES["prefill_32k"])
+    de = model_flops(cfg, SHAPES["decode_32k"])
+    D = 4096 * 256
+    assert abs(tr - 6 * cfg.n_active_params() * D) / tr < 1e-9
+    assert pf == pytest.approx(2 * cfg.n_active_params() * D, rel=1e-9)
+    assert de == pytest.approx(2 * cfg.n_active_params() * 128, rel=1e-9)
+
+
+def test_moe_model_flops_use_active_params():
+    cfg = get_config("deepseek-moe-16b")
+    assert cfg.n_active_params() < 0.25 * cfg.n_params()
+    tr = model_flops(cfg, SHAPES["train_4k"])
+    assert tr == pytest.approx(6 * cfg.n_active_params() * 4096 * 256,
+                               rel=1e-9)
+
+
+def test_roofline_terms_shape():
+    from benchmarks.roofline import roofline_terms
+    cell = {
+        "ok": True, "flops_per_device": 1e14,
+        "analytic_bytes_per_device": {"total": 1e12},
+        "collective_bytes_per_device": {"all-gather": 1e11},
+        "model_flops": 1e16, "n_chips": 256,
+    }
+    t = roofline_terms(cell)
+    # memory = 1.22 ms < collective = 2.0 ms
+    assert t["bottleneck"] == "collective"
+    assert t["compute_ms"] == pytest.approx(1e14 / 197e12 * 1e3)
+    assert 0 < t["roofline_fraction"] < 1

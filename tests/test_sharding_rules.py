@@ -1,0 +1,68 @@
+"""Sharding-rule unit tests (regression: the MoE/dense rule-order bug)."""
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.distributed.sharding import param_shardings
+from repro.launch.mesh import make_test_mesh
+from repro.launch.steps import abstract_params
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_test_mesh()
+
+
+def _spec(shardings, *path):
+    node = shardings
+    for p in path:
+        node = node[p]
+    return node.spec
+
+
+def test_moe_expert_weights_sharded_over_model(mesh):
+    """Regression: dense ffn/w1 rule must NOT shadow the MoE rule -- expert
+    dim goes on 'model' (EP), d on 'data' (FSDP)."""
+    params = abstract_params(get_config("dbrx-132b"))
+    sh = param_shardings(mesh, params)
+    spec = _spec(sh, "stack", "sub0", "ffn", "w1")
+    assert spec == P(None, "model", "data", None), spec
+    spec2 = _spec(sh, "stack", "sub0", "ffn", "w2")
+    assert spec2 == P(None, "model", None, "data"), spec2
+
+
+def test_dense_ffn_weights_tp_sharded(mesh):
+    params = abstract_params(get_config("yi-6b"))
+    sh = param_shardings(mesh, params)
+    assert _spec(sh, "stack", "sub0", "ffn", "w1") == P(None, "data", "model")
+    assert _spec(sh, "stack", "sub0", "ffn", "w2") == P(None, "model", "data")
+    assert _spec(sh, "stack", "sub0", "mixer", "wq") == P(None, "data", "model")
+    assert _spec(sh, "stack", "sub0", "mixer", "wo") == P(None, "model", "data")
+
+
+def test_norms_replicated(mesh):
+    params = abstract_params(get_config("yi-6b"))
+    sh = param_shardings(mesh, params)
+    assert _spec(sh, "final_norm") == P(None)
+    # stacked: leading period axis + the replicated feature dim
+    assert _spec(sh, "stack", "sub0", "norm1") == P(None, None)
+
+
+def test_no_fsdp_replicates_data_axis(mesh):
+    params = abstract_params(get_config("yi-6b"))
+    sh = param_shardings(mesh, params, fsdp=False)
+    assert _spec(sh, "stack", "sub0", "ffn", "w1") == P(None, None, "model")
+    assert _spec(sh, "embed") == P("model", None)
+
+
+def test_mamba_weights(mesh):
+    params = abstract_params(get_config("falcon-mamba-7b"))
+    sh = param_shardings(mesh, params)
+    assert _spec(sh, "stack", "sub0", "mixer", "in_proj") == \
+        P(None, "data", "model")
+    assert _spec(sh, "stack", "sub0", "mixer", "out_proj") == \
+        P(None, "model", "data")
+    assert _spec(sh, "stack", "sub0", "mixer", "A_log") == \
+        P(None, "model", None)
