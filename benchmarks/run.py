@@ -1,65 +1,86 @@
 """Benchmark harness -- one section per paper table/figure.
 
-  B1 (Fig. 2): five workloads x queue x thread count -> simulated throughput
-  B2 (§5/§6 accounting): fences/op + post-flush accesses/op per queue
+  B1 (Fig. 2, amended): workload x queue x thread count x **memory model**
+      -> simulated throughput (the B1' sweep; `eadr` / `cxl` columns show
+      how the paper's ranking shifts on other persistence platforms)
+  B2 (§5/§6 accounting): fences/op + post-flush accesses/op per queue,
+      per memory model
   B3 (§2.1): ONLL upper-bound construction accounting
   B4 (assignment): roofline terms per (arch x shape x mesh) from the
       dry-run artifacts (benchmarks/dryrun_results.jsonl if present)
 
-Prints ``name,us_per_call,derived`` CSV lines per the harness contract.
+Prints ``name,us_per_call,derived`` CSV lines per the harness contract, and
+(with ``--out``) writes the full row set to a CSV file (the CI artifact).
+
+Examples::
+
+  python benchmarks/run.py --smoke                    # CI smoke run
+  python benchmarks/run.py --ops 1000 --threads 1,2,4,8,16,32,64
+  python benchmarks/run.py --models eadr --workloads mixed5050
 """
 from __future__ import annotations
 
-import json
+import argparse
+import csv
 import os
 import sys
 
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import ALL_QUEUES, NVRAM, ONLL  # noqa: E402
+from repro.core import NVRAM, ONLL  # noqa: E402
 from benchmarks.workloads import run_workload   # noqa: E402
 
 DURABLE = ["DurableMSQ", "IzraelevitzQ", "NVTraverseQ", "UnlinkedQ",
            "LinkedQ", "OptUnlinkedQ", "OptLinkedQ"]
 WORKLOADS = ["mixed5050", "pairs", "producers", "consumers", "prodcons"]
+MODELS = ["optane-clwb", "eadr", "cxl"]
 
 
-def bench_fig2(ops_per_thread: int = 60) -> list:
+def bench_fig2(ops_per_thread: int, threads: list, models: list,
+               workloads: list, queues: list, engine: str) -> list:
     rows = []
-    print("# B1: Fig.2 workloads (simulated Optane latency model)")
+    print("# B1: Fig.2 workloads x memory models (simulated latency model)")
     print("name,us_per_call,derived")
-    for wl in WORKLOADS:
-        threads = [1, 2, 4, 8] if wl == "mixed5050" else [1, 8]
-        for nt in threads:
-            for q in DURABLE:
-                r = run_workload(q, wl, nt, ops_per_thread)
-                rows.append(r)
-                print(f"fig2/{wl}/t{nt}/{q},{r['us_per_op']:.3f},"
-                      f"mops={r['mops_per_s']:.3f}")
+    for wl in workloads:
+        # full thread sweep on the headline workload, endpoints elsewhere
+        tlist = threads if wl == "mixed5050" else \
+            sorted({threads[0], threads[-1]})
+        for model in models:
+            for nt in tlist:
+                for q in queues:
+                    r = run_workload(q, wl, nt, ops_per_thread,
+                                     model=model, engine=engine)
+                    rows.append(r)
+                    print(f"fig2/{wl}/{model}/t{nt}/{q},"
+                          f"{r['us_per_op']:.3f},"
+                          f"mops={r['mops_per_s']:.3f}")
     return rows
 
 
-def bench_persist_counts() -> list:
-    print("\n# B2: persist-op accounting (200 ops, single thread)")
+def bench_persist_counts(ops: int, models: list, queues: list,
+                         engine: str) -> list:
+    print(f"\n# B2: persist-op accounting ({ops} ops, single thread, "
+          "per memory model)")
     print("name,us_per_call,derived")
     rows = []
-    for q in DURABLE:
-        r = run_workload(q, "pairs", 1, 200)
-        rows.append(r)
-        print(f"counts/{q},{r['us_per_op']:.3f},"
-              f"fences_per_op={r['fences_per_op']:.2f};"
-              f"post_flush_per_op={r['post_flush_per_op']:.2f}")
+    for model in models:
+        for q in queues:
+            r = run_workload(q, "pairs", 1, ops, model=model, engine=engine)
+            rows.append(r)
+            print(f"counts/{model}/{q},{r['us_per_op']:.3f},"
+                  f"fences_per_op={r['fences_per_op']:.2f};"
+                  f"post_flush_per_op={r['post_flush_per_op']:.2f}")
     return rows
 
 
-def bench_onll() -> None:
+def bench_onll(n: int = 200) -> None:
     print("\n# B3: ONLL universal construction (upper bound, §2.1)")
     print("name,us_per_call,derived")
     nv = NVRAM(1)
     obj = ONLL(nv, 1, lambda s, o: (s + o, s + o), 0)
     base = nv.total_stats()
-    n = 200
-    for i in range(n):
+    for _ in range(n):
         obj.update(0, 1)
     d = nv.total_stats().minus(base)
     print(f"onll/update,{d.time_ns / n / 1e3:.3f},"
@@ -94,11 +115,59 @@ def bench_roofline(path: str = None) -> None:
               f"roofline_frac={t['roofline_fraction']:.3f}")
 
 
-def main() -> None:
-    bench_fig2()
-    bench_persist_counts()
-    bench_onll()
-    bench_roofline()
+def parse_args(argv=None) -> argparse.Namespace:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--ops", type=int, default=200,
+                    help="ops per thread (default 200; seed engine capped "
+                         "at ~60)")
+    ap.add_argument("--threads", default="1,2,4,8,16",
+                    help="comma-separated thread counts, 1..64")
+    ap.add_argument("--models", default=",".join(MODELS),
+                    help="comma-separated memory models "
+                         f"(default {','.join(MODELS)})")
+    ap.add_argument("--workloads", default=",".join(WORKLOADS))
+    ap.add_argument("--queues", default=",".join(DURABLE))
+    ap.add_argument("--engine", choices=["batched", "exact"],
+                    default="batched")
+    ap.add_argument("--out", default=None,
+                    help="write all B1/B2 rows to this CSV file")
+    ap.add_argument("--sections", default="b1,b2,b3,b4")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI run: 30 ops/thread, threads 1,4")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.ops = 30
+        args.threads = "1,4"
+    return args
+
+
+def main(argv=None) -> None:
+    args = parse_args(argv)
+    threads = sorted({int(t) for t in args.threads.split(",")})
+    models = args.models.split(",")
+    workloads = args.workloads.split(",")
+    queues = args.queues.split(",")
+    sections = set(args.sections.split(","))
+    rows = []
+    if "b1" in sections:
+        rows += bench_fig2(args.ops, threads, models, workloads, queues,
+                           args.engine)
+    if "b2" in sections:
+        rows += bench_persist_counts(args.ops, models, queues, args.engine)
+    if "b3" in sections:
+        bench_onll(args.ops)
+    if "b4" in sections:
+        bench_roofline()
+    if args.out:
+        if rows:
+            with open(args.out, "w", newline="") as f:
+                w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+                w.writeheader()
+                w.writerows(rows)
+            print(f"\n# wrote {len(rows)} rows to {args.out}")
+        else:
+            print(f"\n# warning: no CSV rows produced (sections "
+                  f"{sorted(sections)} emit none); {args.out} not written")
 
 
 if __name__ == "__main__":

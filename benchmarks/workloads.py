@@ -8,17 +8,26 @@ Five workloads following Figure 2:
   * ``prodcons``    -- 1/4 of threads dequeue-then-enqueue blocks, the rest
                        enqueue-then-dequeue (queue never drains)
 
-Throughput is simulated time (per-thread latency-model clocks under the
-deterministic scheduler; see repro.core.nvram for constants + citations):
-ops / max(thread clock).  The paper's claims are about *orderings and
-ratios*, which is what these reproduce.
+Each run is parameterized by a **memory model** (``optane-clwb`` / ``eadr``
+/ ``cxl``; see :mod:`repro.core.memmodel`) and an **engine**:
+
+  * ``batched`` (default) -- the clock-driven op-granularity executor over
+    the array-backed cost engine; thousands of ops/thread across 1..64
+    threads are practical;
+  * ``exact``   -- the OS-thread, per-primitive interleaving scheduler the
+    crash/linearizability tests use (slow; seed-era op counts only).
+
+Throughput is simulated time (per-thread latency-model clocks; see
+repro.core.nvram for constants + citations): ops / max(thread clock).  The
+paper's claims are about *orderings and ratios*, which is what these
+reproduce.
 """
 from __future__ import annotations
 
 import random
 from typing import Dict, List, Tuple
 
-from repro.core import ALL_QUEUES, QueueHarness
+from repro.core import ALL_QUEUES, QueueHarness, get_memory_model
 
 
 def _plan_5050(tid: int, n_ops: int, seed: int):
@@ -69,22 +78,30 @@ def make_plans(workload: str, nthreads: int, ops_per_thread: int,
 
 
 def run_workload(queue_name: str, workload: str, nthreads: int,
-                 ops_per_thread: int = 60, seed: int = 0) -> Dict[str, float]:
+                 ops_per_thread: int = 60, seed: int = 0,
+                 model: str = "optane-clwb",
+                 engine: str = "batched") -> Dict[str, float]:
+    mm = get_memory_model(model)
     h = QueueHarness(ALL_QUEUES[queue_name], nthreads=nthreads,
-                     area_nodes=4096)
+                     area_nodes=4096, model=mm)
     plans, prefill = make_plans(workload, nthreads, ops_per_thread, seed)
     # prefill outside the measured window
     for i in range(prefill):
         h.queue.enqueue(0, ("pre", i))
     base = h.nvram.total_stats()
     base_time = h.nvram.sim_time_ns()
-    res = h.run_scheduled(plans, seed=seed)
+    if engine == "batched":
+        res = h.run_batched(plans)
+    elif engine == "exact":
+        res = h.run_scheduled(plans, seed=seed)
+    else:
+        raise ValueError(f"unknown engine {engine!r}")
     d = h.nvram.total_stats().minus(base)
     ops = res.ops_completed
     span = h.nvram.sim_time_ns() - base_time
     return {
         "queue": queue_name, "workload": workload, "threads": nthreads,
-        "ops": ops,
+        "model": mm.name, "engine": engine, "ops": ops,
         "mops_per_s": ops / max(span, 1) * 1e3,
         "us_per_op": span / max(ops, 1) / 1e3,
         "fences_per_op": d.fences / max(ops, 1),

@@ -26,7 +26,7 @@ import shutil
 import struct
 import threading
 import zlib
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 

@@ -17,8 +17,11 @@ OptUnlinkedQ (2nd amend.) 1                       **0**
 OptLinkedQ   (2nd amend.) 1                       **0**
 ========================  ======================  ==========================
 """
+from .memmodel import (MEMORY_MODELS, MemoryModel, OPTANE_CLWB, EADR,
+                       CXL_MEM, get_memory_model)
 from .nvram import NVRAM, LINE_WORDS, Stats, ThreadCrashed
-from .scheduler import Scheduler
+from .nvram_ref import ReferenceNVRAM
+from .scheduler import ClockScheduler, Scheduler
 from .ssmem import SSMem, VolatileAlloc
 from .queue_base import NULL, QueueAlgorithm
 from .msq import MSQueue
@@ -33,10 +36,11 @@ from .harness import (ALL_QUEUES, DURABLE_QUEUES, QueueHarness,
                       check_durable_linearizability, split_at_crash)
 
 __all__ = [
-    "NVRAM", "LINE_WORDS", "Stats", "ThreadCrashed", "Scheduler", "SSMem",
-    "VolatileAlloc", "NULL", "QueueAlgorithm", "MSQueue", "DurableMSQueue",
-    "IzraelevitzQueue", "NVTraverseQueue", "UnlinkedQueue", "LinkedQueue",
-    "OptUnlinkedQueue", "OptLinkedQueue", "ONLL", "ALL_QUEUES",
-    "DURABLE_QUEUES", "QueueHarness", "check_durable_linearizability",
-    "split_at_crash",
+    "NVRAM", "ReferenceNVRAM", "LINE_WORDS", "Stats", "ThreadCrashed",
+    "Scheduler", "ClockScheduler", "SSMem", "VolatileAlloc", "NULL",
+    "QueueAlgorithm", "MSQueue", "DurableMSQueue", "IzraelevitzQueue",
+    "NVTraverseQueue", "UnlinkedQueue", "LinkedQueue", "OptUnlinkedQueue",
+    "OptLinkedQueue", "ONLL", "ALL_QUEUES", "DURABLE_QUEUES", "QueueHarness",
+    "check_durable_linearizability", "split_at_crash", "MemoryModel",
+    "MEMORY_MODELS", "OPTANE_CLWB", "EADR", "CXL_MEM", "get_memory_model",
 ]

@@ -18,7 +18,7 @@ flushed head line and the flushed node content.
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any
 
 from .nvram import LINE_WORDS, NVRAM
 from .queue_base import NULL, QueueAlgorithm, alloc_root_lines
@@ -44,9 +44,9 @@ class DurableMSQueue(QueueAlgorithm):
             nv.write_full_line(dummy, [None, NULL, 0, 0, 0, 0, 0, 0])
             nv.write(self.HEAD, dummy)
             nv.write(self.TAIL, dummy)
-            nv.flush(dummy)
-            nv.flush(self.HEAD)
-            nv.fence()
+            self.pflush(dummy)
+            self.pflush(self.HEAD)
+            self.pfence()
 
     # ------------------------------------------------------------------ ops
     def enqueue(self, tid: int, item: Any) -> None:
@@ -54,22 +54,22 @@ class DurableMSQueue(QueueAlgorithm):
         self.mem.op_begin(tid)
         node = self.mem.alloc(tid)
         nv.write_full_line(node, [item, NULL, 0, 0, 0, 0, 0, 0])
-        nv.flush(node)
-        nv.fence()                       # fence #1: node content durable
+        self.pflush(node)
+        self.pfence()                       # fence #1: node content durable
         while True:
             tail = nv.read(self.TAIL)
             nxt = nv.read(tail + NEXT)
             if nxt == NULL:
                 if nv.cas(tail + NEXT, NULL, node):
                     self._ev("enq", item)
-                    nv.flush(tail + NEXT)
-                    nv.fence()           # fence #2: link durable
+                    self.pflush(tail + NEXT)
+                    self.pfence()           # fence #2: link durable
                     nv.cas(self.TAIL, tail, node)
                     return
             else:
                 # help: persist the obstructing link before advancing tail
-                nv.flush(tail + NEXT)
-                nv.fence()
+                self.pflush(tail + NEXT)
+                self.pfence()
                 nv.cas(self.TAIL, tail, nxt)
 
     def dequeue(self, tid: int) -> Any:
@@ -79,22 +79,22 @@ class DurableMSQueue(QueueAlgorithm):
             head = nv.read(self.HEAD)
             nxt = nv.read(head + NEXT)
             if nxt == NULL:
-                nv.flush(self.HEAD)
-                nv.fence()               # make prior dequeues durable
+                self.pflush(self.HEAD)
+                self.pfence()               # make prior dequeues durable
                 self._ev("empty")
                 return None
             # MSQ guard: head must not overtake tail (reclamation safety)
             tail = nv.read(self.TAIL)
             if head == tail:
-                nv.flush(tail + NEXT)
-                nv.fence()
+                self.pflush(tail + NEXT)
+                self.pfence()
                 nv.cas(self.TAIL, tail, nxt)
                 continue
             item = nv.read(nxt + ITEM)
             if nv.cas(self.HEAD, head, nxt):
                 self._ev("deq", item)
-                nv.flush(self.HEAD)
-                nv.fence()               # 1 fence per dequeue
+                self.pflush(self.HEAD)
+                self.pfence()               # 1 fence per dequeue
                 self.mem.retire(tid, head)
                 return item
 

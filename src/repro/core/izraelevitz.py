@@ -37,31 +37,31 @@ class IzraelevitzQueue(QueueAlgorithm):
             nv.write_full_line(dummy, [None, NULL, 0, 0, 0, 0, 0, 0])
             nv.write(self.HEAD, dummy)
             nv.write(self.TAIL, dummy)
-            nv.flush(dummy)
-            nv.flush(self.HEAD)
-            nv.flush(self.TAIL)
-            nv.fence()
+            self.pflush(dummy)
+            self.pflush(self.HEAD)
+            self.pflush(self.TAIL)
+            self.pfence()
 
     # -- transformed accessors ---------------------------------------------
     def _pread(self, addr: int) -> Any:
         v = self.nvram.read(addr)
-        self.nvram.flush(addr)
+        self.pflush(addr)
         if self.FENCE_AFTER_READ:
-            self.nvram.fence()
+            self.pfence()
         return v
 
     def _pwrite(self, addr: int, v: Any) -> None:
         self.nvram.write(addr, v)
-        self.nvram.flush(addr)
-        self.nvram.fence()
+        self.pflush(addr)
+        self.pfence()
 
     def _pcas(self, addr: int, exp: Any, new: Any, ev=None) -> bool:
         ok = self.nvram.cas(addr, exp, new)
         if ok and ev is not None:
             self._ev(*ev)    # event exactly at the linearizing CAS
-        self.nvram.flush(addr)
+        self.pflush(addr)
         if self.FENCE_AFTER_READ or ok:
-            self.nvram.fence()
+            self.pfence()
         return ok
 
     # ------------------------------------------------------------------ ops
@@ -70,8 +70,8 @@ class IzraelevitzQueue(QueueAlgorithm):
         self.mem.op_begin(tid)
         node = self.mem.alloc(tid)
         nv.write_full_line(node, [item, NULL, 0, 0, 0, 0, 0, 0])
-        nv.flush(node)
-        nv.fence()
+        self.pflush(node)
+        self.pfence()
         while True:
             tail = self._pread(self.TAIL)
             nxt = self._pread(tail + NEXT)

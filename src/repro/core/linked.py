@@ -47,9 +47,9 @@ class LinkedQueue(QueueAlgorithm):
             nv.write_full_line(dummy, [None, NULL, 0, NULL, 0, 0, 0, 0])
             nv.write(self.HEAD, dummy)
             nv.write(self.TAIL, dummy)
-            nv.flush(dummy)
-            nv.flush(self.HEAD)
-            nv.fence()
+            self.pflush(dummy)
+            self.pflush(self.HEAD)
+            self.pfence()
             self._persisted.add(dummy)
 
     # --------------------------------------------------------------- enqueue
@@ -80,12 +80,12 @@ class LinkedQueue(QueueAlgorithm):
                     p = node
                     while True:
                         pred = nv.read(p + PRED)
-                        nv.flush(p)
+                        self.pflush(p)
                         walked.append(p)
                         if p in self._persisted or pred == NULL:
                             break
                         p = pred
-                    nv.fence()                     # the ONE fence
+                    self.pfence()                     # the ONE fence
                     self._persisted.update(walked)
                     nv.cas(self.TAIL, tail, node)
                     return
@@ -100,8 +100,8 @@ class LinkedQueue(QueueAlgorithm):
             head = nv.read(self.HEAD)
             nxt = nv.read(head + NEXT)
             if nxt == NULL:
-                nv.flush(self.HEAD)
-                nv.fence()
+                self.pflush(self.HEAD)
+                self.pfence()
                 self._ev("empty")
                 return None
             # MSQ guard: head must not overtake tail (reclamation safety)
@@ -119,9 +119,9 @@ class LinkedQueue(QueueAlgorithm):
                 nv.write(head + INIT, 0)
                 prev = self._to_flush[tid]
                 if prev != NULL:
-                    nv.flush(prev)
-                nv.flush(self.HEAD)
-                nv.fence()                         # the ONE fence
+                    self.pflush(prev)
+                self.pflush(self.HEAD)
+                self.pfence()                         # the ONE fence
                 if prev != NULL:
                     self.mem.retire(tid, prev)
                 self._to_flush[tid] = head

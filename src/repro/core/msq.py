@@ -3,7 +3,9 @@
 This is the non-durable substrate every queue in the paper extends, and our
 linearizability oracle.  It lives entirely in the volatile address space:
 after a crash nothing survives (which is exactly why the durable amendments
-exist).
+exist).  It issues no flushes or fences, so it is the one queue whose cost
+is identical under every :class:`repro.core.memmodel.MemoryModel` -- the
+benchmark sweep uses it as the memory-model-invariant baseline.
 """
 from __future__ import annotations
 

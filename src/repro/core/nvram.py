@@ -1,11 +1,11 @@
-"""Simulated byte-addressable NVRAM with a volatile cache in front of it.
+"""Simulated byte-addressable NVRAM -- batched, array-backed cost engine.
 
 This is the substrate for the faithful reproduction of
 "Durable Queues: The Second Amendment" (Sela & Petrank, SPAA'21).
 
 The model (paper §2):
 
-* Memory is word-granular (one Python object per word), grouped into cache
+* Memory is word-granular (one object slot per word), grouped into cache
   lines of ``LINE_WORDS`` words.  A word models an 8-byte slot; a double-width
   (16-byte) CAS target is modeled as a tuple stored in a single word slot.
 * Two levels: a volatile cache and a persistent backing store.  Stores go to
@@ -15,39 +15,69 @@ The model (paper §2):
   application of a *prefix* of the line's outstanding stores (Assumption 1:
   cache lines evict atomically, so persistent content is always a prefix of
   the stores to that line).
-* ``flush`` **invalidates** the cache line (Cascade Lake CLWB behaviour,
-  paper §1/§2): the next access to that line is a miss served at NVRAM read
-  latency.  That access is counted as a **post-flush access** -- the paper's
-  key cost metric.
-* Latency constants (ns) follow published Optane DC characterization
-  [van Renen et al., DaMoN'19; Yang et al., FAST'20 "An empirical guide to
-  the behavior and use of scalable persistent memory"]:
-  random NVRAM read ~300ns vs DRAM ~80ns, CLWB issue ~20ns (async), SFENCE
-  drain ~100ns + ~60ns per outstanding line, NT store ~30ns.
+* Platform behaviour (does a flush invalidate?  is a visible store already
+  durable?) and all latencies come from a pluggable
+  :class:`repro.core.memmodel.MemoryModel`.  Under the default
+  ``optane-clwb`` model a flush **invalidates** the line (Cascade Lake CLWB,
+  paper §1/§2) and the next access is counted as a **post-flush access** --
+  the paper's key cost metric.
 
-Cost accounting is per-thread simulated time (no wall-clock dependence), so
-multi-thread throughput is ``ops / max(thread_clock)`` under the
-deterministic scheduler -- reproducing the paper's Fig. 2 *orderings* without
-real NVRAM hardware.
+Engine representation (this file is the fast path; the original dict engine
+survives as :class:`repro.core.nvram_ref.ReferenceNVRAM`, the oracle the
+differential tests compare against):
+
+* flat numpy object arrays hold the coherent view and the persistent image
+  (persistent and volatile address spaces are each dense);
+* per-line state (cached / flush-invalidated / ever-flushed) lives in flat
+  ``uint8`` arrays indexed by line number;
+* per-line *dirty prefixes* (the unapplied store logs that give Assumption-1
+  crash semantics) are kept per line and only touched by stores, fences and
+  crashes -- never by loads;
+* cost accounting is **batched**: every primitive appends one small event
+  code to a buffer; the buffer is reduced with ``numpy.bincount`` into a
+  ``(nthreads, N_EV)`` counter matrix only when statistics are requested.
+  Per-thread simulated time is the dot product of that matrix with the
+  model's latency vector, so multi-thread throughput is
+  ``ops / max(thread_clock)`` -- reproducing the paper's Fig. 2 *orderings*
+  without real NVRAM hardware.
+
+Latency constants (ns) follow published Optane DC characterization
+[van Renen et al., DaMoN'19; Yang et al., FAST'20].
 """
 from __future__ import annotations
 
 import random
 import threading
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
+
+import numpy as np
+
+from .memmodel import MemoryModel, get_memory_model
 
 LINE_WORDS = 8  # 64-byte line / 8-byte words
 
-# ---------------------------------------------------------------- latencies
 NS = float
-CACHE_HIT_NS: NS = 1.5        # L1/L2 blend
-DRAM_MISS_NS: NS = 80.0       # volatile-region miss
-NVRAM_READ_NS: NS = 300.0     # Optane random read (the post-flush penalty)
-FLUSH_ISSUE_NS: NS = 20.0     # CLWB issue (asynchronous)
-SFENCE_BASE_NS: NS = 100.0    # SFENCE drain, base
-SFENCE_PER_LINE_NS: NS = 60.0  # per outstanding flushed line / NT store
-MOVNTI_NS: NS = 30.0          # non-temporal store issue (asynchronous)
+
+# ------------------------------------------------------------- event codes
+# Each primitive logs one or two of these; counts x latency vector = time.
+(EV_READ, EV_WRITE, EV_CAS, EV_FLUSH, EV_FENCE, EV_FENCE_LINE, EV_MOVNTI,
+ EV_HIT, EV_DRAM, EV_COLD_DRAM, EV_COLD_NVM, EV_POSTFLUSH) = range(12)
+N_EV = 12
+
+
+def _latency_vector(m: MemoryModel) -> np.ndarray:
+    v = np.zeros(N_EV, dtype=np.float64)
+    v[EV_FLUSH] = m.flush_issue_ns
+    v[EV_FENCE] = m.fence_base_ns
+    v[EV_FENCE_LINE] = m.fence_per_line_ns
+    v[EV_MOVNTI] = m.movnti_ns
+    v[EV_HIT] = m.cache_hit_ns
+    v[EV_DRAM] = m.dram_miss_ns
+    v[EV_COLD_DRAM] = m.dram_miss_ns
+    v[EV_COLD_NVM] = m.nvram_read_ns
+    v[EV_POSTFLUSH] = m.nvram_read_ns
+    return v
 
 
 class ThreadCrashed(Exception):
@@ -80,35 +110,43 @@ class Stats:
 
 
 class NVRAM:
-    """Word-granular two-level (cache + persistent) memory simulator."""
+    """Array-backed two-level (cache + persistent) memory simulator."""
+
+    _VOLATILE_BASE = 1 << 40   # volatile addresses live far above
 
     def __init__(self, nthreads: int = 1,
-                 step_hook: Optional[Callable[[int, str], None]] = None):
+                 step_hook: Optional[Callable[[int, str], None]] = None,
+                 model: Union[str, MemoryModel, None] = None):
         self.nthreads = nthreads
         self.step_hook = step_hook          # scheduler yield point
-        # persistent backing store: committed NVRAM state
-        self._pmem: Dict[int, Any] = {}
-        # per-line log of *unapplied* stores; _log_start[line] is the
-        # absolute index (since line creation) of _log[line][0] -- pending
-        # flush entries carry absolute indices so they stay valid however
-        # other threads' fences interleave.
+        self.model = get_memory_model(model)
+        self._ns_vec = _latency_vector(self.model)
+        # --- persistent space (dense, addr is the index) ------------------
+        cap = 1024
+        self._pcap = cap
+        self._pmem = np.empty(cap, dtype=object)    # persistent image
+        self._vis = np.empty(cap, dtype=object)     # coherent (cached) view
+        nl = cap // LINE_WORDS
+        self._cached = np.zeros(nl, dtype=np.uint8)
+        self._finval = np.zeros(nl, dtype=np.uint8)   # flush-invalidated
+        self._everfl = np.zeros(nl, dtype=np.uint8)   # ever flushed
+        # per-line dirty prefix: unapplied stores (crash Assumption 1)
         self._log: Dict[int, List[Tuple[int, Any]]] = {}
         self._log_start: Dict[int, int] = {}
-        # cache metadata (persistent space only)
-        self._cached: Dict[int, bool] = {}
-        self._flush_invalid: Dict[int, bool] = {}
-        self._ever_flushed: Dict[int, bool] = {}
         # pending persists per thread: ('flush', line, upto) | ('nt', addr, v)
         self._pending: Dict[int, List[Tuple]] = {t: [] for t in range(nthreads)}
-        # volatile (DRAM) space: wiped at crash
-        self._vmem: Dict[int, Any] = {}
-        self._vtouched: set = set()
-        # address-space management (address 0 is reserved as NULL)
+        # --- volatile space (dense above _VOLATILE_BASE) ------------------
+        vcap = 1024
+        self._vcap = vcap
+        self._vval = np.empty(vcap, dtype=object)
+        self._vtouched = np.zeros(vcap, dtype=bool)
+        # --- address-space management (address 0 is reserved as NULL) -----
         self._brk = LINE_WORDS
-        self.regions: List[Tuple[str, int, int, bool]] = []  # (name, base, n, persistent)
-        self._volatile_base = 1 << 40  # volatile addresses live far above
-        self._vbrk = self._volatile_base
-        self.stats: Dict[int, Stats] = {t: Stats() for t in range(nthreads)}
+        self._vbrk = self._VOLATILE_BASE
+        self.regions: List[Tuple[str, int, int, bool]] = []
+        # --- batched cost accumulator -------------------------------------
+        self._ebuf: List[int] = []            # packed tid * N_EV + code
+        self._counts = np.zeros((nthreads, N_EV), dtype=np.int64)
         self._tls = threading.local()
         self.crashed = False
         self._lock = threading.Lock()   # guards structural mutation (alloc)
@@ -125,10 +163,37 @@ class NVRAM:
         if self.step_hook is not None:
             self.step_hook(self.tid, kind)
 
-    def _charge(self, ns: NS) -> None:
-        self.stats[self.tid].time_ns += ns
-
     # --------------------------------------------------------- address space
+    def _grow_p(self, need: int) -> None:
+        cap = self._pcap
+        while cap < need:
+            cap *= 2
+        pmem = np.empty(cap, dtype=object)
+        pmem[:self._pcap] = self._pmem
+        vis = np.empty(cap, dtype=object)
+        vis[:self._pcap] = self._vis
+        nl, onl = cap // LINE_WORDS, self._pcap // LINE_WORDS
+        cached = np.zeros(nl, dtype=np.uint8)
+        cached[:onl] = self._cached
+        finval = np.zeros(nl, dtype=np.uint8)
+        finval[:onl] = self._finval
+        everfl = np.zeros(nl, dtype=np.uint8)
+        everfl[:onl] = self._everfl
+        self._pmem, self._vis = pmem, vis
+        self._cached, self._finval, self._everfl = cached, finval, everfl
+        self._pcap = cap
+
+    def _grow_v(self, need: int) -> None:
+        cap = self._vcap
+        while cap < need:
+            cap *= 2
+        vval = np.empty(cap, dtype=object)
+        vval[:self._vcap] = self._vval
+        vtouched = np.zeros(cap, dtype=bool)
+        vtouched[:self._vcap] = self._vtouched
+        self._vval, self._vtouched = vval, vtouched
+        self._vcap = cap
+
     def alloc_region(self, nwords: int, name: str = "region",
                      persistent: bool = True) -> int:
         """Allocate a line-aligned region; returns base address."""
@@ -136,76 +201,75 @@ class NVRAM:
             if persistent:
                 base = (self._brk + LINE_WORDS - 1) // LINE_WORDS * LINE_WORDS
                 self._brk = base + nwords
+                if self._brk > self._pcap:
+                    self._grow_p(self._brk)
             else:
                 base = (self._vbrk + LINE_WORDS - 1) // LINE_WORDS * LINE_WORDS
                 self._vbrk = base + nwords
+                if self._vbrk - self._VOLATILE_BASE > self._vcap:
+                    self._grow_v(self._vbrk - self._VOLATILE_BASE)
             self.regions.append((name, base, nwords, persistent))
             return base
 
     def is_persistent_addr(self, addr: int) -> bool:
-        return addr < self._volatile_base
+        return addr < self._VOLATILE_BASE
 
     @staticmethod
     def line_of(addr: int) -> int:
         return addr // LINE_WORDS
 
     # ------------------------------------------------------- cache mechanics
-    def _touch(self, line: int, for_write: bool) -> None:
+    def _touch(self, line: int, tid: int) -> None:
         """Account for bringing `line` into cache (persistent space)."""
-        st = self.stats[self.tid]
-        if self._cached.get(line, False):
-            st.time_ns += CACHE_HIT_NS
+        if self._cached[line]:
+            self._ebuf.append(tid * N_EV + EV_HIT)
             return
-        if self._flush_invalid.get(line, False):
+        if self._finval[line]:
             # the paper's penalty: reading back explicitly flushed content
-            st.post_flush_accesses += 1
-            st.time_ns += NVRAM_READ_NS
+            self._ebuf.append(tid * N_EV + EV_POSTFLUSH)
+        elif self._everfl[line]:
+            self._ebuf.append(tid * N_EV + EV_COLD_NVM)
         else:
-            st.cold_misses += 1
-            st.time_ns += NVRAM_READ_NS if self._ever_flushed.get(line, False) \
-                else DRAM_MISS_NS
-        self._cached[line] = True
-        self._flush_invalid[line] = False
-
-    def _visible(self, addr: int) -> Any:
-        """Coherent view: persistent value overlaid with logged stores and
-        outstanding NT stores (x86 stores are coherent before persistence)."""
-        line = self.line_of(addr)
-        val = self._pmem.get(addr)
-        for (a, v) in self._log.get(line, ()):
-            if a == addr:
-                val = v
-        # outstanding NT stores are globally visible too
-        for plist in self._pending.values():
-            for ent in plist:
-                if ent[0] == "nt" and ent[1] == addr:
-                    val = ent[2]
-        return val
+            self._ebuf.append(tid * N_EV + EV_COLD_DRAM)
+        self._cached[line] = 1
+        self._finval[line] = 0
 
     # ------------------------------------------------------------ primitives
     def read(self, addr: int) -> Any:
         self._step("read")
-        st = self.stats[self.tid]
-        st.reads += 1
-        if not self.is_persistent_addr(addr):
-            st.time_ns += CACHE_HIT_NS if addr in self._vtouched else DRAM_MISS_NS
-            self._vtouched.add(addr)
-            return self._vmem.get(addr)
-        self._touch(self.line_of(addr), for_write=False)
-        return self._visible(addr)
+        tid = self.tid
+        self._ebuf.append(tid * N_EV + EV_READ)
+        if addr >= self._VOLATILE_BASE:
+            i = addr - self._VOLATILE_BASE
+            if self._vtouched[i]:
+                self._ebuf.append(tid * N_EV + EV_HIT)
+            else:
+                self._ebuf.append(tid * N_EV + EV_DRAM)
+                self._vtouched[i] = True
+            return self._vval[i]
+        self._touch(addr // LINE_WORDS, tid)
+        return self._vis[addr]
 
     def write(self, addr: int, value: Any) -> None:
         self._step("write")
-        st = self.stats[self.tid]
-        st.writes += 1
-        if not self.is_persistent_addr(addr):
-            st.time_ns += CACHE_HIT_NS if addr in self._vtouched else DRAM_MISS_NS
-            self._vtouched.add(addr)
-            self._vmem[addr] = value
+        tid = self.tid
+        self._ebuf.append(tid * N_EV + EV_WRITE)
+        if addr >= self._VOLATILE_BASE:
+            i = addr - self._VOLATILE_BASE
+            if self._vtouched[i]:
+                self._ebuf.append(tid * N_EV + EV_HIT)
+            else:
+                self._ebuf.append(tid * N_EV + EV_DRAM)
+                self._vtouched[i] = True
+            self._vval[i] = value
             return
-        line = self.line_of(addr)
-        self._touch(line, for_write=True)   # write-allocate (RFO)
-        self._log.setdefault(line, []).append((addr, value))
+        line = addr // LINE_WORDS
+        self._touch(line, tid)              # write-allocate (RFO)
+        self._vis[addr] = value
+        if self.model.persist_on_store:
+            self._pmem[addr] = value        # visible => durable: no log
+        else:
+            self._log.setdefault(line, []).append((addr, value))
 
     def write_full_line(self, base_addr: int, values: List[Any]) -> None:
         """Full-line store without read-for-ownership (models allocator /
@@ -213,85 +277,99 @@ class NVRAM:
         fetch, hence *not* a post-flush access).  Used only when every word
         of the line is overwritten."""
         self._step("write")
-        st = self.stats[self.tid]
-        st.writes += 1
-        line = self.line_of(base_addr)
+        tid = self.tid
+        self._ebuf.append(tid * N_EV + EV_WRITE)
+        self._ebuf.append(tid * N_EV + EV_HIT)
         assert base_addr % LINE_WORDS == 0 and len(values) <= LINE_WORDS
-        if not self.is_persistent_addr(base_addr):
-            for i, v in enumerate(values):
-                self._vmem[base_addr + i] = v
-                self._vtouched.add(base_addr + i)
-            st.time_ns += CACHE_HIT_NS
+        if base_addr >= self._VOLATILE_BASE:
+            i = base_addr - self._VOLATILE_BASE
+            for k, v in enumerate(values):
+                self._vval[i + k] = v
+                self._vtouched[i + k] = True
             return
-        st.time_ns += CACHE_HIT_NS
-        self._cached[line] = True
-        self._flush_invalid[line] = False
+        line = base_addr // LINE_WORDS
+        self._cached[line] = 1
+        self._finval[line] = 0
+        if self.model.persist_on_store:
+            for k, v in enumerate(values):
+                self._vis[base_addr + k] = v
+                self._pmem[base_addr + k] = v
+            return
         log = self._log.setdefault(line, [])
-        for i, v in enumerate(values):
-            log.append((base_addr + i, v))
+        for k, v in enumerate(values):
+            self._vis[base_addr + k] = v
+            log.append((base_addr + k, v))
 
     def cas(self, addr: int, expected: Any, new: Any) -> bool:
         """Atomic compare-and-swap (one scheduler step).  Double-width CAS is
         modeled by storing a tuple at a single word address (paper §5.1.2)."""
         self._step("cas")
-        st = self.stats[self.tid]
-        st.cas += 1
-        if not self.is_persistent_addr(addr):
-            st.time_ns += CACHE_HIT_NS if addr in self._vtouched else DRAM_MISS_NS
-            self._vtouched.add(addr)
-            cur = self._vmem.get(addr)
-            if cur == expected:
-                self._vmem[addr] = new
+        tid = self.tid
+        self._ebuf.append(tid * N_EV + EV_CAS)
+        if addr >= self._VOLATILE_BASE:
+            i = addr - self._VOLATILE_BASE
+            if self._vtouched[i]:
+                self._ebuf.append(tid * N_EV + EV_HIT)
+            else:
+                self._ebuf.append(tid * N_EV + EV_DRAM)
+                self._vtouched[i] = True
+            if self._vval[i] == expected:
+                self._vval[i] = new
                 return True
             return False
-        line = self.line_of(addr)
-        self._touch(line, for_write=True)
-        cur = self._visible(addr)
-        if cur == expected:
-            self._log.setdefault(line, []).append((addr, new))
+        line = addr // LINE_WORDS
+        self._touch(line, tid)
+        if self._vis[addr] == expected:
+            self._vis[addr] = new
+            if self.model.persist_on_store:
+                self._pmem[addr] = new
+            else:
+                self._log.setdefault(line, []).append((addr, new))
             return True
         return False
 
     def flush(self, addr: int) -> None:
         """Asynchronous CLWB: schedule write-back of the whole containing
-        line, and (Cascade Lake behaviour) invalidate it in the cache."""
+        line; under an invalidating model (Cascade Lake) also evict it."""
         self._step("flush")
-        st = self.stats[self.tid]
-        st.flushes += 1
-        st.time_ns += FLUSH_ISSUE_NS
-        assert self.is_persistent_addr(addr), "flushing volatile memory"
-        line = self.line_of(addr)
+        tid = self.tid
+        self._ebuf.append(tid * N_EV + EV_FLUSH)
+        assert addr < self._VOLATILE_BASE, "flushing volatile memory"
+        line = addr // LINE_WORDS
         upto_abs = self._log_start.get(line, 0) + len(self._log.get(line, ()))
-        self._pending[self.tid].append(("flush", line, upto_abs))
-        self._cached[line] = False
-        self._flush_invalid[line] = True
-        self._ever_flushed[line] = True
+        self._pending[tid].append(("flush", line, upto_abs))
+        if self.model.flush_invalidates:
+            self._cached[line] = 0
+            self._finval[line] = 1
+        self._everfl[line] = 1
 
     def movnti(self, addr: int, value: Any) -> None:
         """Non-temporal store: straight to the memory write queue; does not
-        touch or pollute the cache (paper §6.3).  Needs a fence to complete."""
+        touch or pollute the cache (paper §6.3).  Needs a fence to complete.
+        NT stores are globally visible immediately (x86 coherence)."""
         self._step("movnti")
-        st = self.stats[self.tid]
-        st.movntis += 1
-        st.time_ns += MOVNTI_NS
-        assert self.is_persistent_addr(addr)
-        self._pending[self.tid].append(("nt", addr, value))
+        tid = self.tid
+        self._ebuf.append(tid * N_EV + EV_MOVNTI)
+        assert addr < self._VOLATILE_BASE
+        self._vis[addr] = value
+        self._pending[tid].append(("nt", addr, value))
 
     def fence(self) -> None:
         """SFENCE: block until all of this thread's outstanding flushes and
         NT stores are persistent."""
         self._step("fence")
-        st = self.stats[self.tid]
-        st.fences += 1
-        pend = self._pending[self.tid]
-        # drain cost scales with distinct lines: WC buffers combine NT
-        # stores to one line, and multiple flush entries of a line coalesce
-        lines = {(e[1] if e[0] == "flush" else self.line_of(e[1]))
-                 for e in pend}
-        st.time_ns += SFENCE_BASE_NS + SFENCE_PER_LINE_NS * len(lines)
-        for ent in pend:
-            self._apply_persist(ent)
-        pend.clear()
+        tid = self.tid
+        self._ebuf.append(tid * N_EV + EV_FENCE)
+        pend = self._pending[tid]
+        if pend:
+            # drain cost scales with distinct lines: WC buffers combine NT
+            # stores to one line, and flush entries of a line coalesce
+            lines = {(e[1] if e[0] == "flush" else e[1] // LINE_WORDS)
+                     for e in pend}
+            self._counts[tid, EV_FENCE_LINE] += len(lines)
+            for ent in pend:
+                self._apply_persist(ent)
+            pend.clear()
 
     def persist(self, addr: int) -> None:
         """flush + fence convenience (the paper's 'persisting a location')."""
@@ -326,11 +404,13 @@ class NVRAM:
                          additionally each line persists a random *prefix* of
                          its remaining stores (implicit eviction, Assumption 1).
         mode='max'    -- everything reaches NVRAM (all stores applied).
-        Volatile memory (cache + DRAM space) is wiped.
+        Under a persist-on-store model (eADR) every visible store is durable,
+        so all modes behave like 'max'.  Volatile memory (cache + DRAM space)
+        is wiped regardless.
         """
         rng = random.Random(seed)
         self.crashed = True
-        if mode == "max":
+        if mode == "max" or self.model.persist_on_store:
             for plist in self._pending.values():
                 for ent in plist:
                     self._apply_persist(ent)
@@ -350,7 +430,8 @@ class NVRAM:
                 nt_by_line: Dict[int, List[Tuple]] = {}
                 for ent in plist:
                     if ent[0] == "nt":
-                        nt_by_line.setdefault(self.line_of(ent[1]), []).append(ent)
+                        nt_by_line.setdefault(ent[1] // LINE_WORDS,
+                                              []).append(ent)
                 for line, ents in nt_by_line.items():
                     k = rng.randint(0, len(ents))
                     for ent in ents[:k]:
@@ -364,38 +445,74 @@ class NVRAM:
             pass
         else:
             raise ValueError(mode)
-        # volatile state is gone
+        # volatile state is gone: the coherent view collapses onto the
+        # persistent image, DRAM space and all cache metadata are wiped
         for plist in self._pending.values():
             plist.clear()
         self._log.clear()
         self._log_start.clear()
-        self._cached.clear()
-        self._flush_invalid.clear()
-        self._vmem.clear()
-        self._vtouched.clear()
+        self._vis = self._pmem.copy()
+        self._cached[:] = 0
+        self._finval[:] = 0
+        self._vval = np.empty(self._vcap, dtype=object)
+        self._vtouched[:] = False
 
     # ------------------------------------------------------ recovery access
     def pread(self, addr: int) -> Any:
         """Recovery-time direct read of the persistent image (not on the
         fast path; costs are accounted separately by the harness)."""
-        return self._pmem.get(addr)
+        return self._pmem[addr]
 
     def pwrite(self, addr: int, value: Any) -> None:
         """Recovery-time direct persistent write (recovery persists its
         reconstruction before normal operation resumes)."""
         self._pmem[addr] = value
+        self._vis[addr] = value
 
     def reset_after_recovery(self) -> None:
         """Recovery is complete: resume normal (cached) operation."""
         self.crashed = False
 
     # ------------------------------------------------------------- reporting
+    def _drain(self) -> None:
+        """Reduce the event buffer into the counter matrix (vectorized)."""
+        if self._ebuf:
+            cnt = np.bincount(np.asarray(self._ebuf, dtype=np.int64),
+                              minlength=self.nthreads * N_EV)
+            self._counts += cnt.reshape(self.nthreads, N_EV)
+            self._ebuf.clear()
+
+    def _stats_of(self, c: np.ndarray) -> Stats:
+        return Stats(
+            reads=int(c[EV_READ]), writes=int(c[EV_WRITE]),
+            cas=int(c[EV_CAS]), flushes=int(c[EV_FLUSH]),
+            fences=int(c[EV_FENCE]), movntis=int(c[EV_MOVNTI]),
+            post_flush_accesses=int(c[EV_POSTFLUSH]),
+            cold_misses=int(c[EV_COLD_DRAM] + c[EV_COLD_NVM]),
+            time_ns=float(c @ self._ns_vec))
+
+    @property
+    def stats(self) -> Dict[int, Stats]:
+        """Per-thread Stats, materialized on demand from the counter matrix."""
+        self._drain()
+        return {t: self._stats_of(self._counts[t])
+                for t in range(self.nthreads)}
+
     def total_stats(self) -> Stats:
-        tot = Stats()
-        for s in self.stats.values():
-            tot.add(s)
-        return tot
+        self._drain()
+        return self._stats_of(self._counts.sum(axis=0))
+
+    def thread_time_ns(self, tid: int) -> float:
+        """Simulated clock of one thread (drains the event buffer)."""
+        self._drain()
+        return float(self._counts[tid] @ self._ns_vec)
+
+    def thread_times_ns(self) -> np.ndarray:
+        """All per-thread clocks at once (vectorized)."""
+        self._drain()
+        return self._counts @ self._ns_vec
 
     def sim_time_ns(self) -> NS:
         """Makespan across per-thread clocks."""
-        return max((s.time_ns for s in self.stats.values()), default=0.0)
+        times = self.thread_times_ns()
+        return float(times.max()) if len(times) else 0.0

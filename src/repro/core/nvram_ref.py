@@ -1,0 +1,366 @@
+"""Sequential reference NVRAM engine (the seed per-word dict simulator).
+
+This is the original, deliberately-simple engine: one Python object per word,
+per-line store logs scanned on every read, dataclass counters bumped per
+primitive.  It is kept verbatim-in-spirit as the *oracle* for the batched
+array engine in :mod:`repro.core.nvram` -- the differential tests assert that
+both engines produce identical persist accounting (fences/op,
+post-flush-accesses/op) for every queue.  Do not optimize this file; its
+value is being obviously correct, not fast.
+
+Semantics (paper §2) are documented in :mod:`repro.core.nvram`; latencies and
+platform behaviour come from a pluggable :class:`repro.core.memmodel.MemoryModel`.
+"""
+from __future__ import annotations
+
+import random
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple, Union
+
+from .memmodel import MemoryModel, get_memory_model
+from .nvram import LINE_WORDS, Stats
+
+
+class ReferenceNVRAM:
+    """Word-granular two-level (cache + persistent) memory simulator."""
+
+    def __init__(self, nthreads: int = 1,
+                 step_hook: Optional[Callable[[int, str], None]] = None,
+                 model: Union[str, MemoryModel, None] = None):
+        self.nthreads = nthreads
+        self.step_hook = step_hook          # scheduler yield point
+        self.model = get_memory_model(model)
+        # persistent backing store: committed NVRAM state
+        self._pmem: Dict[int, Any] = {}
+        # per-line log of *unapplied* stores; _log_start[line] is the
+        # absolute index (since line creation) of _log[line][0] -- pending
+        # flush entries carry absolute indices so they stay valid however
+        # other threads' fences interleave.
+        self._log: Dict[int, List[Tuple[int, Any]]] = {}
+        self._log_start: Dict[int, int] = {}
+        # cache metadata (persistent space only)
+        self._cached: Dict[int, bool] = {}
+        self._flush_invalid: Dict[int, bool] = {}
+        self._ever_flushed: Dict[int, bool] = {}
+        # pending persists per thread: ('flush', line, upto) | ('nt', addr, v)
+        self._pending: Dict[int, List[Tuple]] = {t: [] for t in range(nthreads)}
+        # coherent overlay: last store (regular, CAS or NT) per address, in
+        # program order -- mirrors the batched engine's _vis array, so a
+        # write after an NT store to the same address is not shadowed by the
+        # stale pending NT value
+        self._coh: Dict[int, Any] = {}
+        # volatile (DRAM) space: wiped at crash
+        self._vmem: Dict[int, Any] = {}
+        self._vtouched: set = set()
+        # address-space management (address 0 is reserved as NULL)
+        self._brk = LINE_WORDS
+        self.regions: List[Tuple[str, int, int, bool]] = []
+        self._volatile_base = 1 << 40  # volatile addresses live far above
+        self._vbrk = self._volatile_base
+        self.stats: Dict[int, Stats] = {t: Stats() for t in range(nthreads)}
+        self._tls = threading.local()
+        self.crashed = False
+        self._lock = threading.Lock()   # guards structural mutation (alloc)
+
+    # ------------------------------------------------------------ thread id
+    def set_tid(self, tid: int) -> None:
+        self._tls.tid = tid
+
+    @property
+    def tid(self) -> int:
+        return getattr(self._tls, "tid", 0)
+
+    def _step(self, kind: str) -> None:
+        if self.step_hook is not None:
+            self.step_hook(self.tid, kind)
+
+    # --------------------------------------------------------- address space
+    def alloc_region(self, nwords: int, name: str = "region",
+                     persistent: bool = True) -> int:
+        """Allocate a line-aligned region; returns base address."""
+        with self._lock:
+            if persistent:
+                base = (self._brk + LINE_WORDS - 1) // LINE_WORDS * LINE_WORDS
+                self._brk = base + nwords
+            else:
+                base = (self._vbrk + LINE_WORDS - 1) // LINE_WORDS * LINE_WORDS
+                self._vbrk = base + nwords
+            self.regions.append((name, base, nwords, persistent))
+            return base
+
+    def is_persistent_addr(self, addr: int) -> bool:
+        return addr < self._volatile_base
+
+    @staticmethod
+    def line_of(addr: int) -> int:
+        return addr // LINE_WORDS
+
+    # ------------------------------------------------------- cache mechanics
+    def _touch(self, line: int, for_write: bool) -> None:
+        """Account for bringing `line` into cache (persistent space)."""
+        st = self.stats[self.tid]
+        m = self.model
+        if self._cached.get(line, False):
+            st.time_ns += m.cache_hit_ns
+            return
+        if self._flush_invalid.get(line, False):
+            # the paper's penalty: reading back explicitly flushed content
+            st.post_flush_accesses += 1
+            st.time_ns += m.nvram_read_ns
+        else:
+            st.cold_misses += 1
+            st.time_ns += m.nvram_read_ns if self._ever_flushed.get(line, False) \
+                else m.dram_miss_ns
+        self._cached[line] = True
+        self._flush_invalid[line] = False
+
+    def _visible(self, addr: int) -> Any:
+        """Coherent view: the last store to the address in program order
+        (regular, CAS or NT -- x86 stores are coherent before persistence),
+        falling back to the persistent image."""
+        if addr in self._coh:
+            return self._coh[addr]
+        return self._pmem.get(addr)
+
+    # ------------------------------------------------------------ primitives
+    def read(self, addr: int) -> Any:
+        self._step("read")
+        st = self.stats[self.tid]
+        st.reads += 1
+        if not self.is_persistent_addr(addr):
+            st.time_ns += self.model.cache_hit_ns if addr in self._vtouched \
+                else self.model.dram_miss_ns
+            self._vtouched.add(addr)
+            return self._vmem.get(addr)
+        self._touch(self.line_of(addr), for_write=False)
+        return self._visible(addr)
+
+    def write(self, addr: int, value: Any) -> None:
+        self._step("write")
+        st = self.stats[self.tid]
+        st.writes += 1
+        if not self.is_persistent_addr(addr):
+            st.time_ns += self.model.cache_hit_ns if addr in self._vtouched \
+                else self.model.dram_miss_ns
+            self._vtouched.add(addr)
+            self._vmem[addr] = value
+            return
+        line = self.line_of(addr)
+        self._touch(line, for_write=True)   # write-allocate (RFO)
+        self._coh[addr] = value
+        if self.model.persist_on_store:
+            self._pmem[addr] = value        # visible => durable: no log
+        else:
+            self._log.setdefault(line, []).append((addr, value))
+
+    def write_full_line(self, base_addr: int, values: List[Any]) -> None:
+        """Full-line store without read-for-ownership (models allocator /
+        node initialization via fast-string or full-line NT stores -- no
+        fetch, hence *not* a post-flush access).  Used only when every word
+        of the line is overwritten."""
+        self._step("write")
+        st = self.stats[self.tid]
+        st.writes += 1
+        line = self.line_of(base_addr)
+        assert base_addr % LINE_WORDS == 0 and len(values) <= LINE_WORDS
+        if not self.is_persistent_addr(base_addr):
+            for i, v in enumerate(values):
+                self._vmem[base_addr + i] = v
+                self._vtouched.add(base_addr + i)
+            st.time_ns += self.model.cache_hit_ns
+            return
+        st.time_ns += self.model.cache_hit_ns
+        self._cached[line] = True
+        self._flush_invalid[line] = False
+        if self.model.persist_on_store:
+            for i, v in enumerate(values):
+                self._coh[base_addr + i] = v
+                self._pmem[base_addr + i] = v
+            return
+        log = self._log.setdefault(line, [])
+        for i, v in enumerate(values):
+            self._coh[base_addr + i] = v
+            log.append((base_addr + i, v))
+
+    def cas(self, addr: int, expected: Any, new: Any) -> bool:
+        """Atomic compare-and-swap (one scheduler step).  Double-width CAS is
+        modeled by storing a tuple at a single word address (paper §5.1.2)."""
+        self._step("cas")
+        st = self.stats[self.tid]
+        st.cas += 1
+        if not self.is_persistent_addr(addr):
+            st.time_ns += self.model.cache_hit_ns if addr in self._vtouched \
+                else self.model.dram_miss_ns
+            self._vtouched.add(addr)
+            cur = self._vmem.get(addr)
+            if cur == expected:
+                self._vmem[addr] = new
+                return True
+            return False
+        line = self.line_of(addr)
+        self._touch(line, for_write=True)
+        cur = self._visible(addr)
+        if cur == expected:
+            self._coh[addr] = new
+            if self.model.persist_on_store:
+                self._pmem[addr] = new
+            else:
+                self._log.setdefault(line, []).append((addr, new))
+            return True
+        return False
+
+    def flush(self, addr: int) -> None:
+        """Asynchronous CLWB: schedule write-back of the whole containing
+        line; under an invalidating model (Cascade Lake) also evict it."""
+        self._step("flush")
+        st = self.stats[self.tid]
+        st.flushes += 1
+        st.time_ns += self.model.flush_issue_ns
+        assert self.is_persistent_addr(addr), "flushing volatile memory"
+        line = self.line_of(addr)
+        upto_abs = self._log_start.get(line, 0) + len(self._log.get(line, ()))
+        self._pending[self.tid].append(("flush", line, upto_abs))
+        if self.model.flush_invalidates:
+            self._cached[line] = False
+            self._flush_invalid[line] = True
+        self._ever_flushed[line] = True
+
+    def movnti(self, addr: int, value: Any) -> None:
+        """Non-temporal store: straight to the memory write queue; does not
+        touch or pollute the cache (paper §6.3).  Needs a fence to complete."""
+        self._step("movnti")
+        st = self.stats[self.tid]
+        st.movntis += 1
+        st.time_ns += self.model.movnti_ns
+        assert self.is_persistent_addr(addr)
+        self._coh[addr] = value
+        self._pending[self.tid].append(("nt", addr, value))
+
+    def fence(self) -> None:
+        """SFENCE: block until all of this thread's outstanding flushes and
+        NT stores are persistent."""
+        self._step("fence")
+        st = self.stats[self.tid]
+        st.fences += 1
+        pend = self._pending[self.tid]
+        # drain cost scales with distinct lines: WC buffers combine NT
+        # stores to one line, and multiple flush entries of a line coalesce
+        lines = {(e[1] if e[0] == "flush" else self.line_of(e[1]))
+                 for e in pend}
+        st.time_ns += self.model.fence_base_ns \
+            + self.model.fence_per_line_ns * len(lines)
+        for ent in pend:
+            self._apply_persist(ent)
+        pend.clear()
+
+    def persist(self, addr: int) -> None:
+        """flush + fence convenience (the paper's 'persisting a location')."""
+        self.flush(addr)
+        self.fence()
+
+    # --------------------------------------------------------------- persist
+    def _apply_persist(self, ent: Tuple) -> None:
+        if ent[0] == "flush":
+            _, line, upto_abs = ent
+            log = self._log.get(line, [])
+            start = self._log_start.get(line, 0)
+            count = upto_abs - start
+            if count <= 0:
+                return          # already applied by a later/earlier fence
+            count = min(count, len(log))
+            for (a, v) in log[:count]:
+                self._pmem[a] = v
+            del log[:count]
+            self._log_start[line] = start + count
+        else:
+            _, addr, v = ent
+            self._pmem[addr] = v
+
+    # ----------------------------------------------------------------- crash
+    def crash(self, mode: str = "random", seed: int = 0) -> None:
+        """Full-system crash (paper §2 failure model).
+
+        mode='min'    -- nothing beyond fenced state survives (pending flushes
+                         and NT stores are dropped; un-flushed stores lost).
+        mode='random' -- each pending flush/NT store independently survives;
+                         additionally each line persists a random *prefix* of
+                         its remaining stores (implicit eviction, Assumption 1).
+        mode='max'    -- everything reaches NVRAM (all stores applied).
+        Under a persist-on-store model (eADR) every visible store is durable,
+        so all modes behave like 'max'.  Volatile memory is wiped regardless.
+        """
+        rng = random.Random(seed)
+        self.crashed = True
+        if mode == "max" or self.model.persist_on_store:
+            for plist in self._pending.values():
+                for ent in plist:
+                    self._apply_persist(ent)
+            for line, log in self._log.items():
+                for (a, v) in log:
+                    self._pmem[a] = v
+        elif mode == "random":
+            for plist in self._pending.values():
+                # flush entries may survive independently: applying a later
+                # flush of a line subsumes earlier ones (prefix-safe).
+                for ent in plist:
+                    if ent[0] == "flush" and rng.random() < 0.5:
+                        self._apply_persist(ent)
+                # NT stores to the same line combine in the WC buffer and the
+                # line evicts atomically (Assumption 1): per line, a *prefix*
+                # of the thread's NT stores survives, in issue order.
+                nt_by_line: Dict[int, List[Tuple]] = {}
+                for ent in plist:
+                    if ent[0] == "nt":
+                        nt_by_line.setdefault(self.line_of(ent[1]), []).append(ent)
+                for line, ents in nt_by_line.items():
+                    k = rng.randint(0, len(ents))
+                    for ent in ents[:k]:
+                        self._apply_persist(ent)
+            for line, log in list(self._log.items()):
+                if log:
+                    k = rng.randint(0, len(log))  # prefix (Assumption 1)
+                    for (a, v) in log[:k]:
+                        self._pmem[a] = v
+        elif mode == "min":
+            pass
+        else:
+            raise ValueError(mode)
+        # volatile state is gone
+        for plist in self._pending.values():
+            plist.clear()
+        self._log.clear()
+        self._log_start.clear()
+        self._coh.clear()
+        self._cached.clear()
+        self._flush_invalid.clear()
+        self._vmem.clear()
+        self._vtouched.clear()
+
+    # ------------------------------------------------------ recovery access
+    def pread(self, addr: int) -> Any:
+        """Recovery-time direct read of the persistent image (not on the
+        fast path; costs are accounted separately by the harness)."""
+        return self._pmem.get(addr)
+
+    def pwrite(self, addr: int, value: Any) -> None:
+        """Recovery-time direct persistent write (recovery persists its
+        reconstruction before normal operation resumes)."""
+        self._pmem[addr] = value
+
+    def reset_after_recovery(self) -> None:
+        """Recovery is complete: resume normal (cached) operation."""
+        self.crashed = False
+
+    # ------------------------------------------------------------- reporting
+    def total_stats(self) -> Stats:
+        tot = Stats()
+        for s in self.stats.values():
+            tot.add(s)
+        return tot
+
+    def thread_time_ns(self, tid: int) -> float:
+        return self.stats[tid].time_ns
+
+    def sim_time_ns(self) -> float:
+        """Makespan across per-thread clocks."""
+        return max((s.time_ns for s in self.stats.values()), default=0.0)

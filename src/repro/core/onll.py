@@ -24,7 +24,6 @@ from __future__ import annotations
 from typing import Any, Callable, List, Tuple
 
 from .nvram import LINE_WORDS, NVRAM
-from .queue_base import NULL
 
 LOG_LINES = 8192   # per-thread log capacity (records)
 
@@ -72,7 +71,8 @@ class ONLL:
             line_addr = self.logs[tid] + self._log_pos[tid] * LINE_WORDS
             assert self._log_pos[tid] < LOG_LINES, "log full"
             nv.write_full_line(line_addr, [1, s, o, 0, 0, 0, 0, 0])
-            nv.flush(line_addr)
+            if nv.model.needs_flush:
+                nv.flush(line_addr)
             self._log_pos[tid] += 1
         nv.fence()                               # the ONE fence
         # 3. advance the persistent-prefix marker (volatile, monotone)

@@ -61,8 +61,8 @@ class OptLinkedQueue(QueueAlgorithm):
             self._write_record(nthreads, (NULL, 0), (NULL, 0))  # recovery slot
             dummy_p = self.mem.alloc(0)
             nv.write_full_line(dummy_p, [None, 0, NULL, 0, 0, 0, 0, 0])
-            nv.flush(dummy_p)
-            nv.fence()
+            self.pflush(dummy_p)
+            self.pfence()
             self._persisted.add(dummy_p)
             dummy_v = self._new_vnode(0, None, 0, dummy_p, NULL)
             nv.write(self.HEAD, dummy_v)
@@ -120,11 +120,11 @@ class OptLinkedQueue(QueueAlgorithm):
                         pp = nv.read(pv + V_PPTR)
                         if pp in self._persisted:
                             break
-                        nv.flush(pp)
+                        self.pflush(pp)
                         walked.append(pp)
                         pv = nv.read(pv + V_PREDV)
                     self._write_record(tid, self._last[tid], (pnode, idx))
-                    nv.fence()                           # the ONE fence
+                    self.pfence()                           # the ONE fence
                     self._persisted.update(walked)
                     self._last[tid] = (pnode, idx)
                     nv.cas(self.TAIL, tailv, vnode)
@@ -142,7 +142,7 @@ class OptLinkedQueue(QueueAlgorithm):
             if nxt == NULL:
                 idx = nv.read(headv + V_INDEX)
                 nv.movnti(self.HEADIDX + tid * LINE_WORDS, idx)
-                nv.fence()
+                self.pfence()
                 self._ev("empty")
                 return None
             # MSQ guard: head must not overtake tail (reclamation safety)
@@ -155,7 +155,7 @@ class OptLinkedQueue(QueueAlgorithm):
             if nv.cas(self.HEAD, headv, nxt):
                 self._ev("deq", item)
                 nv.movnti(self.HEADIDX + tid * LINE_WORDS, idx)
-                nv.fence()                               # the ONE fence
+                self.pfence()                               # the ONE fence
                 pp = nv.read(headv + V_PPTR)
                 self.mem.retire(tid, pp)
                 self.mem.retire_volatile(tid, headv)

@@ -18,7 +18,7 @@ from __future__ import annotations
 from typing import Any, List, Tuple
 
 from .nvram import LINE_WORDS, NVRAM
-from .queue_base import NULL, QueueAlgorithm, alloc_root_lines
+from .queue_base import NULL, QueueAlgorithm
 from .ssmem import SSMem, VolatileAlloc
 
 # Persistent half (designated areas, one line)
@@ -51,11 +51,11 @@ class OptUnlinkedQueue(QueueAlgorithm):
         if not _recovering:
             for t in range(nthreads):
                 nv.movnti(self.HEADIDX + t * LINE_WORDS, 0)
-            nv.fence()
+            self.pfence()
             dummy_p = self.mem.alloc(0)
             nv.write_full_line(dummy_p, [None, 0, 0, 0, 0, 0, 0, 0])
-            nv.flush(dummy_p)
-            nv.fence()
+            self.pflush(dummy_p)
+            self.pfence()
             dummy_v = self._new_vnode(0, None, 0, dummy_p)
             nv.write(self.HEAD, dummy_v)
             nv.write(self.TAIL, dummy_v)
@@ -88,8 +88,8 @@ class OptUnlinkedQueue(QueueAlgorithm):
                 if nv.cas(tailv + V_NEXT, NULL, vnode):
                     self._ev("enq", item)
                     nv.write(pnode + P_LINKED, 1)
-                    nv.flush(pnode)                  # flushed once, never read
-                    nv.fence()                       # the ONE fence
+                    self.pflush(pnode)                  # flushed once, never read
+                    self.pfence()                       # the ONE fence
                     nv.cas(self.TAIL, tailv, vnode)
                     return
             else:
@@ -108,7 +108,7 @@ class OptUnlinkedQueue(QueueAlgorithm):
                 # are durable before we report empty.
                 idx = nv.read(headv + V_INDEX)
                 nv.movnti(self.HEADIDX + tid * LINE_WORDS, idx)
-                nv.fence()
+                self.pfence()
                 self._ev("empty")
                 return None
             # MSQ guard: head must not overtake tail (reclamation safety)
@@ -121,7 +121,7 @@ class OptUnlinkedQueue(QueueAlgorithm):
             if nv.cas(self.HEAD, headv, nxt):
                 self._ev("deq", item)
                 nv.movnti(self.HEADIDX + tid * LINE_WORDS, idx)
-                nv.fence()                           # the ONE fence
+                self.pfence()                           # the ONE fence
                 # retire both halves of the old dummy (epoch-protected)
                 self.mem.retire(tid, nv.read(headv + V_PPTR))
                 self.mem.retire_volatile(tid, headv)

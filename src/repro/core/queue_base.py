@@ -19,7 +19,7 @@ from __future__ import annotations
 from typing import Any, Callable, Optional
 
 from .nvram import LINE_WORDS, NVRAM
-from .ssmem import SSMem, VolatileAlloc
+from .ssmem import SSMem
 
 NULL = 0
 Event = Callable[[tuple], None]
@@ -40,6 +40,26 @@ class QueueAlgorithm:
     # -- helpers ------------------------------------------------------------
     def _ev(self, *ev: Any) -> None:
         self.on_event(tuple(ev))
+
+    # -- model-aware persist primitives -------------------------------------
+    # All queues route their persistence path through these so the memory
+    # model can elide work the platform does not need: under eADR
+    # (persist-on-store) CLWB instructions are unnecessary and a tuned
+    # implementation simply would not issue them.
+    def pflush(self, addr: int) -> None:
+        """Flush `addr`'s line iff the platform requires explicit flushes."""
+        if self.nvram.model.needs_flush:
+            self.nvram.flush(addr)
+
+    def pfence(self) -> None:
+        """Persist barrier (SFENCE); always issued -- it orders stores even
+        on platforms where it no longer drains flush queues."""
+        self.nvram.fence()
+
+    def persist(self, addr: int) -> None:
+        """flush + fence ('persisting a location'), model-aware."""
+        self.pflush(addr)
+        self.pfence()
 
     def enqueue(self, tid: int, item: Any) -> None:
         raise NotImplementedError

@@ -51,11 +51,14 @@ class SSMem:
         base = self.nvram.alloc_region(self.area_nodes * LINE_WORDS,
                                        name=f"{self.name}:area:t{tid}",
                                        persistent=True)
-        # zero + persist the whole area with one fence (paper §5.1.3)
+        # zero + persist the whole area with one fence (paper §5.1.3);
+        # persist-on-store platforms (eADR) need no flushes at all
+        needs_flush = self.nvram.model.needs_flush
         for i in range(self.area_nodes):
             a = base + i * LINE_WORDS
             self.nvram.write_full_line(a, [0] * LINE_WORDS)
-            self.nvram.flush(a)
+            if needs_flush:
+                self.nvram.flush(a)
         self.nvram.fence()
         self._areas[tid].append(base)
         self._cursor[tid] = 0

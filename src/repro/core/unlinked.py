@@ -46,8 +46,8 @@ class UnlinkedQueue(QueueAlgorithm):
             nv.write_full_line(dummy, [None, NULL, 0, 0, 0, 0, 0, 0])
             nv.write(self.HEAD, (dummy, 0))
             nv.write(self.TAIL, dummy)
-            nv.flush(self.HEAD)
-            nv.fence()
+            self.pflush(self.HEAD)
+            self.pfence()
 
     # --------------------------------------------------------------- enqueue
     def enqueue(self, tid: int, item: Any) -> None:
@@ -64,8 +64,8 @@ class UnlinkedQueue(QueueAlgorithm):
                 if nv.cas(tail + NEXT, NULL, node):       # Line 29
                     self._ev("enq", item)
                     nv.write(node + LINKED, 1)            # Line 30
-                    nv.flush(node)                        # Line 31
-                    nv.fence()                            # the ONE fence
+                    self.pflush(node)                        # Line 31
+                    self.pfence()                            # the ONE fence
                     nv.cas(self.TAIL, tail, node)         # Line 32
                     return
             else:
@@ -80,8 +80,8 @@ class UnlinkedQueue(QueueAlgorithm):
             head_ptr, _head_idx = head
             head_next = nv.read(head_ptr + NEXT)          # Line 9
             if head_next == NULL:                         # Line 10
-                nv.flush(self.HEAD)                       # Line 11
-                nv.fence()
+                self.pflush(self.HEAD)                       # Line 11
+                self.pfence()
                 self._ev("empty")
                 return None                               # Line 12
             # MSQ guard: head must not overtake tail (reclamation safety)
@@ -94,8 +94,8 @@ class UnlinkedQueue(QueueAlgorithm):
             item = nv.read(head_next + ITEM)              # Line 14
             if nv.cas(self.HEAD, head, (head_next, nidx)):
                 self._ev("deq", item)
-                nv.flush(self.HEAD)                       # Line 15
-                nv.fence()                                # the ONE fence
+                self.pflush(self.HEAD)                       # Line 15
+                self.pfence()                                # the ONE fence
                 if self.node_to_retire[tid] != NULL:      # Lines 16-17
                     self.mem.retire(tid, self.node_to_retire[tid])
                 self.node_to_retire[tid] = head_ptr       # Line 18

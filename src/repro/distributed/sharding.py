@@ -25,7 +25,6 @@ import re
 from typing import Any, Optional
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 PyTree = Any

@@ -4,7 +4,6 @@ from __future__ import annotations
 import jax
 
 from .kernel import decode_attention_kernel
-from .ref import decode_attention_ref
 
 
 def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,

@@ -4,7 +4,6 @@ from __future__ import annotations
 import jax
 
 from .kernel import flash_attention_kernel
-from .ref import flash_attention_ref
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,

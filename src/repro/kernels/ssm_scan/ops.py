@@ -6,7 +6,6 @@ from typing import Tuple
 import jax
 
 from .kernel import ssm_scan_kernel
-from .ref import ssm_scan_ref
 
 
 def ssm_scan(dt: jax.Array, Bt: jax.Array, Ct: jax.Array, x: jax.Array,

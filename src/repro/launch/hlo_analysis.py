@@ -18,7 +18,6 @@ to expose.
 """
 from __future__ import annotations
 
-import json
 import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -161,17 +160,26 @@ def _dot_flops(op: OpInfo, comp: Computation) -> float:
     n_out = 1
     for d in out_dims:
         n_out *= d
-    # lhs operand name: first %arg inside dot(...)
-    m = re.search(r"\b" + re.escape(op.opcode) + r"\(%?([\w.\-]+)", op.line)
+    # lhs operand: first %name inside dot(...).  Newer XLA prints operand
+    # types inline ("dot(f32[256,256] %a, ...)"), so take the first %-token
+    # rather than the first word after the paren; the inline type is also a
+    # fallback source for the lhs dims when the symbol table misses.
     contract = 1
-    if m:
-        lhs_type = comp.symbols.get(m.group(1), "")
-        lhs_dims = _shape_dims(lhs_type)
-        cm = _LHS_C_RE.search(op.line)
-        if cm and lhs_dims:
-            for ci in cm.group(1).split(","):
-                if ci and int(ci) < len(lhs_dims):
-                    contract *= lhs_dims[int(ci)]
+    lhs_dims: List[int] = []
+    call = re.search(r"\bdot\((.*?)\)", op.line)
+    if call:
+        args = call.group(1)
+        nm = re.search(r"%([\w.\-]+)", args)
+        if nm:
+            lhs_dims = _shape_dims(comp.symbols.get(nm.group(1), ""))
+        if not lhs_dims:
+            # first inline shape in the operand list is the lhs type
+            lhs_dims = _shape_dims(args)
+    cm = _LHS_C_RE.search(op.line)
+    if cm and lhs_dims:
+        for ci in cm.group(1).split(","):
+            if ci and int(ci) < len(lhs_dims):
+                contract *= lhs_dims[int(ci)]
     return 2.0 * n_out * contract
 
 

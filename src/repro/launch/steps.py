@@ -6,14 +6,13 @@ real train/serve drivers on concrete arrays.
 """
 from __future__ import annotations
 
-import functools
 import math
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
 
-from repro.models import (SHAPES, forward, init_cache, init_params, loss_fn,
+from repro.models import (forward, init_cache, init_params, loss_fn,
                           serve_step)
 from repro.models.config import ModelConfig, ShapeConfig
 from repro.optim import AdamWConfig, adamw_update, init_opt_state

@@ -19,7 +19,6 @@ import argparse
 import functools
 import os
 import sys
-import time
 from typing import Optional
 
 import jax

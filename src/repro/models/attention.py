@@ -7,8 +7,7 @@ sequences.  ``use_pallas`` switches the hot spot to the TPU kernel.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -7,8 +7,7 @@ plus extra data-axis sharding from the sharding rules.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, NamedTuple, Optional, Tuple
+from typing import Any, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -13,12 +13,11 @@ Design rules carried over from the durable queues:
 """
 from __future__ import annotations
 
-import io
 import os
 import struct
 import zlib
-from dataclasses import dataclass, field
-from typing import Iterator, List, Optional
+from dataclasses import dataclass
+from typing import List
 
 _MAGIC = 0x5151A5A5     # 'QQ' durable-queue homage
 _HDR = struct.Struct("<III")   # magic, length, crc32

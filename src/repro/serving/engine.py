@@ -6,7 +6,7 @@ a time -- the cache path is the thing under test), then greedy-decodes
 ``max_new`` tokens, and durably commits the responses with one fence."""
 from __future__ import annotations
 
-from typing import Dict, List
+from typing import List
 
 import jax
 import jax.numpy as jnp

@@ -1,6 +1,5 @@
 """Per-kernel allclose validation vs the pure-jnp oracles (interpret=True),
 sweeping shapes and dtypes as required by the assignment."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -142,22 +141,32 @@ def test_ssm_scan_matches_model_chunked_path():
 
 
 # -------------------------------------------------- hypothesis property sweep
-from hypothesis import given, settings, strategies as st
+# hypothesis is an optional dev dependency (installed in CI): only the
+# property sweep is skipped without it, not the shape/dtype tests above.
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAS_HYPOTHESIS = True
+except ImportError:
+    _HAS_HYPOTHESIS = False
 
-
-@settings(max_examples=10, deadline=None)
-@given(s_blocks=st.integers(2, 6), h=st.sampled_from([2, 4, 8]),
-       kv=st.sampled_from([1, 2]), seed=st.integers(0, 999))
-def test_flash_attention_property(s_blocks, h, kv, seed):
-    if h % kv:
-        kv = 1
-    rng = np.random.RandomState(seed)
-    B, S, hd = 1, 128 * s_blocks, 32
-    q = jnp.asarray(rng.randn(B, S, h, hd), jnp.float32)
-    k = jnp.asarray(rng.randn(B, S, kv, hd), jnp.float32)
-    v = jnp.asarray(rng.randn(B, S, kv, hd), jnp.float32)
-    out = flash_attention_kernel(q, k, v, causal=True, block_q=128,
-                                 block_k=128, interpret=True)
-    ref = flash_attention_ref(q, k, v, causal=True)
-    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
-                               rtol=3e-5, atol=3e-5)
+if _HAS_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(s_blocks=st.integers(2, 6), h=st.sampled_from([2, 4, 8]),
+           kv=st.sampled_from([1, 2]), seed=st.integers(0, 999))
+    def test_flash_attention_property(s_blocks, h, kv, seed):
+        if h % kv:
+            kv = 1
+        rng = np.random.RandomState(seed)
+        B, S, hd = 1, 128 * s_blocks, 32
+        q = jnp.asarray(rng.randn(B, S, h, hd), jnp.float32)
+        k = jnp.asarray(rng.randn(B, S, kv, hd), jnp.float32)
+        v = jnp.asarray(rng.randn(B, S, kv, hd), jnp.float32)
+        out = flash_attention_kernel(q, k, v, causal=True, block_q=128,
+                                     block_k=128, interpret=True)
+        ref = flash_attention_ref(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=3e-5, atol=3e-5)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (optional dev dep)")
+    def test_flash_attention_property():
+        pass

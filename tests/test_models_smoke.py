@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, get_config, reduced_config
+from repro.configs import ARCHS, reduced_config
 from repro.models import forward, init_cache, init_params, loss_fn, serve_step
 from repro.optim import AdamWConfig, adamw_update, init_opt_state
 

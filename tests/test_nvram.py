@@ -1,5 +1,5 @@
 """Unit tests for the simulated NVRAM memory model (paper §2 semantics)."""
-from repro.core import NVRAM, LINE_WORDS
+from repro.core import NVRAM
 
 
 def test_write_not_durable_without_flush():

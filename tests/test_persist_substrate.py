@@ -1,10 +1,8 @@
 """WAL / cursor / checkpoint substrate: the paper's guidelines at file
 granularity, including torn-write (crash-prefix) recovery."""
 import os
-import struct
 
 import numpy as np
-import pytest
 
 from repro.persist import CursorFile, WriteAheadLog
 from repro.checkpoint import DurableCheckpointer

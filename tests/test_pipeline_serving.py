@@ -7,7 +7,7 @@ import sys
 import numpy as np
 import pytest
 
-from repro.data import DurableShardQueue, TokenSource
+from repro.data import DurableShardQueue
 from repro.serving import DurableRequestQueue, ServeEngine
 from repro.configs import reduced_config
 from repro.launch.elastic import StragglerPolicy, factorize_mesh, plan_remesh

@@ -9,7 +9,11 @@ queue. These are the system's core invariants:
   P5. zero post-flush accesses for the second-amendment queues.
 """
 import pytest
-from hypothesis import HealthCheck, given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="hypothesis is an optional dev dependency (installed in CI)")
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
 
 from repro.core import (ALL_QUEUES, DURABLE_QUEUES, QueueHarness,
                         check_durable_linearizability, split_at_crash)

@@ -1,7 +1,7 @@
 """Concurrent (scheduler-interleaved) correctness + lock-freedom checks."""
 import pytest
 
-from repro.core import ALL_QUEUES, QueueHarness, check_durable_linearizability
+from repro.core import ALL_QUEUES, QueueHarness
 
 
 def _mixed_plans(nthreads, per_thread):

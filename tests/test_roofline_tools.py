@@ -2,7 +2,6 @@
 model sanity, roofline-term math."""
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.launch.hlo_analysis import analyze
@@ -39,7 +38,10 @@ def test_walker_vs_xla_raw_discrepancy():
         return jax.lax.scan(lambda c, _: (c @ c, None), x, None, length=16)[0]
 
     c = jax.jit(scanned).lower(x).compile()
-    xla_flops = float(c.cost_analysis().get("flops", 0))
+    ca = c.cost_analysis()
+    if isinstance(ca, (list, tuple)):   # older jax returns [dict]
+        ca = ca[0]
+    xla_flops = float(ca.get("flops", 0))
     walker = analyze(c.as_text()).flops
     assert walker > 10 * xla_flops   # XLA counts the body once
 

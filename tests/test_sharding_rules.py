@@ -1,6 +1,4 @@
 """Sharding-rule unit tests (regression: the MoE/dense rule-order bug)."""
-import jax
-import jax.numpy as jnp
 import pytest
 from jax.sharding import PartitionSpec as P
 
