@@ -1,10 +1,13 @@
 """Benchmark harness -- one section per paper table/figure.
 
   B1 (Fig. 2, amended): workload x queue x thread count x **memory model**
-      -> simulated throughput (the B1' sweep; `eadr` / `cxl` columns show
-      how the paper's ranking shifts on other persistence platforms)
+      x **contention** -> simulated throughput (the B1' sweep; `eadr` /
+      `cxl` columns show how the paper's ranking shifts on other
+      persistence platforms, and the contended column restores the CAS
+      retry + helping costs the op-granularity executor cannot observe)
   B2 (§5/§6 accounting): fences/op + post-flush accesses/op per queue,
-      per memory model
+      per memory model -- uncontended at 1 thread (the paper's per-op
+      schedule) and contended at 4 threads (retry-inflated per-op costs)
   B3 (§2.1): ONLL upper-bound construction accounting
   B4 (assignment): roofline terms per (arch x shape x mesh) from the
       dry-run artifacts (benchmarks/dryrun_results.jsonl if present)
@@ -17,6 +20,7 @@ Examples::
   python benchmarks/run.py --smoke                    # CI smoke run
   python benchmarks/run.py --ops 1000 --threads 1,2,4,8,16,32,64
   python benchmarks/run.py --models eadr --workloads mixed5050
+  python benchmarks/run.py --contention on --threads 8,16   # contended only
 """
 from __future__ import annotations
 
@@ -29,7 +33,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from repro.core import NVRAM, ONLL  # noqa: E402
-from benchmarks.workloads import run_workload   # noqa: E402
+from benchmarks.workloads import contention_label, run_workload  # noqa: E402
 
 DURABLE = ["DurableMSQ", "IzraelevitzQ", "NVTraverseQ", "UnlinkedQ",
            "LinkedQ", "OptUnlinkedQ", "OptLinkedQ"]
@@ -38,39 +42,62 @@ MODELS = ["optane-clwb", "eadr", "cxl"]
 
 
 def bench_fig2(ops_per_thread: int, threads: list, models: list,
-               workloads: list, queues: list, engine: str) -> list:
+               workloads: list, queues: list, engine: str,
+               contention: list) -> list:
     rows = []
-    print("# B1: Fig.2 workloads x memory models (simulated latency model)")
+    print("# B1: Fig.2 workloads x memory models x contention "
+          "(simulated latency model)")
     print("name,us_per_call,derived")
     for wl in workloads:
         # full thread sweep on the headline workload, endpoints elsewhere
         tlist = threads if wl == "mixed5050" else \
             sorted({threads[0], threads[-1]})
         for model in models:
-            for nt in tlist:
-                for q in queues:
-                    r = run_workload(q, wl, nt, ops_per_thread,
-                                     model=model, engine=engine)
-                    rows.append(r)
-                    print(f"fig2/{wl}/{model}/t{nt}/{q},"
-                          f"{r['us_per_op']:.3f},"
-                          f"mops={r['mops_per_s']:.3f}")
+            for cont in contention:
+                for nt in tlist:
+                    for q in queues:
+                        r = run_workload(q, wl, nt, ops_per_thread,
+                                         model=model, engine=engine,
+                                         contention=cont)
+                        rows.append(r)
+                        print(f"fig2/{wl}/{model}/{r['contention']}/t{nt}/{q},"
+                              f"{r['us_per_op']:.3f},"
+                              f"mops={r['mops_per_s']:.3f};"
+                              f"retries_per_op={r['retries_per_op']:.2f}")
     return rows
 
 
+# B2's contended column runs at this thread count: enough co-scheduled ops
+# to exercise retries while keeping per-op accounting comparable.
+B2_CONTENDED_THREADS = 4
+
+
 def bench_persist_counts(ops: int, models: list, queues: list,
-                         engine: str) -> list:
-    print(f"\n# B2: persist-op accounting ({ops} ops, single thread, "
-          "per memory model)")
+                         engine: str, contention: list) -> list:
+    # 'native' (exact engine) keeps the paper's 1-thread per-op schedule:
+    # its contention axis is collapsed to that single column
+    cells = []   # (setting, label, thread count) actually run
+    for cont in contention:
+        label = contention_label(cont) if engine == "batched" else "native"
+        nt = 1 if label in ("off", "native") else B2_CONTENDED_THREADS
+        cells.append((cont, label, nt))
+    columns = ", ".join(f"{label} = {nt} thread{'s' if nt > 1 else ''}"
+                        for _, label, nt in cells)
+    print(f"\n# B2: persist-op accounting ({ops} ops, per memory model; "
+          f"{columns})")
     print("name,us_per_call,derived")
     rows = []
     for model in models:
-        for q in queues:
-            r = run_workload(q, "pairs", 1, ops, model=model, engine=engine)
-            rows.append(r)
-            print(f"counts/{model}/{q},{r['us_per_op']:.3f},"
-                  f"fences_per_op={r['fences_per_op']:.2f};"
-                  f"post_flush_per_op={r['post_flush_per_op']:.2f}")
+        for cont, label, nt in cells:
+            for q in queues:
+                r = run_workload(q, "pairs", nt, ops, model=model,
+                                 engine=engine, contention=cont)
+                rows.append(r)
+                print(f"counts/{model}/{r['contention']}/{q},"
+                      f"{r['us_per_op']:.3f},"
+                      f"fences_per_op={r['fences_per_op']:.2f};"
+                      f"post_flush_per_op={r['post_flush_per_op']:.2f};"
+                      f"retries_per_op={r['retries_per_op']:.2f}")
     return rows
 
 
@@ -129,12 +156,23 @@ def parse_args(argv=None) -> argparse.Namespace:
     ap.add_argument("--queues", default=",".join(DURABLE))
     ap.add_argument("--engine", choices=["batched", "exact"],
                     default="batched")
+    ap.add_argument("--contention", default="off,on",
+                    help="comma-separated contention axis values: off, on "
+                         "(calibrated default model), or a float "
+                         "retry_scale (batched engine only; the exact "
+                         "engine's contention is native)")
     ap.add_argument("--out", default=None,
                     help="write all B1/B2 rows to this CSV file")
     ap.add_argument("--sections", default="b1,b2,b3,b4")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI run: 30 ops/thread, threads 1,4")
     args = ap.parse_args(argv)
+    for tok in args.contention.split(","):
+        try:
+            contention_label(tok)
+        except ValueError:
+            ap.error(f"--contention: {tok!r} is not off, on, or a float "
+                     "retry_scale")
     if args.smoke:
         args.ops = 30
         args.threads = "1,4"
@@ -147,13 +185,17 @@ def main(argv=None) -> None:
     models = args.models.split(",")
     workloads = args.workloads.split(",")
     queues = args.queues.split(",")
+    contention = args.contention.split(",")
+    if args.engine == "exact":
+        contention = ["off"]   # exact runs contend natively; one column
     sections = set(args.sections.split(","))
     rows = []
     if "b1" in sections:
         rows += bench_fig2(args.ops, threads, models, workloads, queues,
-                           args.engine)
+                           args.engine, contention)
     if "b2" in sections:
-        rows += bench_persist_counts(args.ops, models, queues, args.engine)
+        rows += bench_persist_counts(args.ops, models, queues, args.engine,
+                                     contention)
     if "b3" in sections:
         bench_onll(args.ops)
     if "b4" in sections:

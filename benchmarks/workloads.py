@@ -17,6 +17,13 @@ Each run is parameterized by a **memory model** (``optane-clwb`` / ``eadr``
   * ``exact``   -- the OS-thread, per-primitive interleaving scheduler the
     crash/linearizability tests use (slow; seed-era op counts only).
 
+Batched runs take a **contention** setting (``off`` / ``on`` / a float
+``retry_scale``): ``on`` attaches the calibrated
+:class:`repro.core.contention.ContentionModel`, charging CAS-retry and
+helping-path costs for co-scheduled ops.  Exact runs report ``native`` --
+their retries really execute, which is what the model is calibrated
+against.
+
 Throughput is simulated time (per-thread latency-model clocks; see
 repro.core.nvram for constants + citations): ops / max(thread clock).  The
 paper's claims are about *orderings and ratios*, which is what these
@@ -27,7 +34,8 @@ from __future__ import annotations
 import random
 from typing import Dict, List, Tuple
 
-from repro.core import ALL_QUEUES, QueueHarness, get_memory_model
+from repro.core import (ALL_QUEUES, ContentionModel, QueueHarness,
+                        get_memory_model)
 
 
 def _plan_5050(tid: int, n_ops: int, seed: int):
@@ -77,10 +85,33 @@ def make_plans(workload: str, nthreads: int, ops_per_thread: int,
     raise ValueError(workload)
 
 
+def contention_label(setting) -> str:
+    """Classify an axis value (off | on | float retry_scale) without
+    building a model.  Identity checks first: numeric 0/1 must resolve to
+    their float scales, not to the False/True presets they compare equal
+    to."""
+    if setting is None or setting is False or setting == "off":
+        return "off"
+    if setting is True or setting == "on":
+        return "on"
+    return f"{float(setting):g}"
+
+
+def resolve_contention(setting) -> Tuple[str, "ContentionModel | None"]:
+    """('label', model-or-None) from an axis value: off | on | float scale."""
+    label = contention_label(setting)
+    if label == "off":
+        return label, None
+    if label == "on":
+        return label, ContentionModel()
+    return label, ContentionModel(retry_scale=float(label))
+
+
 def run_workload(queue_name: str, workload: str, nthreads: int,
                  ops_per_thread: int = 60, seed: int = 0,
                  model: str = "optane-clwb",
-                 engine: str = "batched") -> Dict[str, float]:
+                 engine: str = "batched",
+                 contention=None) -> Dict[str, float]:
     mm = get_memory_model(model)
     h = QueueHarness(ALL_QUEUES[queue_name], nthreads=nthreads,
                      area_nodes=4096, model=mm)
@@ -91,8 +122,12 @@ def run_workload(queue_name: str, workload: str, nthreads: int,
     base = h.nvram.total_stats()
     base_time = h.nvram.sim_time_ns()
     if engine == "batched":
-        res = h.run_batched(plans)
+        clabel, cmodel = resolve_contention(contention)
+        res = h.run_batched(plans, contention=cmodel)
+        retries_per_op = cmodel.retries_per_op() if cmodel else 0.0
     elif engine == "exact":
+        # the exact scheduler's contention is native: retries really run
+        clabel, retries_per_op = "native", 0.0
         res = h.run_scheduled(plans, seed=seed)
     else:
         raise ValueError(f"unknown engine {engine!r}")
@@ -101,10 +136,12 @@ def run_workload(queue_name: str, workload: str, nthreads: int,
     span = h.nvram.sim_time_ns() - base_time
     return {
         "queue": queue_name, "workload": workload, "threads": nthreads,
-        "model": mm.name, "engine": engine, "ops": ops,
+        "model": mm.name, "engine": engine, "contention": clabel,
+        "ops": ops,
         "mops_per_s": ops / max(span, 1) * 1e3,
         "us_per_op": span / max(ops, 1) / 1e3,
         "fences_per_op": d.fences / max(ops, 1),
         "flushes_per_op": d.flushes / max(ops, 1),
         "post_flush_per_op": d.post_flush_accesses / max(ops, 1),
+        "retries_per_op": retries_per_op,
     }

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 from typing import Any
 
+from .contention import RetryProfile
 from .nvram import LINE_WORDS, NVRAM
 from .queue_base import NULL, QueueAlgorithm, alloc_root_lines
 from .ssmem import SSMem
@@ -47,6 +48,21 @@ class DurableMSQueue(QueueAlgorithm):
             self.pflush(dummy)
             self.pflush(self.HEAD)
             self.pfence()
+
+    # ---------------------------------------------------------- contention
+    def retry_profile(self):
+        # enq retry: re-read TAIL (hit) and the obstructing tail->next on a
+        # line the winner flushed (post-flush), then take the helping path --
+        # persist the obstruction (flush+fence) and CAS TAIL forward before
+        # re-attempting the link CAS.  deq retry: pure re-reads -- the HEAD
+        # and node lines were already re-fetched (and so re-cached) by
+        # whichever op touched them first after the invalidating flush, so a
+        # retry adds hits, not post-flush accesses.
+        return {
+            "enq": RetryProfile(root=self.TAIL, reads=1, flushed_reads=0.8,
+                                cas=2, flushes=1, fences=1, weight=0.6),
+            "deq": RetryProfile(root=self.HEAD, reads=4),
+        }
 
     # ------------------------------------------------------------------ ops
     def enqueue(self, tid: int, item: Any) -> None:

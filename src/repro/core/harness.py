@@ -1,6 +1,16 @@
 """Test/benchmark harness: workloads, crash injection, durable-linearizability
 checking for the queue family.
 
+:class:`QueueHarness` owns one engine + allocator + queue instance and runs
+op plans over it three ways: :meth:`QueueHarness.run_single` (sequential,
+the differential-oracle path), :meth:`QueueHarness.run_scheduled` (exact
+per-primitive OS-thread scheduler -- crash injection and linearizability
+model checking), and :meth:`QueueHarness.run_batched` (clock-driven
+op-granularity executor -- the throughput path, optionally with a
+:class:`repro.core.contention.ContentionModel` charging CAS-retry/helping
+costs for co-scheduled ops).  See docs/architecture.md for how the engines,
+schedulers and the contention layer fit together.
+
 The checker implements the paper's correctness criterion (§3.2, §7): a
 post-crash recovered state is durably linearizable iff the history with the
 crash removed is linearizable.  For a FIFO queue with uniquely-tagged items
@@ -21,6 +31,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple, Type, Union
 
+from .contention import ContentionModel
 from .memmodel import MemoryModel
 from .nvram import NVRAM, Stats
 from .scheduler import ClockScheduler, Scheduler
@@ -88,6 +99,7 @@ class QueueHarness:
         self.queue = queue_cls(self.nvram, self.mem, nthreads,
                                on_event=self.events.append)
         self.ops: List[OpRecord] = []
+        self.contention: Optional[ContentionModel] = None   # last run_batched
 
     # ------------------------------------------------------------- workloads
     def make_worker(self, tid: int, plan: List[Tuple[str, Any]]):
@@ -119,22 +131,44 @@ class QueueHarness:
                          stats=self.nvram.total_stats(), ops_completed=done,
                          sim_time_ns=self.nvram.sim_time_ns())
 
-    def run_batched(self, plans: List[List[Tuple[str, Any]]]) -> RunResult:
+    def run_batched(self, plans: List[List[Tuple[str, Any]]],
+                    contention: Union[ContentionModel, bool, None] = None
+                    ) -> RunResult:
         """Clock-driven op-granularity execution: no OS threads, no yield
         points.  This is the throughput path -- thousands of ops per thread
         across 1..64 threads are practical (the exact scheduler caps out
         around 60 ops/thread).  The schedule is deterministic (see
-        ClockScheduler); interleavings vary only through the plans.  Crash
-        injection is not supported here; use :meth:`run_scheduled` for
-        crash/linearizability studies."""
+        ClockScheduler); interleavings vary only through the plans.
+
+        ``contention`` attaches a CAS-contention model to the clock windows:
+        pass a configured :class:`repro.core.contention.ContentionModel`, or
+        ``True`` for the calibrated default.  Retry/helping costs are charged
+        per the queue's :meth:`retry_profile`; with one thread (or
+        ``retry_scale=0``) the counts are bit-identical to the uncontended
+        run.  Crash injection is not supported here; use
+        :meth:`run_scheduled` for crash/linearizability studies."""
+        if contention is True:
+            contention = ContentionModel()
+        elif contention is False:
+            contention = None
         op_lists: List[List] = []
+        op_kinds: List[List[str]] = []
         for t, plan in enumerate(plans):
             thunks = []
             for kind, item in plan:
                 thunks.append(self._make_op(t, kind, item))
             op_lists.append(thunks)
-        sched = ClockScheduler(self.nvram)
-        sched.run(op_lists)
+            op_kinds.append([kind for kind, _ in plan])
+        if contention is not None:
+            contention.begin_run(self.nvram, self.queue.retry_profile())
+        self.contention = contention
+        sched = ClockScheduler(self.nvram, contention=contention)
+        try:
+            sched.run(op_lists, op_kinds=op_kinds)
+        finally:
+            # don't leave later (uncontended) runs on this engine paying
+            # for the per-primitive epoch/CAS-tag stamping
+            self.nvram.contention_tracking = False
         done = sum(1 for r in self.ops if r.completed)
         return RunResult(crashed=False, ops=self.ops, events=self.events,
                          stats=self.nvram.total_stats(), ops_completed=done,

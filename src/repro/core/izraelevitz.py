@@ -13,6 +13,7 @@ from __future__ import annotations
 
 from typing import Any
 
+from .contention import RetryProfile
 from .nvram import LINE_WORDS, NVRAM
 from .queue_base import NULL, QueueAlgorithm, alloc_root_lines
 from .ssmem import SSMem
@@ -41,6 +42,29 @@ class IzraelevitzQueue(QueueAlgorithm):
             self.pflush(self.HEAD)
             self.pflush(self.TAIL)
             self.pfence()
+
+    # ---------------------------------------------------------- contention
+    def retry_profile(self):
+        # the transform persists after EVERY shared access, so a retry
+        # replays flush(+fence) per re-read and re-touches the lines those
+        # very flushes invalidated -- the fence-heavy baseline is also the
+        # retry-heavy one.  NVTraverseQ inherits this with the read/CAS-fail
+        # fences elided (FENCE_AFTER_READ=False), mirroring the fast path.
+        # Expected counts fit against the exact scheduler (a re-read is
+        # post-flush only when no co-scheduled op re-fetched the line first).
+        if self.FENCE_AFTER_READ:
+            return {
+                "enq": RetryProfile(root=self.TAIL, flushed_reads=1.6,
+                                    flushes=3, fences=3),
+                "deq": RetryProfile(root=self.HEAD, flushed_reads=3.2,
+                                    flushes=5, fences=5),
+            }
+        return {
+            "enq": RetryProfile(root=self.TAIL, flushed_reads=2.5,
+                                flushes=3, weight=0.8),
+            "deq": RetryProfile(root=self.HEAD, flushed_reads=4,
+                                flushes=5, weight=0.8),
+        }
 
     # -- transformed accessors ---------------------------------------------
     def _pread(self, addr: int) -> Any:

@@ -20,6 +20,7 @@ from __future__ import annotations
 
 from typing import Any, Set
 
+from .contention import RetryProfile
 from .nvram import LINE_WORDS, NVRAM
 from .queue_base import NULL, QueueAlgorithm, alloc_root_lines
 from .ssmem import SSMem
@@ -51,6 +52,18 @@ class LinkedQueue(QueueAlgorithm):
             self.pflush(self.HEAD)
             self.pfence()
             self._persisted.add(dummy)
+
+    # ---------------------------------------------------------- contention
+    def retry_profile(self):
+        # retries issue no flushes, so no new invalidations: the lines the
+        # backward walk flushed are re-fetched once in the base accounting
+        # and retries re-read them as hits (exact-scheduler flushed-access
+        # totals stay flat).  LinkedQ's post-flush cost lives in the walk
+        # itself, not in the CAS loop.
+        return {
+            "enq": RetryProfile(root=self.TAIL, reads=2),
+            "deq": RetryProfile(root=self.HEAD, reads=4),
+        }
 
     # --------------------------------------------------------------- enqueue
     def enqueue(self, tid: int, item: Any) -> None:

@@ -16,9 +16,13 @@ Related work evaluates the same designs under different persistence regimes:
 
 A :class:`MemoryModel` bundles the latency constants and the behavioural
 flags that distinguish these regimes.  Both NVRAM engines (the batched array
-engine and the sequential reference) and the queue-level persist helpers
-(:meth:`repro.core.queue_base.QueueAlgorithm.pflush`) consult it, which turns
-"which persistence platform?" into a benchmark sweep axis.
+engine and the sequential reference), the queue-level persist helpers
+(:meth:`repro.core.queue_base.QueueAlgorithm.pflush`) and the contention
+layer's retry-cost resolver
+(:meth:`repro.core.contention.RetryProfile.event_units` -- a retry's
+re-read of flushed content is a post-flush access only under an
+invalidating-flush platform) all consult it, which turns "which persistence
+platform?" into a benchmark sweep axis.
 """
 from __future__ import annotations
 

@@ -11,6 +11,7 @@ from __future__ import annotations
 
 from typing import Any
 
+from .contention import RetryProfile
 from .nvram import NVRAM
 from .queue_base import NULL, QueueAlgorithm
 from .ssmem import VolatileAlloc
@@ -39,6 +40,13 @@ class MSQueue(QueueAlgorithm):
         nv.write(n + ITEM, item)
         nv.write(n + NEXT, NULL)
         return n
+
+    def retry_profile(self):
+        # everything is volatile: a retry re-reads cached words and re-CASes
+        return {
+            "enq": RetryProfile(root=self.TAIL, reads=2),
+            "deq": RetryProfile(root=self.HEAD, reads=4),
+        }
 
     def enqueue(self, tid: int, item: Any) -> None:
         nv = self.nvram

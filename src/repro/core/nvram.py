@@ -144,6 +144,14 @@ class NVRAM:
         self._brk = LINE_WORDS
         self._vbrk = self._VOLATILE_BASE
         self.regions: List[Tuple[str, int, int, bool]] = []
+        # --- contention bookkeeping (read by repro.core.contention; never
+        # consulted by the cost accounting itself).  Tag/epoch stamping is
+        # gated on contention_tracking (set by ContentionModel.begin_run) so
+        # uncontended runs and the exact scheduler pay nothing for it.
+        self.contention_tracking = False
+        self.epoch = 0                        # clock-window tick (scheduler)
+        self._line_epoch: Dict[int, int] = {}   # line -> last access epoch
+        self._cas_words: Dict[int, int] = {}    # CAS target word -> attempts
         # --- batched cost accumulator -------------------------------------
         self._ebuf: List[int] = []            # packed tid * N_EV + code
         self._counts = np.zeros((nthreads, N_EV), dtype=np.int64)
@@ -221,6 +229,8 @@ class NVRAM:
     # ------------------------------------------------------- cache mechanics
     def _touch(self, line: int, tid: int) -> None:
         """Account for bringing `line` into cache (persistent space)."""
+        if self.contention_tracking:
+            self._line_epoch[line] = self.epoch
         if self._cached[line]:
             self._ebuf.append(tid * N_EV + EV_HIT)
             return
@@ -306,6 +316,12 @@ class NVRAM:
         self._step("cas")
         tid = self.tid
         self._ebuf.append(tid * N_EV + EV_CAS)
+        # tag the CAS target word + stamp its line's access epoch (contention
+        # bookkeeping; persistent-space lines are stamped inside _touch)
+        if self.contention_tracking:
+            self._cas_words[addr] = self._cas_words.get(addr, 0) + 1
+            if addr >= self._VOLATILE_BASE:
+                self._line_epoch[addr // LINE_WORDS] = self.epoch
         if addr >= self._VOLATILE_BASE:
             i = addr - self._VOLATILE_BASE
             if self._vtouched[i]:
@@ -472,6 +488,41 @@ class NVRAM:
     def reset_after_recovery(self) -> None:
         """Recovery is complete: resume normal (cached) operation."""
         self.crashed = False
+
+    # ---------------------------------------------------- contention seam
+    # The contention layer (repro.core.contention) lives ABOVE this cost
+    # accumulator: it reads the tags/epochs below and feeds extra event
+    # codes through charge_events -- it never alters how a primitive is
+    # accounted, so single-thread runs stay bit-identical to the oracle.
+    def cas_count(self, addr: int) -> int:
+        """How many CAS attempts have targeted `addr` (tagged in cas())."""
+        return self._cas_words.get(addr, 0)
+
+    def cas_targets(self) -> Dict[int, int]:
+        """All tagged CAS target words with their attempt counts."""
+        return dict(self._cas_words)
+
+    def line_epoch(self, line: int) -> int:
+        """Last clock-window epoch at which `line` was accessed (-1 never).
+
+        Epochs are ticked by the batched scheduler (one per executed op);
+        under the exact scheduler they stay 0 and this bookkeeping is inert.
+        """
+        return self._line_epoch.get(line, -1)
+
+    def charge_events(self, tid: int, codes: List[int],
+                      repeat: int = 1) -> None:
+        """Append pre-classified event codes to thread `tid`'s account.
+
+        `codes` are EV_* values (one retry round's shape); they flow into
+        the same bincount reduction as real primitives, so charged retries
+        advance the thread's simulated clock and all Stats counters.
+        """
+        buf = self._ebuf
+        base = tid * N_EV
+        for _ in range(repeat):
+            for c in codes:
+                buf.append(base + c)
 
     # ------------------------------------------------------------- reporting
     def _drain(self) -> None:

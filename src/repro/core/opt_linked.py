@@ -20,6 +20,7 @@ from __future__ import annotations
 
 from typing import Any, List, Set, Tuple
 
+from .contention import RetryProfile
 from .nvram import LINE_WORDS, NVRAM
 from .queue_base import NULL, QueueAlgorithm
 from .ssmem import SSMem, VolatileAlloc
@@ -90,6 +91,16 @@ class OptLinkedQueue(QueueAlgorithm):
         nv.write(v + V_PPTR, pptr)
         nv.write(v + V_PREDV, predv)
         return v
+
+    # ---------------------------------------------------------- contention
+    def retry_profile(self):
+        # second amendment: retries re-read Volatile halves only (index,
+        # pred pointer, next) -- zero flushed_reads, so contended runs keep
+        # post_flush_accesses == 0 (property-tested).
+        return {
+            "enq": RetryProfile(root=self.TAIL, reads=4),
+            "deq": RetryProfile(root=self.HEAD, reads=4),
+        }
 
     # --------------------------------------------------------------- enqueue
     def enqueue(self, tid: int, item: Any) -> None:

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 from typing import Any, List, Tuple
 
+from .contention import RetryProfile
 from .nvram import LINE_WORDS, NVRAM
 from .queue_base import NULL, QueueAlgorithm
 from .ssmem import SSMem, VolatileAlloc
@@ -68,6 +69,16 @@ class OptUnlinkedQueue(QueueAlgorithm):
         nv.write(v + V_NEXT, NULL)
         nv.write(v + V_PPTR, pptr)
         return v
+
+    # ---------------------------------------------------------- contention
+    def retry_profile(self):
+        # second amendment: the fast path reads/CASes Volatile halves only,
+        # so a retry is pure cached work -- zero flushed_reads.  Contended
+        # runs must preserve post_flush_accesses == 0 (property-tested).
+        return {
+            "enq": RetryProfile(root=self.TAIL, reads=3),
+            "deq": RetryProfile(root=self.HEAD, reads=4),
+        }
 
     # --------------------------------------------------------------- enqueue
     def enqueue(self, tid: int, item: Any) -> None:

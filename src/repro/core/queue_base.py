@@ -16,8 +16,9 @@ NULL pointers are address 0 (reserved in the simulator).
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Optional
+from typing import Any, Callable, Dict, Optional
 
+from .contention import RetryProfile
 from .nvram import LINE_WORDS, NVRAM
 from .ssmem import SSMem
 
@@ -60,6 +61,22 @@ class QueueAlgorithm:
         """flush + fence ('persisting a location'), model-aware."""
         self.pflush(addr)
         self.pfence()
+
+    # -- contention contract -------------------------------------------------
+    def retry_profile(self) -> Dict[str, RetryProfile]:
+        """Per-op-kind shape of ONE failed CAS round, for the batched path.
+
+        Concrete queues return ``{'enq': RetryProfile(...), 'deq': ...}``
+        describing which root word each kind's linearizing CAS targets and
+        the event codes a retry replays -- cached re-reads, re-reads of
+        *flushed* content (the post-flush cost a retry re-incurs), and any
+        helping-path flush/fence work.  The batched scheduler's
+        :class:`repro.core.contention.ContentionModel` charges these per
+        modeled CAS failure; the exact scheduler ignores them (its retries
+        execute for real).  An empty dict (the default) opts the queue out
+        of contention modeling entirely.
+        """
+        return {}
 
     def enqueue(self, tid: int, item: Any) -> None:
         raise NotImplementedError

@@ -1,17 +1,38 @@
-"""Deterministic cooperative scheduler for concurrency + crash testing.
+"""The repo's two schedulers: exact per-primitive vs. batched clock-driven.
 
-Queue algorithms call into :class:`repro.core.nvram.NVRAM` primitives; each
-primitive is a *yield point* (``NVRAM.step_hook``).  The scheduler serializes
-primitives: real OS threads run the algorithm code, but exactly one thread is
-granted one primitive at a time, in a seed-determined order.  This gives:
+**Exact** (:class:`Scheduler`): queue algorithms call into
+:class:`repro.core.nvram.NVRAM` primitives; each primitive is a *yield
+point* (``NVRAM.step_hook``).  Real OS threads run the algorithm code, but
+exactly one thread is granted one primitive at a time, in a seed-determined
+order.  This gives:
 
 * reproducible interleavings (seeded random / round-robin policies),
 * crash injection at an exact global step index (``crash_at``), after which
   every thread observes :class:`ThreadCrashed` at its next primitive -- the
   full-system-crash model of Izraelevitz et al. adopted by the paper (§2).
 
-This is the standard model-checking-style harness for persistency algorithms;
-it is how we validate durable linearizability without NVRAM hardware.
+This is the standard model-checking-style harness for persistency
+algorithms -- how we validate durable linearizability without NVRAM
+hardware -- but the condition-variable handoff costs milliseconds per op,
+capping it at seed-era scales (tens of ops per thread).
+
+**Batched** (:class:`ClockScheduler`): a discrete-event executor with no OS
+threads and no yield points.  At each step the thread with the smallest
+simulated clock runs its next *whole operation* inline; thread clocks (from
+the engine's latency model) drive the interleaving deterministically.  This
+is the throughput path behind ``QueueHarness.run_batched`` (thousands of
+ops/thread, 1--64 threads) -- but running each op to completion means no
+CAS ever fails, so multi-thread contention must be modeled, not observed.
+
+**Contention windows**: ops whose simulated intervals overlap are
+*co-scheduled* -- they form the clock window an op contends in.  When a
+:class:`repro.core.contention.ContentionModel` is attached, the scheduler
+ticks ``NVRAM.epoch`` once per executed op (stamping per-line access
+epochs) and, after each op, lets the model charge the CAS retries + helping
+work a real interleaving of that window would have executed (see
+contention.py for the model).  Crash injection stays exclusive to the exact
+scheduler: crash tests use :class:`Scheduler`, benchmarks use
+:class:`ClockScheduler`.
 """
 from __future__ import annotations
 
@@ -142,14 +163,21 @@ class ClockScheduler:
     (e.g. the mixed5050 generator's seed), not the scheduler.
     """
 
-    def __init__(self, nvram: NVRAM):
+    def __init__(self, nvram: NVRAM, contention=None):
         self.nvram = nvram
+        self.contention = contention   # Optional[ContentionModel]
         self.ops_run = 0
 
-    def run(self, op_lists: List[List[Callable[[], None]]]) -> bool:
-        """op_lists[t] is thread t's sequence of zero-argument op thunks.
+    def run(self, op_lists: List[List[Callable[[], None]]],
+            op_kinds: Optional[List[List[str]]] = None) -> bool:
+        """op_lists[t] is thread t's sequence of zero-argument op thunks;
+        op_kinds[t][i] (required when a contention model is attached) names
+        thunk i's kind ('enq'/'deq') so retries charge the right profile.
         Returns False (this scheduler never injects crashes)."""
         nv = self.nvram
+        cm = self.contention
+        if cm is not None and op_kinds is None:
+            raise ValueError("contention modeling needs op_kinds")
         prev_hook, nv.step_hook = nv.step_hook, None   # no yield points
         try:
             cursors = [0] * len(op_lists)
@@ -157,13 +185,19 @@ class ClockScheduler:
                     enumerate(op_lists) if ops]
             heapq.heapify(heap)
             while heap:
-                _, t = heapq.heappop(heap)
+                t_start, t = heapq.heappop(heap)
                 nv.set_tid(t)
+                if cm is not None:
+                    nv.epoch += 1     # one clock-window tick per op
                 op_lists[t][cursors[t]]()
                 self.ops_run += 1
+                if cm is not None:
+                    t_end = cm.after_op(t, op_kinds[t][cursors[t]], t_start)
+                else:
+                    t_end = nv.thread_time_ns(t)
                 cursors[t] += 1
                 if cursors[t] < len(op_lists[t]):
-                    heapq.heappush(heap, (nv.thread_time_ns(t), t))
+                    heapq.heappush(heap, (t_end, t))
         finally:
             nv.step_hook = prev_hook
         return False

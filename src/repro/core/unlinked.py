@@ -20,6 +20,7 @@ from __future__ import annotations
 
 from typing import Any, List, Tuple
 
+from .contention import RetryProfile
 from .nvram import LINE_WORDS, NVRAM
 from .queue_base import NULL, QueueAlgorithm, alloc_root_lines
 from .ssmem import SSMem
@@ -48,6 +49,18 @@ class UnlinkedQueue(QueueAlgorithm):
             nv.write(self.TAIL, dummy)
             self.pflush(self.HEAD)
             self.pfence()
+
+    # ---------------------------------------------------------- contention
+    def retry_profile(self):
+        # retries issue no flushes of their own, so they add no NEW line
+        # invalidations: the flushed tail/head node lines are re-fetched
+        # once (charged to whichever op touches them first -- already in the
+        # base accounting) and a retry re-reads them as plain hits.  The
+        # exact scheduler confirms flushed-access totals stay flat here.
+        return {
+            "enq": RetryProfile(root=self.TAIL, reads=3),
+            "deq": RetryProfile(root=self.HEAD, reads=4),
+        }
 
     # --------------------------------------------------------------- enqueue
     def enqueue(self, tid: int, item: Any) -> None:

@@ -1,0 +1,93 @@
+"""Calibration: the batched contention model vs exact-scheduler ground truth.
+
+The acceptance criterion for the contention layer: batched multi-thread
+persist-instruction totals (flushes + fences) and flushed-access totals
+(post-flush accesses) must land within 15% of what the exact per-primitive
+OS-thread scheduler -- where CAS failures, retries and helping actually
+execute -- produces at 2--8 threads, for all seven durable queues.
+
+The exact scheduler is the ground truth because its retries are real: a
+thread that loses the link CAS re-reads the tail, takes the helping path,
+and re-touches flushed lines exactly as the algorithm dictates.  The
+contention model replays those costs statistically (see
+repro.core.contention); its default ``retry_scale`` and the per-queue
+``retry_profile()`` expected counts were fit against these very runs.
+
+Small absolute floors keep the relative tolerance meaningful where ground
+truth is tiny (the second-amendment queues have zero post-flush accesses on
+both sides, which must stay exactly zero -- see the property suite).
+"""
+import pytest
+
+from repro.core import ALL_QUEUES, QueueHarness
+from benchmarks.workloads import make_plans
+
+DURABLE7 = ["DurableMSQ", "IzraelevitzQ", "NVTraverseQ", "UnlinkedQ",
+            "LinkedQ", "OptUnlinkedQ", "OptLinkedQ"]
+
+TOLERANCE = 0.15
+PF_FLOOR = 30        # absolute floor for the post-flush denominator
+OPS_PER_THREAD = 24  # exact-scheduler runs are ~ms/op; keep runs small
+
+# Deliberately NOT marked slow: this suite IS the PR's acceptance gate for
+# the contention model, so CI must run it.  The ~2 min it costs is the
+# price of exact-scheduler ground truth; shrink OPS_PER_THREAD before
+# slow-marking it.
+
+
+def _counts(name, nthreads, engine, seed=1):
+    """(persist_instructions, post_flush_accesses) for one run."""
+    h = QueueHarness(ALL_QUEUES[name], nthreads=nthreads, area_nodes=1024)
+    plans, prefill = make_plans("pairs", nthreads, OPS_PER_THREAD)
+    for i in range(prefill):
+        h.queue.enqueue(0, ("pre", i))
+    base = h.nvram.total_stats()
+    if engine == "exact":
+        res = h.run_scheduled(plans, seed=seed)
+    else:
+        res = h.run_batched(plans, contention=True)
+    assert res.ops_completed == nthreads * OPS_PER_THREAD
+    d = h.nvram.total_stats().minus(base)
+    return d.flushes + d.fences, d.post_flush_accesses
+
+
+@pytest.mark.parametrize("name", DURABLE7)
+def test_contended_batched_matches_exact_scheduler(name):
+    for nthreads in (2, 4, 8):
+        persist_e, pf_e = _counts(name, nthreads, "exact")
+        persist_b, pf_b = _counts(name, nthreads, "batched")
+        assert abs(persist_b - persist_e) <= TOLERANCE * max(persist_e, 1), (
+            f"{name} t{nthreads}: persist instructions batched={persist_b} "
+            f"exact={persist_e} (> {TOLERANCE:.0%} off)")
+        assert abs(pf_b - pf_e) <= TOLERANCE * max(pf_e, PF_FLOOR), (
+            f"{name} t{nthreads}: flushed accesses batched={pf_b} "
+            f"exact={pf_e} (> {TOLERANCE:.0%} off)")
+
+
+def test_contention_charges_grow_with_threads():
+    """The modeled retry load must scale with the co-schedule width:
+    more threads on one root => more charged retries per op."""
+    per_op = []
+    for nthreads in (2, 4, 8):
+        h = QueueHarness(ALL_QUEUES["DurableMSQ"], nthreads=nthreads,
+                         area_nodes=1024)
+        plans, prefill = make_plans("pairs", nthreads, 40)
+        for i in range(prefill):
+            h.queue.enqueue(0, ("pre", i))
+        h.run_batched(plans, contention=True)
+        per_op.append(h.contention.retries_per_op())
+    assert per_op[0] < per_op[1] < per_op[2]
+    assert per_op[2] > 0.1
+
+
+def test_contention_feeds_back_into_sim_time():
+    """Charged retries advance the per-thread clocks, so a contended run's
+    simulated makespan must exceed the uncontended one's."""
+    def span(contention):
+        h = QueueHarness(ALL_QUEUES["IzraelevitzQ"], nthreads=8,
+                         area_nodes=1024)
+        plans, prefill = make_plans("pairs", 8, 40)
+        for i in range(prefill):
+            h.queue.enqueue(0, ("pre", i))
+        return h.run_batched(plans, contention=contention).sim_time_ns
+    assert span(True) > span(None) * 1.05

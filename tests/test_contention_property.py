@@ -1,0 +1,112 @@
+"""Properties of the contention layer: it must be exactly inert when there
+is nothing to contend with.
+
+The layer lives ABOVE the engine's cost accumulator -- it only appends
+extra event codes.  Therefore:
+
+* one thread (no co-scheduled ops => k == 0), or
+* a zero CAS-failure probability (``retry_scale=0``)
+
+must reproduce the uncontended batched counts **bit-identically** (every
+Stats field including time_ns), for all seven durable queues on all three
+memory models.  This is also what keeps ``tests/test_engine_differential.py``
+untouched: single-thread cost semantics cannot drift.
+
+The second amendment's headline invariant survives contention: modeled
+retries for OptUnlinkedQ/OptLinkedQ re-read volatile halves only, so
+post_flush_accesses stays exactly zero in contended multi-thread runs.
+"""
+import pytest
+
+from repro.core import (ALL_QUEUES, MEMORY_MODELS, ContentionModel,
+                        QueueHarness)
+from benchmarks.workloads import make_plans
+
+DURABLE7 = ["DurableMSQ", "IzraelevitzQ", "NVTraverseQ", "UnlinkedQ",
+            "LinkedQ", "OptUnlinkedQ", "OptLinkedQ"]
+STAT_FIELDS = ["reads", "writes", "cas", "flushes", "fences", "movntis",
+               "post_flush_accesses", "cold_misses", "time_ns"]
+
+
+def _run(name, model, nthreads, contention, ops=40):
+    h = QueueHarness(ALL_QUEUES[name], nthreads=nthreads, area_nodes=512,
+                     model=model)
+    plans, prefill = make_plans("pairs", nthreads, ops)
+    for i in range(prefill):
+        h.queue.enqueue(0, ("pre", i))
+    res = h.run_batched(plans, contention=contention)
+    assert res.ops_completed == nthreads * ops
+    return h.nvram.total_stats()
+
+
+@pytest.mark.parametrize("model", sorted(MEMORY_MODELS))
+@pytest.mark.parametrize("name", DURABLE7)
+def test_one_thread_contention_is_bit_identical(name, model):
+    plain = _run(name, model, 1, contention=None)
+    contended = _run(name, model, 1, contention=True)
+    for f in STAT_FIELDS:
+        assert getattr(contended, f) == getattr(plain, f), (
+            f"{name}/{model}: 1-thread contention perturbed {f}: "
+            f"{getattr(contended, f)} != {getattr(plain, f)}")
+
+
+@pytest.mark.parametrize("model", sorted(MEMORY_MODELS))
+@pytest.mark.parametrize("name", DURABLE7)
+def test_zero_failure_probability_is_bit_identical(name, model):
+    plain = _run(name, model, 4, contention=None)
+    contended = _run(name, model, 4,
+                     contention=ContentionModel(retry_scale=0.0))
+    for f in STAT_FIELDS:
+        assert getattr(contended, f) == getattr(plain, f), (
+            f"{name}/{model}: retry_scale=0 perturbed {f}: "
+            f"{getattr(contended, f)} != {getattr(plain, f)}")
+
+
+@pytest.mark.parametrize("model", sorted(MEMORY_MODELS))
+@pytest.mark.parametrize("name", ["OptUnlinkedQ", "OptLinkedQ"])
+def test_second_amendment_zero_post_flush_under_contention(name, model):
+    stats = _run(name, model, 8, contention=True)
+    assert stats.post_flush_accesses == 0
+
+
+def test_contended_run_actually_charges():
+    """Guard against the inertness tests passing vacuously: at 8 threads the
+    default model must charge a nonzero retry load."""
+    h = QueueHarness(ALL_QUEUES["UnlinkedQ"], nthreads=8, area_nodes=512)
+    plans, prefill = make_plans("pairs", 8, 40)
+    for i in range(prefill):
+        h.queue.enqueue(0, ("pre", i))
+    h.run_batched(plans, contention=True)
+    assert h.contention.retries_charged > 0
+
+
+def test_engine_bookkeeping_gated_on_tracking():
+    """CAS-target tags and line access epochs are stamped while a model is
+    attached (and readable afterwards), but uncontended runs on the same
+    engine pay nothing: the harness drops the tracking flag at run end."""
+    h = QueueHarness(ALL_QUEUES["UnlinkedQ"], nthreads=4, area_nodes=512)
+    plans, prefill = make_plans("pairs", 4, 20)
+    for i in range(prefill):
+        h.queue.enqueue(0, ("pre", i))
+    nv = h.queue.nvram
+    assert not nv.contention_tracking and nv.cas_targets() == {}
+    h.run_batched(plans, contention=True)
+    assert not nv.contention_tracking          # reset for later runs
+    root = h.queue.HEAD
+    assert nv.cas_count(root) > 0              # dequeues tagged the head
+    assert nv.line_epoch(root // 8) > 0        # its line epoch was stamped
+    # a follow-up uncontended run must not grow the bookkeeping
+    tags_before = sum(nv.cas_targets().values())
+    h2_plans, _ = make_plans("pairs", 4, 10)
+    h.run_batched(h2_plans)
+    assert sum(nv.cas_targets().values()) == tags_before
+
+
+def test_contention_rejects_reference_engine():
+    """The differential oracle stays contention-free by design."""
+    from repro.core import ReferenceNVRAM
+    h = QueueHarness(ALL_QUEUES["UnlinkedQ"], nthreads=2, area_nodes=256,
+                     nvram_cls=ReferenceNVRAM)
+    plans, _ = make_plans("pairs", 2, 4)
+    with pytest.raises(TypeError):
+        h.run_batched(plans, contention=True)

@@ -1,0 +1,104 @@
+"""Docs cross-reference checks: links resolve, referenced symbols exist.
+
+Keeps `docs/*.md` and the README honest as the code moves:
+
+* every relative markdown link (``[text](path)`` and ``[text](path#anchor)``)
+  must point at a file that exists in the repo;
+* every backticked dotted reference to this package (``repro.x.y`` or
+  ``repro.x.y.Symbol`` / ``:meth:`repro...```) must import, and a trailing
+  attribute must exist on the imported module/class;
+* every backticked repo path (``src/.../*.py``, ``tests/*.py``,
+  ``benchmarks/*.py``, ``docs/*.md``) must exist.
+
+CI runs this as its docs step; it is also part of the tier-1 suite.
+"""
+import importlib
+import re
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+DOC_FILES = sorted(REPO.glob("docs/*.md")) + [REPO / "README.md"]
+
+LINK_RE = re.compile(r"\[[^\]]+\]\(([^)\s]+)\)")
+CODE_RE = re.compile(r"`+([^`]+)`+")
+PKG_RE = re.compile(r"^(repro(?:\.\w+)+)$")
+PATH_RE = re.compile(r"^(?:src|tests|benchmarks|docs|examples)/[\w./\-]+$")
+
+
+def test_docs_exist():
+    """The documentation set the architecture satellite promises."""
+    for rel in ("docs/architecture.md", "docs/queues.md",
+                "docs/benchmarking.md", "README.md"):
+        assert (REPO / rel).is_file(), f"missing {rel}"
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: p.name)
+def test_relative_links_resolve(doc):
+    text = doc.read_text()
+    for target in LINK_RE.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        path = target.split("#", 1)[0]
+        if not path:
+            continue
+        resolved = (doc.parent / path).resolve()
+        if REPO not in resolved.parents and resolved != REPO:
+            continue   # escapes the repo: a GitHub-site URL (CI badge), not a file
+        assert resolved.exists(), (
+            f"{doc.relative_to(REPO)}: broken link {target!r} "
+            f"(resolved to {resolved})")
+
+
+def _module_and_attrs(dotted):
+    """Split 'repro.a.b.C.d' into the longest importable module + attrs."""
+    parts = dotted.split(".")
+    for cut in range(len(parts), 0, -1):
+        modname = ".".join(parts[:cut])
+        try:
+            mod = importlib.import_module(modname)
+        except ImportError:
+            continue
+        return mod, parts[cut:]
+    return None, parts
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: p.name)
+def test_code_spans_refer_to_real_things(doc):
+    text = doc.read_text()
+    for span in CODE_RE.findall(text):
+        span = span.strip().rstrip("(),")
+        # :meth:`repro...` / :class:`repro...` roles reduce to the dotted path
+        span = re.sub(r"^:\w+:", "", span).strip("`")
+        if PKG_RE.match(span):
+            mod, attrs = _module_and_attrs(span)
+            assert mod is not None, (
+                f"{doc.relative_to(REPO)}: unimportable reference `{span}`")
+            obj = mod
+            for a in attrs:
+                assert hasattr(obj, a), (
+                    f"{doc.relative_to(REPO)}: `{span}`: "
+                    f"{obj!r} has no attribute {a!r}")
+                obj = getattr(obj, a)
+        elif PATH_RE.match(span):
+            assert (REPO / span).exists(), (
+                f"{doc.relative_to(REPO)}: `{span}` names a missing path")
+
+
+def test_readme_links_to_docs():
+    """Satellite: the README must point readers at docs/."""
+    text = (REPO / "README.md").read_text()
+    for rel in ("docs/architecture.md", "docs/queues.md",
+                "docs/benchmarking.md"):
+        assert rel in text, f"README does not link {rel}"
+
+
+def test_docs_name_the_load_bearing_tests():
+    """architecture.md must state the differential coupling rule and the
+    calibration gate by naming their test files (which must exist)."""
+    arch = (REPO / "docs" / "architecture.md").read_text()
+    for rel in ("tests/test_engine_differential.py",
+                "tests/test_contention_calibration.py"):
+        assert rel in arch, f"architecture.md does not mention {rel}"
+        assert (REPO / rel).is_file(), f"{rel} named in docs but missing"
