@@ -21,6 +21,9 @@ Examples::
   python benchmarks/run.py --ops 1000 --threads 1,2,4,8,16,32,64
   python benchmarks/run.py --models eadr --workloads mixed5050
   python benchmarks/run.py --contention on --threads 8,16   # contended only
+  python benchmarks/run.py --contention learned --threads 8,16  # trace-fitted
+  python benchmarks/run.py --engine exact --trace-out traces/   # save traces
+  python benchmarks/run.py fit-profiles               # refit learned.json
 """
 from __future__ import annotations
 
@@ -41,9 +44,17 @@ WORKLOADS = ["mixed5050", "pairs", "producers", "consumers", "prodcons"]
 MODELS = ["optane-clwb", "eadr", "cxl"]
 
 
+def _trace_path(trace_out, *parts) -> str:
+    if not trace_out:
+        return None
+    os.makedirs(trace_out, exist_ok=True)
+    return os.path.join(trace_out,
+                        "_".join(str(p) for p in parts) + ".trace.npz")
+
+
 def bench_fig2(ops_per_thread: int, threads: list, models: list,
                workloads: list, queues: list, engine: str,
-               contention: list) -> list:
+               contention: list, trace_out: str = None) -> list:
     rows = []
     print("# B1: Fig.2 workloads x memory models x contention "
           "(simulated latency model)")
@@ -58,7 +69,10 @@ def bench_fig2(ops_per_thread: int, threads: list, models: list,
                     for q in queues:
                         r = run_workload(q, wl, nt, ops_per_thread,
                                          model=model, engine=engine,
-                                         contention=cont)
+                                         contention=cont,
+                                         trace_path=_trace_path(
+                                             trace_out, "b1", wl, model, q,
+                                             f"t{nt}"))
                         rows.append(r)
                         print(f"fig2/{wl}/{model}/{r['contention']}/t{nt}/{q},"
                               f"{r['us_per_op']:.3f},"
@@ -73,7 +87,8 @@ B2_CONTENDED_THREADS = 4
 
 
 def bench_persist_counts(ops: int, models: list, queues: list,
-                         engine: str, contention: list) -> list:
+                         engine: str, contention: list,
+                         trace_out: str = None) -> list:
     # 'native' (exact engine) keeps the paper's 1-thread per-op schedule:
     # its contention axis is collapsed to that single column
     cells = []   # (setting, label, thread count) actually run
@@ -91,7 +106,9 @@ def bench_persist_counts(ops: int, models: list, queues: list,
         for cont, label, nt in cells:
             for q in queues:
                 r = run_workload(q, "pairs", nt, ops, model=model,
-                                 engine=engine, contention=cont)
+                                 engine=engine, contention=cont,
+                                 trace_path=_trace_path(trace_out, "b2",
+                                                        model, q, f"t{nt}"))
                 rows.append(r)
                 print(f"counts/{model}/{r['contention']}/{q},"
                       f"{r['us_per_op']:.3f},"
@@ -158,9 +175,15 @@ def parse_args(argv=None) -> argparse.Namespace:
                     default="batched")
     ap.add_argument("--contention", default="off,on",
                     help="comma-separated contention axis values: off, on "
-                         "(calibrated default model), or a float "
+                         "(calibrated default model), learned "
+                         "(trace-fitted profiles from "
+                         "benchmarks/profiles/learned.json), or a float "
                          "retry_scale (batched engine only; the exact "
                          "engine's contention is native)")
+    ap.add_argument("--trace-out", default=None,
+                    help="directory for captured traces (*.trace.npz); "
+                         "exact-engine runs only -- the trace subsystem "
+                         "records real interleavings")
     ap.add_argument("--out", default=None,
                     help="write all B1/B2 rows to this CSV file")
     ap.add_argument("--sections", default="b1,b2,b3,b4")
@@ -171,15 +194,58 @@ def parse_args(argv=None) -> argparse.Namespace:
         try:
             contention_label(tok)
         except ValueError:
-            ap.error(f"--contention: {tok!r} is not off, on, or a float "
-                     "retry_scale")
+            ap.error(f"--contention: {tok!r} is not off, on, learned, or "
+                     "a float retry_scale")
+    if args.trace_out and args.engine != "exact":
+        ap.error("--trace-out needs --engine exact: the trace subsystem "
+                 "records real per-primitive interleavings")
     if args.smoke:
         args.ops = 30
         args.threads = "1,4"
     return args
 
 
+def fit_profiles_main(argv) -> None:
+    """`run.py fit-profiles`: capture exact-scheduler traces and refit the
+    learned contention profiles (benchmarks/profiles/learned.json)."""
+    ap = argparse.ArgumentParser(
+        prog="run.py fit-profiles",
+        description="Trace the exact scheduler and fit per-queue contention "
+                    "profiles (repro.trace.fit); writes the JSON the "
+                    "--contention learned axis reads.")
+    ap.add_argument("--queues", default=",".join(DURABLE))
+    ap.add_argument("--threads", default="2,4,8,12",
+                    help="thread counts to trace (default 2,4,8,12: the "
+                         "12-thread sample anchors the extrapolation "
+                         "region; exact runs get slow past 12)")
+    ap.add_argument("--ops", type=int, default=24,
+                    help="ops per thread per trace (default 24)")
+    ap.add_argument("--seed", type=int, default=1)
+    ap.add_argument("--model", default="optane-clwb")
+    ap.add_argument("--trace-out", default=None,
+                    help="also save the captured traces to this directory")
+    ap.add_argument("--out",
+                    default=os.path.join(os.path.dirname(__file__),
+                                         "profiles", "learned.json"),
+                    help="profile JSON destination (default: the checked-in "
+                         "benchmarks/profiles/learned.json)")
+    args = ap.parse_args(argv)
+    from repro.trace.fit import fit_all, save_profiles
+    profiles = fit_all(
+        args.queues.split(","),
+        thread_counts=[int(t) for t in args.threads.split(",")],
+        ops_per_thread=args.ops, seed=args.seed, model=args.model,
+        trace_dir=args.trace_out, log=print)
+    os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+    save_profiles(args.out, profiles)
+    print(f"# wrote learned profiles for {len(profiles)} queues "
+          f"to {args.out}")
+
+
 def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if argv and argv[0] == "fit-profiles":
+        return fit_profiles_main(argv[1:])
     args = parse_args(argv)
     threads = sorted({int(t) for t in args.threads.split(",")})
     models = args.models.split(",")
@@ -192,10 +258,11 @@ def main(argv=None) -> None:
     rows = []
     if "b1" in sections:
         rows += bench_fig2(args.ops, threads, models, workloads, queues,
-                           args.engine, contention)
+                           args.engine, contention,
+                           trace_out=args.trace_out)
     if "b2" in sections:
         rows += bench_persist_counts(args.ops, models, queues, args.engine,
-                                     contention)
+                                     contention, trace_out=args.trace_out)
     if "b3" in sections:
         bench_onll(args.ops)
     if "b4" in sections:

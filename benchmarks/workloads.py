@@ -17,12 +17,15 @@ Each run is parameterized by a **memory model** (``optane-clwb`` / ``eadr``
   * ``exact``   -- the OS-thread, per-primitive interleaving scheduler the
     crash/linearizability tests use (slow; seed-era op counts only).
 
-Batched runs take a **contention** setting (``off`` / ``on`` / a float
-``retry_scale``): ``on`` attaches the calibrated
+Batched runs take a **contention** setting (``off`` / ``on`` /
+``learned`` / a float ``retry_scale``): ``on`` attaches the calibrated
 :class:`repro.core.contention.ContentionModel`, charging CAS-retry and
-helping-path costs for co-scheduled ops.  Exact runs report ``native`` --
-their retries really execute, which is what the model is calibrated
-against.
+helping-path costs for co-scheduled ops; ``learned`` swaps the hand-fit
+per-queue retry profiles for the trace-fitted ones checked in at
+``benchmarks/profiles/learned.json`` (see :mod:`repro.trace.fit`; refit
+with ``python benchmarks/run.py fit-profiles``).  Exact runs report
+``native`` -- their retries really execute, which is what the model is
+calibrated against.
 
 Throughput is simulated time (per-thread latency-model clocks; see
 repro.core.nvram for constants + citations): ops / max(thread clock).  The
@@ -31,11 +34,17 @@ reproduce.
 """
 from __future__ import annotations
 
+import os
 import random
 from typing import Dict, List, Tuple
 
 from repro.core import (ALL_QUEUES, ContentionModel, QueueHarness,
                         get_memory_model)
+
+# the checked-in trace-fitted contention profiles (see repro.trace.fit)
+LEARNED_PROFILES_PATH = os.path.join(os.path.dirname(__file__), "profiles",
+                                     "learned.json")
+_learned_cache: dict = {}
 
 
 def _plan_5050(tid: int, n_ops: int, seed: int):
@@ -86,24 +95,48 @@ def make_plans(workload: str, nthreads: int, ops_per_thread: int,
 
 
 def contention_label(setting) -> str:
-    """Classify an axis value (off | on | float retry_scale) without
-    building a model.  Identity checks first: numeric 0/1 must resolve to
-    their float scales, not to the False/True presets they compare equal
-    to."""
+    """Classify an axis value (off | on | learned | float retry_scale)
+    without building a model.  Identity checks first: numeric 0/1 must
+    resolve to their float scales, not to the False/True presets they
+    compare equal to."""
     if setting is None or setting is False or setting == "off":
         return "off"
     if setting is True or setting == "on":
         return "on"
+    if setting == "learned":
+        return "learned"
     return f"{float(setting):g}"
 
 
-def resolve_contention(setting) -> Tuple[str, "ContentionModel | None"]:
-    """('label', model-or-None) from an axis value: off | on | float scale."""
+def load_learned_profiles(path: str = None) -> dict:
+    """Load (and cache) the trace-fitted per-queue contention profiles."""
+    path = path or LEARNED_PROFILES_PATH
+    if path not in _learned_cache:
+        from repro.trace.fit import load_profiles
+        _learned_cache[path] = load_profiles(path)
+    return _learned_cache[path]
+
+
+def resolve_contention(setting, queue_name: str = None
+                       ) -> Tuple[str, "ContentionModel | None"]:
+    """('label', model-or-None) from an axis value: off | on | learned |
+    float scale.  ``learned`` needs `queue_name` to pick that queue's
+    trace-fitted profile from ``benchmarks/profiles/learned.json``."""
     label = contention_label(setting)
     if label == "off":
         return label, None
     if label == "on":
         return label, ContentionModel()
+    if label == "learned":
+        if queue_name is None:
+            raise ValueError("--contention learned needs a queue name")
+        profiles = load_learned_profiles()
+        if queue_name not in profiles:
+            raise ValueError(
+                f"no learned profile for {queue_name!r} in "
+                f"{LEARNED_PROFILES_PATH}; re-run "
+                "`python benchmarks/run.py fit-profiles`")
+        return label, ContentionModel(profiles=profiles[queue_name])
     return label, ContentionModel(retry_scale=float(label))
 
 
@@ -111,7 +144,8 @@ def run_workload(queue_name: str, workload: str, nthreads: int,
                  ops_per_thread: int = 60, seed: int = 0,
                  model: str = "optane-clwb",
                  engine: str = "batched",
-                 contention=None) -> Dict[str, float]:
+                 contention=None,
+                 trace_path: str = None) -> Dict[str, float]:
     mm = get_memory_model(model)
     h = QueueHarness(ALL_QUEUES[queue_name], nthreads=nthreads,
                      area_nodes=4096, model=mm)
@@ -122,13 +156,22 @@ def run_workload(queue_name: str, workload: str, nthreads: int,
     base = h.nvram.total_stats()
     base_time = h.nvram.sim_time_ns()
     if engine == "batched":
-        clabel, cmodel = resolve_contention(contention)
+        clabel, cmodel = resolve_contention(contention, queue_name)
         res = h.run_batched(plans, contention=cmodel)
         retries_per_op = cmodel.retries_per_op() if cmodel else 0.0
     elif engine == "exact":
-        # the exact scheduler's contention is native: retries really run
+        # the exact scheduler's contention is native: retries really run;
+        # trace capture (repro.trace) records the real interleaving
         clabel, retries_per_op = "native", 0.0
-        res = h.run_scheduled(plans, seed=seed)
+        rec = None
+        if trace_path:
+            from repro.trace import TraceRecorder, save_trace
+            rec = TraceRecorder()
+        res = h.run_scheduled(plans, seed=seed, trace=rec)
+        if rec is not None:
+            rec.trace.meta["workload"] = workload
+            rec.trace.meta["ops_per_thread"] = ops_per_thread
+            save_trace(trace_path, rec.trace)
     else:
         raise ValueError(f"unknown engine {engine!r}")
     d = h.nvram.total_stats().minus(base)

@@ -3,16 +3,22 @@ workload for every durable queue and verify durable linearizability at each
 (the paper's §7 correctness argument, executed).
 
   PYTHONPATH=src python examples/crash_recovery_demo.py
+  PYTHONPATH=src python examples/crash_recovery_demo.py --quick   # CI smoke
 """
-import sys
-
-sys.path.insert(0, "src")
+import argparse
 
 from repro.core import (DURABLE_QUEUES, QueueHarness,
                         check_durable_linearizability, split_at_crash)
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--stride", type=int, default=35,
+                    help="crash-point stride over steps 10..500 (default 35)")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sweep for CI smoke (stride 140)")
+    args = ap.parse_args()
+    stride = 140 if args.quick else args.stride
     plans = []
     for t in range(3):
         p = []
@@ -24,7 +30,7 @@ def main() -> None:
 
     for name in sorted(DURABLE_QUEUES):
         checked = 0
-        for crash_at in range(10, 500, 35):
+        for crash_at in range(10, 500, stride):
             for mode in ("min", "random", "max"):
                 h = QueueHarness(DURABLE_QUEUES[name], nthreads=3,
                                  area_nodes=256)

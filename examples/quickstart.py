@@ -7,10 +7,6 @@ cache lines.
 
   PYTHONPATH=src python examples/quickstart.py
 """
-import sys
-
-sys.path.insert(0, "src")
-
 from repro.core import (ALL_QUEUES, QueueHarness,
                         check_durable_linearizability, split_at_crash)
 

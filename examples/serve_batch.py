@@ -8,9 +8,6 @@ the queue object and proves recovery re-serves exactly the unserved ones.
   PYTHONPATH=src python examples/serve_batch.py
 """
 import shutil
-import sys
-
-sys.path.insert(0, "src")
 
 import numpy as np
 

@@ -12,9 +12,6 @@ and replays exactly the unconsumed data shards.
 """
 import argparse
 import dataclasses
-import sys
-
-sys.path.insert(0, "src")
 
 from repro.configs import get_config
 from repro.launch import train as train_mod

@@ -19,7 +19,7 @@ OptLinkedQ   (2nd amend.) 1                       **0**
 """
 from .memmodel import (MEMORY_MODELS, MemoryModel, OPTANE_CLWB, EADR,
                        CXL_MEM, get_memory_model)
-from .contention import ContentionModel, RetryProfile
+from .contention import ContentionModel, LearnedRetryProfile, RetryProfile
 from .nvram import NVRAM, LINE_WORDS, Stats, ThreadCrashed
 from .nvram_ref import ReferenceNVRAM
 from .scheduler import ClockScheduler, Scheduler
@@ -37,7 +37,7 @@ from .harness import (ALL_QUEUES, DURABLE_QUEUES, QueueHarness,
                       check_durable_linearizability, split_at_crash)
 
 __all__ = [
-    "ContentionModel", "RetryProfile",
+    "ContentionModel", "LearnedRetryProfile", "RetryProfile",
     "NVRAM", "ReferenceNVRAM", "LINE_WORDS", "Stats", "ThreadCrashed",
     "Scheduler", "ClockScheduler", "SSMem", "VolatileAlloc", "NULL",
     "QueueAlgorithm", "MSQueue", "DurableMSQueue", "IzraelevitzQueue",

@@ -64,8 +64,8 @@ counts exactly -- the property suite asserts bit-equality.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 from .memmodel import MemoryModel
 from .nvram import (EV_CAS, EV_FENCE, EV_FENCE_LINE, EV_FLUSH, EV_HIT,
@@ -101,35 +101,93 @@ class RetryProfile:
     flushes: float = 0.0      # helping-path flushes (persist the obstruction)
     fences: float = 0.0       # helping-path fences
     weight: float = 1.0       # race-window fraction relative to the ~0.2 norm
+    # Contention decay of the post-flush fraction: a retry's re-read pays
+    # the post-flush fetch only if no co-scheduled op re-fetched the
+    # invalidated line first, so the effective per-round count shrinks as
+    # the window widens: flushed_reads / (1 + flushed_decay * k).  0 (the
+    # hand-profile default) keeps the count contention-constant; the
+    # trace fit (repro.trace.fit) learns it from 2..12-thread traces.
+    flushed_decay: float = 0.0
+    # Saturation of the expected failed rounds per op.  The geometric
+    # E = p/(1-p) caps at P_CAP/(1-P_CAP) (~5.7) once many threads hammer
+    # one root, but the exact scheduler saturates lower and per-queue
+    # (helping drains the obstruction; the root CAS serializes).  The
+    # default keeps the hand-profile behavior; the trace fit measures it.
+    max_rounds: float = P_CAP / (1.0 - P_CAP)
 
-    def event_units(self, model: MemoryModel) -> List[Tuple[Tuple[int, ...],
-                                                            float]]:
-        """(code-sequence, expected-count) units for one retry round.
+    def event_units(self, model: MemoryModel
+                    ) -> List[Tuple[Tuple[int, ...], float, bool]]:
+        """(code-sequence, expected-count, decays) units for one retry round.
 
         Counts are *expected values per failed round* (a retry takes the
         DurableMSQ helping path only some of the time; a re-read lands on a
         still-invalidated line only when no other op re-fetched it first),
         so they are floats -- the model accrues each unit in a deterministic
-        fractional accumulator and emits whole events.
+        fractional accumulator and emits whole events.  ``decays`` marks
+        the flushed-read unit, whose count the model additionally scales by
+        ``1 / (1 + flushed_decay * k)`` at charge time.
         """
         # Re-touching a line the algorithm just flushed: the paper's
         # post-flush access under invalidating CLWB; an ordinary hit when
         # flushes retain the line (CXL) or are never issued (eADR).
         flushed_touch = (EV_POSTFLUSH if model.flush_invalidates else EV_HIT)
         units = [
-            ((EV_READ, EV_HIT), self.reads),
-            ((EV_READ, flushed_touch), self.flushed_reads),
-            ((EV_CAS, EV_HIT), self.cas),
+            ((EV_READ, EV_HIT), self.reads, False),
+            ((EV_READ, flushed_touch), self.flushed_reads, True),
+            ((EV_CAS, EV_HIT), self.cas, False),
         ]
         if model.needs_flush:
-            units.append(((EV_FLUSH,), self.flushes))
+            units.append(((EV_FLUSH,), self.flushes, False))
             fence_codes = ((EV_FENCE, EV_FENCE_LINE) if self.flushes
                            else (EV_FENCE,))
-            units.append((fence_codes, self.fences))
+            units.append((fence_codes, self.fences, False))
         else:
             # eADR: helping degenerates to the ordering barrier alone
-            units.append(((EV_FENCE,), self.fences))
-        return [(codes, n) for codes, n in units if n > 0]
+            units.append(((EV_FENCE,), self.fences, False))
+        return [(codes, n, dec) for codes, n, dec in units if n > 0]
+
+
+# RetryProfile numeric fields a learned profile may override (root stays
+# instance-bound: addresses are allocation-order specific)
+_LEARNED_FIELDS = ("reads", "flushed_reads", "cas", "flushes", "fences",
+                   "weight", "flushed_decay", "max_rounds")
+
+
+@dataclass(frozen=True)
+class LearnedRetryProfile:
+    """Per-queue retry-profile numbers measured from exact-scheduler traces.
+
+    Produced by :mod:`repro.trace.fit` (least-squares per-round event
+    counts + a race-window weight matched to observed CAS failures) and
+    consumed here: pass one to :class:`ContentionModel` and
+    :meth:`ContentionModel.begin_run` *binds* it against the queue's own
+    :meth:`repro.core.queue_base.QueueAlgorithm.retry_profile` -- the
+    declared profiles contribute only their ``root`` addresses (which are
+    allocation-specific), every numeric field comes from the measurement.
+
+    ``params`` maps op kind -> field -> value for the fields
+    ``reads / flushed_reads / cas / flushes / fences / weight``;
+    ``source`` carries fit provenance (thread counts, ops, residuals).
+    """
+
+    queue: str
+    params: Mapping[str, Mapping[str, float]]
+    source: Mapping[str, Any] = field(default_factory=dict)
+
+    def bind(self, declared: Dict[str, RetryProfile]
+             ) -> Dict[str, RetryProfile]:
+        """Graft learned numbers onto the queue's declared roots."""
+        out: Dict[str, RetryProfile] = {}
+        for kind, prof in declared.items():
+            p = self.params.get(kind)
+            if p is None:
+                out[kind] = prof      # kind the fit never observed
+                continue
+            out[kind] = RetryProfile(
+                root=prof.root,
+                **{f: float(p.get(f, getattr(prof, f)))
+                   for f in _LEARNED_FIELDS})
+        return out
 
 
 class ContentionModel:
@@ -148,13 +206,20 @@ class ContentionModel:
         Epoch width of the co-schedule window; entries older than this many
         executed ops are dropped regardless of clock overlap.  ``None``
         (default) sizes it to the thread count at :meth:`begin_run`.
+    ``profiles``
+        An optional :class:`LearnedRetryProfile` (from
+        :mod:`repro.trace.fit`): at :meth:`begin_run` its measured numbers
+        are bound onto the queue-declared roots, replacing the hand-fit
+        per-round counts and weights.
     """
 
     def __init__(self, retry_scale: float = DEFAULT_RETRY_SCALE,
-                 window_ops: Optional[int] = None):
+                 window_ops: Optional[int] = None,
+                 profiles: Optional[LearnedRetryProfile] = None):
         if retry_scale < 0:
             raise ValueError("retry_scale must be >= 0")
         self.retry_scale = retry_scale
+        self.learned = profiles
         self.window_ops = window_ops
         self._window_ops_fixed = window_ops is not None
         self.retries_charged = 0.0    # sum of expected failed rounds
@@ -181,6 +246,8 @@ class ContentionModel:
         self._nv = nvram
         nvram.contention_tracking = True   # enable epoch/CAS-tag bookkeeping
         self._profiles = dict(profiles or {})
+        if self.learned is not None:
+            self._profiles = self.learned.bind(self._profiles)
         self._units = {k: p.event_units(nvram.model)
                        for k, p in self._profiles.items()}
         self._roots = sorted({p.root for p in self._profiles.values()})
@@ -224,11 +291,19 @@ class ContentionModel:
             k = sum(1 for (_, t, _) in live if t != tid)
             if k:
                 p = min(self.retry_scale * prof.weight * k, P_CAP)
-                expected = p / (1.0 - p)   # geometric retry rounds
+                # geometric retry rounds, saturated at the profile's
+                # (possibly trace-measured) per-op ceiling
+                expected = min(p / (1.0 - p), prof.max_rounds)
                 self.retries_charged += expected
                 self.retries_by_root[w] = \
                     self.retries_by_root.get(w, 0.0) + expected
-                for u, (codes, per_round) in enumerate(self._units[kind]):
+                for u, (codes, per_round, decays) in \
+                        enumerate(self._units[kind]):
+                    if decays and prof.flushed_decay > 0:
+                        # wider window => some other op likely re-fetched
+                        # the invalidated line first; this round hits it
+                        per_round = per_round / \
+                            (1.0 + prof.flushed_decay * k)
                     key = (tid, kind, u)
                     acc = self._frac.get(key, 0.0) + expected * per_round
                     whole = int(acc)

@@ -100,6 +100,7 @@ class QueueHarness:
                                on_event=self.events.append)
         self.ops: List[OpRecord] = []
         self.contention: Optional[ContentionModel] = None   # last run_batched
+        self._trace = None            # active repro.trace recorder, if any
 
     # ------------------------------------------------------------- workloads
     def make_worker(self, tid: int, plan: List[Tuple[str, Any]]):
@@ -109,31 +110,58 @@ class QueueHarness:
                 self._make_op(tid, kind, item)()
         return run
 
+    def _trace_begin(self, trace, nthreads: int, seed: Optional[int],
+                     scheduler: str) -> None:
+        if trace is None:
+            return
+        trace.attach(self.nvram, meta={
+            "queue": self.queue_cls.NAME, "model": self.nvram.model.name,
+            "nthreads": nthreads, "seed": seed, "scheduler": scheduler})
+        self._trace = trace
+
+    def _trace_end(self, trace) -> None:
+        if trace is not None:
+            trace.finish(regions=self.nvram.regions)
+            self._trace = None
+
     def run_scheduled(self, plans: List[List[Tuple[str, Any]]], seed: int = 0,
                       crash_at: Optional[int] = None,
-                      policy: str = "random") -> RunResult:
+                      policy: str = "random", trace=None) -> RunResult:
+        """Exact per-primitive OS-thread scheduler run.  ``trace`` attaches a
+        :class:`repro.trace.TraceRecorder` for the duration of the run: the
+        engine tap records every primitive (with scheduler step indices) and
+        the harness marks op boundaries; Stats are unaffected."""
         sched = Scheduler(self.nvram, seed=seed, policy=policy,
                           crash_at=crash_at)
         workers = [self.make_worker(t, plans[t]) for t in range(len(plans))]
-        crashed = sched.run(workers)
+        self._trace_begin(trace, len(plans), seed, "exact")
+        try:
+            crashed = sched.run(workers)
+        finally:
+            self._trace_end(trace)
         done = sum(1 for r in self.ops if r.completed)
         return RunResult(crashed=crashed, ops=self.ops, events=self.events,
                          stats=self.nvram.total_stats(), ops_completed=done,
                          sim_time_ns=self.nvram.sim_time_ns())
 
-    def run_single(self, plan: List[Tuple[str, Any]]) -> RunResult:
+    def run_single(self, plan: List[Tuple[str, Any]],
+                   trace=None) -> RunResult:
         """No scheduler: sequential single-thread execution (tid 0)."""
         self.nvram.set_tid(0)
         w = self.make_worker(0, plan)
-        w(0)
+        self._trace_begin(trace, 1, None, "single")
+        try:
+            w(0)
+        finally:
+            self._trace_end(trace)
         done = sum(1 for r in self.ops if r.completed)
         return RunResult(crashed=False, ops=self.ops, events=self.events,
                          stats=self.nvram.total_stats(), ops_completed=done,
                          sim_time_ns=self.nvram.sim_time_ns())
 
     def run_batched(self, plans: List[List[Tuple[str, Any]]],
-                    contention: Union[ContentionModel, bool, None] = None
-                    ) -> RunResult:
+                    contention: Union[ContentionModel, bool, None] = None,
+                    trace=None) -> RunResult:
         """Clock-driven op-granularity execution: no OS threads, no yield
         points.  This is the throughput path -- thousands of ops per thread
         across 1..64 threads are practical (the exact scheduler caps out
@@ -163,9 +191,11 @@ class QueueHarness:
             contention.begin_run(self.nvram, self.queue.retry_profile())
         self.contention = contention
         sched = ClockScheduler(self.nvram, contention=contention)
+        self._trace_begin(trace, len(plans), None, "batched")
         try:
             sched.run(op_lists, op_kinds=op_kinds)
         finally:
+            self._trace_end(trace)
             # don't leave later (uncontended) runs on this engine paying
             # for the per-primitive epoch/CAS-tag stamping
             self.nvram.contention_tracking = False
@@ -176,6 +206,8 @@ class QueueHarness:
 
     def _make_op(self, tid: int, kind: str, item: Any):
         def op():
+            if self._trace is not None:
+                self._trace.begin_op(tid, kind)
             rec = OpRecord(tid=tid, kind=kind, item=item)
             self.ops.append(rec)
             if kind == "enq":

@@ -65,6 +65,18 @@ NS = float
  EV_HIT, EV_DRAM, EV_COLD_DRAM, EV_COLD_NVM, EV_POSTFLUSH) = range(12)
 N_EV = 12
 
+# -------------------------------------------------- trace primitive codes
+# Consumed by the opt-in trace tap (repro.trace.recorder.TraceRecorder).
+# These are observation codes, deliberately separate from the EV_* cost
+# codes: the tap sits BESIDE the cost accumulator and never feeds it.
+(TR_READ, TR_WRITE, TR_WRITE_LINE, TR_CAS, TR_FLUSH, TR_FENCE,
+ TR_MOVNTI) = range(7)
+
+# Line flush-state at the moment of an access, classified BEFORE the access
+# mutates cache metadata.  TS_INVALIDATED on a fetching primitive is exactly
+# the engine's post-flush access (the paper's key cost).
+(TS_VOLATILE, TS_CACHED, TS_COLD_DRAM, TS_COLD_NVM, TS_INVALIDATED) = range(5)
+
 
 def _latency_vector(m: MemoryModel) -> np.ndarray:
     v = np.zeros(N_EV, dtype=np.float64)
@@ -152,6 +164,13 @@ class NVRAM:
         self.epoch = 0                        # clock-window tick (scheduler)
         self._line_epoch: Dict[int, int] = {}   # line -> last access epoch
         self._cas_words: Dict[int, int] = {}    # CAS target word -> attempts
+        # --- trace tap (read-only observer; see repro.trace) --------------
+        # When attached, every primitive reports (tid, TR_* code, addr,
+        # TS_* pre-access line state, aux) to the tap.  The tap never
+        # touches the event buffer or counters, so Stats are bit-identical
+        # with and without it; when None the cost is one predicate per
+        # primitive.
+        self._tap = None
         # --- batched cost accumulator -------------------------------------
         self._ebuf: List[int] = []            # packed tid * N_EV + code
         self._counts = np.zeros((nthreads, N_EV), dtype=np.int64)
@@ -170,6 +189,29 @@ class NVRAM:
     def _step(self, kind: str) -> None:
         if self.step_hook is not None:
             self.step_hook(self.tid, kind)
+
+    # ------------------------------------------------------------ trace tap
+    def set_trace_tap(self, tap) -> None:
+        """Attach/detach (None) a trace observer (repro.trace recorder).
+
+        The tap receives ``on_prim(tid, prim, addr, state, aux)`` per
+        primitive -- a pure observation seam above/beside the cost
+        accumulator; attaching one cannot perturb Stats.
+        """
+        self._tap = tap
+
+    def _line_state(self, addr: int) -> int:
+        """TS_* classification of `addr`'s line, pre-access (tap only)."""
+        if addr >= self._VOLATILE_BASE:
+            return TS_VOLATILE
+        line = addr // LINE_WORDS
+        if self._cached[line]:
+            return TS_CACHED
+        if self._finval[line]:
+            return TS_INVALIDATED
+        if self._everfl[line]:
+            return TS_COLD_NVM
+        return TS_COLD_DRAM
 
     # --------------------------------------------------------- address space
     def _grow_p(self, need: int) -> None:
@@ -248,6 +290,8 @@ class NVRAM:
     def read(self, addr: int) -> Any:
         self._step("read")
         tid = self.tid
+        if self._tap is not None:
+            self._tap.on_prim(tid, TR_READ, addr, self._line_state(addr), -1)
         self._ebuf.append(tid * N_EV + EV_READ)
         if addr >= self._VOLATILE_BASE:
             i = addr - self._VOLATILE_BASE
@@ -263,6 +307,8 @@ class NVRAM:
     def write(self, addr: int, value: Any) -> None:
         self._step("write")
         tid = self.tid
+        if self._tap is not None:
+            self._tap.on_prim(tid, TR_WRITE, addr, self._line_state(addr), -1)
         self._ebuf.append(tid * N_EV + EV_WRITE)
         if addr >= self._VOLATILE_BASE:
             i = addr - self._VOLATILE_BASE
@@ -288,6 +334,11 @@ class NVRAM:
         of the line is overwritten."""
         self._step("write")
         tid = self.tid
+        if self._tap is not None:
+            # no fetch: the pre-state is recorded but a full-line store is
+            # never a post-flush access (analysis treats it as non-fetching)
+            self._tap.on_prim(tid, TR_WRITE_LINE, base_addr,
+                              self._line_state(base_addr), -1)
         self._ebuf.append(tid * N_EV + EV_WRITE)
         self._ebuf.append(tid * N_EV + EV_HIT)
         assert base_addr % LINE_WORDS == 0 and len(values) <= LINE_WORDS
@@ -315,6 +366,8 @@ class NVRAM:
         modeled by storing a tuple at a single word address (paper §5.1.2)."""
         self._step("cas")
         tid = self.tid
+        tap = self._tap
+        state = self._line_state(addr) if tap is not None else 0
         self._ebuf.append(tid * N_EV + EV_CAS)
         # tag the CAS target word + stamp its line's access epoch (contention
         # bookkeeping; persistent-space lines are stamped inside _touch)
@@ -329,26 +382,30 @@ class NVRAM:
             else:
                 self._ebuf.append(tid * N_EV + EV_DRAM)
                 self._vtouched[i] = True
-            if self._vval[i] == expected:
+            ok = self._vval[i] == expected
+            if ok:
                 self._vval[i] = new
-                return True
-            return False
-        line = addr // LINE_WORDS
-        self._touch(line, tid)
-        if self._vis[addr] == expected:
-            self._vis[addr] = new
-            if self.model.persist_on_store:
-                self._pmem[addr] = new
-            else:
-                self._log.setdefault(line, []).append((addr, new))
-            return True
-        return False
+        else:
+            line = addr // LINE_WORDS
+            self._touch(line, tid)
+            ok = self._vis[addr] == expected
+            if ok:
+                self._vis[addr] = new
+                if self.model.persist_on_store:
+                    self._pmem[addr] = new
+                else:
+                    self._log.setdefault(line, []).append((addr, new))
+        if tap is not None:
+            tap.on_prim(tid, TR_CAS, addr, state, 1 if ok else 0)
+        return bool(ok)
 
     def flush(self, addr: int) -> None:
         """Asynchronous CLWB: schedule write-back of the whole containing
         line; under an invalidating model (Cascade Lake) also evict it."""
         self._step("flush")
         tid = self.tid
+        if self._tap is not None:
+            self._tap.on_prim(tid, TR_FLUSH, addr, self._line_state(addr), -1)
         self._ebuf.append(tid * N_EV + EV_FLUSH)
         assert addr < self._VOLATILE_BASE, "flushing volatile memory"
         line = addr // LINE_WORDS
@@ -365,6 +422,8 @@ class NVRAM:
         NT stores are globally visible immediately (x86 coherence)."""
         self._step("movnti")
         tid = self.tid
+        if self._tap is not None:
+            self._tap.on_prim(tid, TR_MOVNTI, addr, self._line_state(addr), -1)
         self._ebuf.append(tid * N_EV + EV_MOVNTI)
         assert addr < self._VOLATILE_BASE
         self._vis[addr] = value
@@ -375,6 +434,9 @@ class NVRAM:
         NT stores are persistent."""
         self._step("fence")
         tid = self.tid
+        if self._tap is not None:
+            # aux = outstanding persist entries this fence will drain
+            self._tap.on_prim(tid, TR_FENCE, -1, -1, len(self._pending[tid]))
         self._ebuf.append(tid * N_EV + EV_FENCE)
         pend = self._pending[tid]
         if pend:

@@ -77,6 +77,11 @@ class Scheduler:
             # granted: consume and run one primitive
             self._grant = None
             self._waiting.discard(tid)
+            # trace hook: the primitive about to execute carries this global
+            # step index (grants are serialized, so the stamp cannot race)
+            tap = getattr(self.nvram, "_tap", None)
+            if tap is not None:
+                tap.on_sched_step(self.steps)
             self._cv.notify_all()
 
     # ------------------------------------------------------- coordinator side

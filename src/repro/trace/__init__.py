@@ -1,0 +1,31 @@
+"""Trace subsystem: exact-scheduler capture, attribution, learned profiles.
+
+Four modules over the :mod:`repro.core` engine's opt-in tap seam:
+
+* :mod:`repro.trace.recorder` -- columnar capture of the primitive stream
+  (:class:`TraceRecorder` / :class:`Trace`);
+* :mod:`repro.trace.store` -- versioned ``.npz`` persistence
+  (:func:`save_trace` / :func:`load_trace`);
+* :mod:`repro.trace.analyze` -- per-op decomposition, CAS contention
+  windows, and post-flush access attribution (the paper's §8 discussion);
+* :mod:`repro.trace.fit` -- least-squares fitting of
+  :class:`repro.core.contention.LearnedRetryProfile` from traces, behind
+  the ``--contention learned`` benchmark axis.
+"""
+from .recorder import COLUMNS, FETCHING_PRIMS, Trace, TraceRecorder
+from .store import SCHEMA_VERSION, TraceSchemaError, load_trace, save_trace
+from .analyze import (CasSiteStat, OpTable, SiteStat, cas_failure_stats,
+                      conflict_windows, modal_cas_roots, op_table,
+                      post_flush_per_op, post_flush_sites)
+from .fit import (PROFILE_SCHEMA, capture_trace, fit_all, fit_profiles,
+                  load_profiles, make_pairs_plans, save_profiles)
+
+__all__ = [
+    "COLUMNS", "FETCHING_PRIMS", "Trace", "TraceRecorder",
+    "SCHEMA_VERSION", "TraceSchemaError", "load_trace", "save_trace",
+    "CasSiteStat", "OpTable", "SiteStat", "cas_failure_stats",
+    "conflict_windows", "modal_cas_roots", "op_table",
+    "post_flush_per_op", "post_flush_sites",
+    "PROFILE_SCHEMA", "capture_trace", "fit_all", "fit_profiles",
+    "load_profiles", "make_pairs_plans", "save_profiles",
+]

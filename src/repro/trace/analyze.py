@@ -1,0 +1,252 @@
+"""Trace analysis: per-op cost decomposition, CAS contention windows, and
+post-flush access attribution.
+
+Everything here consumes the columnar :class:`repro.trace.recorder.Trace`
+stream and produces the quantities the paper's arguments (and our fitted
+contention profiles) are built from:
+
+* :func:`op_table` -- one row per recorded operation with its step
+  interval and per-class primitive counts (cached re-reads vs accesses to
+  flushed content vs CAS attempts/failures vs persist work);
+* :func:`modal_cas_roots` -- which fixed word each op kind's CAS loop
+  hammers (the queue's HEAD/TAIL roots, recovered from the trace itself);
+* :func:`conflict_windows` -- for each op, how many earlier-started,
+  still-open ops of other threads CASed the same root: the ``k`` the
+  batched contention model derives its failure probability from;
+* :func:`cas_failure_stats` -- per-target-word attempt/failure counts;
+* :func:`post_flush_sites` / :func:`post_flush_per_op` -- the paper-§8
+  attribution: *which program sites re-read flushed content*, keyed by
+  (op kind, engine region, primitive).  The second-amendment queues show
+  zero rows here; their baselines do not -- that ordering is asserted in
+  ``tests/test_trace_fit.py``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.nvram import (TR_CAS, TR_FENCE, TR_FLUSH, TR_MOVNTI, TR_READ,
+                              TR_WRITE, TR_WRITE_LINE, TS_CACHED,
+                              TS_INVALIDATED)
+from .recorder import FETCHING_PRIMS, Trace
+
+PRIM_NAMES = {TR_READ: "read", TR_WRITE: "write",
+              TR_WRITE_LINE: "write_line", TR_CAS: "cas", TR_FLUSH: "flush",
+              TR_FENCE: "fence", TR_MOVNTI: "movnti"}
+
+
+@dataclass
+class OpTable:
+    """Per-operation aggregation of a trace (parallel arrays, one row/op)."""
+
+    kinds: List[str]               # op-kind code table (meta['kinds'])
+    tid: np.ndarray
+    seq: np.ndarray                # per-thread op sequence number
+    kind: np.ndarray               # code into `kinds`
+    start: np.ndarray              # first primitive's step
+    end: np.ndarray                # last primitive's step
+    reads_hit: np.ndarray          # fetches of still-cached lines
+    reads_flushed: np.ndarray      # fetches of flush-invalidated lines
+    cas: np.ndarray                # CAS attempts
+    cas_failed: np.ndarray         # CAS attempts that failed
+    flushes: np.ndarray
+    fences: np.ndarray
+    movntis: np.ndarray
+
+    def __len__(self) -> int:
+        return len(self.tid)
+
+    def of_kind(self, kind: str) -> np.ndarray:
+        """Boolean row mask selecting ops of `kind`."""
+        code = self.kinds.index(kind) if kind in self.kinds else -1
+        return self.kind == code
+
+
+def op_table(trace: Trace) -> OpTable:
+    """Aggregate the primitive stream into one row per operation."""
+    c = trace.columns
+    in_op = c["op_seq"] >= 0
+    tid, seq = c["tid"][in_op], c["op_seq"][in_op]
+    nthreads = int(trace.meta.get("nthreads", int(tid.max()) + 1 if
+                                  len(tid) else 1))
+    max_seq = int(seq.max()) + 1 if len(seq) else 0
+    key = tid * max(max_seq, 1) + seq
+    uniq, inverse = np.unique(key, return_inverse=True)
+    n = len(uniq)
+
+    def _count(mask: np.ndarray) -> np.ndarray:
+        return np.bincount(inverse, weights=mask[in_op].astype(np.float64),
+                           minlength=n).astype(np.int64)
+
+    prim, state, aux = c["prim"], c["state"], c["aux"]
+    fetch = np.isin(prim, FETCHING_PRIMS)
+    start = np.full(n, np.iinfo(np.int64).max, dtype=np.int64)
+    end = np.zeros(n, dtype=np.int64)
+    np.minimum.at(start, inverse, c["step"][in_op])
+    np.maximum.at(end, inverse, c["step"][in_op])
+    kind = np.zeros(n, dtype=np.int64)
+    kind[inverse] = c["op_kind"][in_op]     # constant within an op
+    assert nthreads > 0
+    return OpTable(
+        kinds=list(trace.meta.get("kinds", [])),
+        tid=(uniq // max(max_seq, 1)), seq=(uniq % max(max_seq, 1)),
+        kind=kind, start=start, end=end,
+        reads_hit=_count(fetch & (state == TS_CACHED)),
+        reads_flushed=_count(fetch & (state == TS_INVALIDATED)),
+        cas=_count(prim == TR_CAS),
+        cas_failed=_count((prim == TR_CAS) & (aux == 0)),
+        flushes=_count(prim == TR_FLUSH),
+        fences=_count(prim == TR_FENCE),
+        movntis=_count(prim == TR_MOVNTI),
+    )
+
+
+def modal_cas_roots(trace: Trace,
+                    table: Optional[OpTable] = None) -> Dict[str, int]:
+    """Per op kind, the CAS target word hit most often: the queue's root.
+
+    A CAS loop retries against one fixed word (TAIL for enqueues, HEAD for
+    dequeues) while its other CAS targets (node link words) vary per op, so
+    the modal target identifies the contended root without needing the
+    queue instance's addresses.
+    """
+    c = trace.columns
+    out: Dict[str, int] = {}
+    kinds = trace.meta.get("kinds", [])
+    for code, kind in enumerate(kinds):
+        mask = (c["prim"] == TR_CAS) & (c["op_kind"] == code)
+        if not mask.any():
+            continue
+        addrs, counts = np.unique(c["addr"][mask], return_counts=True)
+        out[kind] = int(addrs[np.argmax(counts)])
+    return out
+
+
+def conflict_windows(trace: Trace, table: Optional[OpTable] = None,
+                     roots: Optional[Dict[str, int]] = None) -> np.ndarray:
+    """Per op: the number of co-scheduled conflicting ops, ``k``.
+
+    Mirrors the batched model's window rule
+    (:class:`repro.core.contention.ContentionModel`): op *i* conflicts with
+    every op *j* of another thread that CASed the same root, started no
+    later than *i*, and whose interval was still open at *i*'s start
+    (``end_j > start_i``).  Ops that never CASed their kind's root get 0.
+    """
+    t = table if table is not None else op_table(trace)
+    roots = roots if roots is not None else modal_cas_roots(trace, t)
+    c = trace.columns
+    n = len(t)
+    k = np.zeros(n, dtype=np.int64)
+    # per-op set of CASed roots, as a boolean per (op, root)
+    root_addrs = sorted(set(roots.values()))
+    hit = {w: np.zeros(n, dtype=bool) for w in root_addrs}
+    in_op = c["op_seq"] >= 0
+    max_seq = int(t.seq.max()) + 1 if n else 1
+    key_of_row = c["tid"][in_op] * max(max_seq, 1) + c["op_seq"][in_op]
+    uniq = t.tid * max(max_seq, 1) + t.seq
+    order = np.argsort(uniq)
+    for w in root_addrs:
+        m = (c["prim"][in_op] == TR_CAS) & (c["addr"][in_op] == w)
+        rows = np.searchsorted(uniq[order], key_of_row[m])
+        hit[w][order[rows]] = True
+    for i in range(n):
+        kind = t.kinds[t.kind[i]] if 0 <= t.kind[i] < len(t.kinds) else None
+        w = roots.get(kind)
+        if w is None or not hit[w][i]:
+            continue
+        overlap = (hit[w] & (t.tid != t.tid[i])
+                   & (t.start <= t.start[i]) & (t.end > t.start[i]))
+        k[i] = int(overlap.sum())
+    return k
+
+
+@dataclass(frozen=True)
+class CasSiteStat:
+    """CAS attempt/failure totals for one target word."""
+    addr: int
+    region: str
+    attempts: int
+    failures: int
+
+    @property
+    def failure_rate(self) -> float:
+        return self.failures / self.attempts if self.attempts else 0.0
+
+
+def cas_failure_stats(trace: Trace) -> List[CasSiteStat]:
+    """Per-target-word CAS statistics, most-contended first."""
+    c = trace.columns
+    mask = c["prim"] == TR_CAS
+    addrs = c["addr"][mask]
+    fails = (c["aux"][mask] == 0)
+    out = []
+    for w in np.unique(addrs):
+        m = addrs == w
+        out.append(CasSiteStat(addr=int(w), region=trace.region_of(int(w)),
+                               attempts=int(m.sum()),
+                               failures=int(fails[m].sum())))
+    out.sort(key=lambda s: (-s.failures, -s.attempts, s.addr))
+    return out
+
+
+@dataclass(frozen=True)
+class SiteStat:
+    """Post-flush accesses attributed to one program site."""
+    op_kind: str       # 'enq' / 'deq' / '(outside-op)'
+    region: str        # engine region name (queue roots, ssmem area, ...)
+    prim: str          # read / write / cas
+    count: int
+    per_op: float      # count / ops recorded for that kind
+
+
+def post_flush_sites(trace: Trace) -> List[SiteStat]:
+    """The §8 attribution: which sites re-read flushed content, how often.
+
+    A site is (op kind, engine region, primitive): e.g. DurableMSQ
+    dequeues re-fetching the flushed HEAD root line show up as
+    ``('deq', 'durablemsq:roots', 'read')``.  Sorted by count descending;
+    an empty list is the second-amendment signature.
+    """
+    c = trace.columns
+    mask = trace.post_flush_mask()
+    kinds = trace.meta.get("kinds", [])
+    ops_by_code: Dict[int, int] = {}
+    in_op = c["op_seq"] >= 0
+    if in_op.any():
+        max_seq = int(c["op_seq"][in_op].max()) + 1
+        key = c["tid"][in_op] * max_seq + c["op_seq"][in_op]
+        uniq_key, first = np.unique(key, return_index=True)
+        op_kind_per_op = c["op_kind"][in_op][first]
+        for code in np.unique(op_kind_per_op):
+            ops_by_code[int(code)] = int((op_kind_per_op == code).sum())
+    counts: Dict[Tuple[str, str, str], int] = {}
+    for idx in np.flatnonzero(mask):
+        code = int(c["op_kind"][idx])
+        kind = kinds[code] if 0 <= code < len(kinds) else "(outside-op)"
+        site = (kind, trace.region_of(int(c["addr"][idx])),
+                PRIM_NAMES.get(int(c["prim"][idx]), "?"))
+        counts[site] = counts.get(site, 0) + 1
+    out = []
+    for (kind, region, prim), cnt in counts.items():
+        code = kinds.index(kind) if kind in kinds else -1
+        nops = ops_by_code.get(code, 0)
+        out.append(SiteStat(op_kind=kind, region=region, prim=prim,
+                            count=cnt, per_op=cnt / nops if nops else 0.0))
+    out.sort(key=lambda s: (-s.count, s.op_kind, s.region, s.prim))
+    return out
+
+
+def post_flush_per_op(trace: Trace) -> Dict[str, float]:
+    """Post-flush accesses per recorded op: one entry per kind + 'all'."""
+    t = op_table(trace)
+    out: Dict[str, float] = {}
+    total_ops = len(t)
+    for kind in t.kinds:
+        m = t.of_kind(kind)
+        nops = int(m.sum())
+        out[kind] = float(t.reads_flushed[m].sum()) / nops if nops else 0.0
+    out["all"] = (float(t.reads_flushed.sum()) / total_ops
+                  if total_ops else 0.0)
+    return out

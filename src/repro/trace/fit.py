@@ -1,0 +1,463 @@
+"""Learn contention profiles from exact-scheduler traces.
+
+PR 2's :class:`repro.core.contention.ContentionModel` charged CAS retries
+from hand-fit :meth:`retry_profile` constants.  This module replaces them
+with a measurement pipeline:
+
+1. :func:`capture_trace` runs a queue under the exact per-primitive
+   scheduler with a :class:`repro.trace.recorder.TraceRecorder` attached --
+   CAS failures, helping paths and post-flush re-reads *actually execute*
+   and land in the trace;
+2. :func:`fit_profiles` turns traces at several thread counts into a
+   :class:`repro.core.contention.LearnedRetryProfile`:
+
+   * **per-round event counts** by least squares *across thread counts*:
+     for each op kind and event class (cached re-reads, re-reads of
+     flushed content, CAS attempts, helping flushes/fences), regress each
+     trace's per-op **excess** over an uncontended batched run of the same
+     workload -- the quantity the contention model must supply -- against
+     that trace's observed failed-CAS rounds per op, through the origin;
+     the slope is the cost of one retry round.  Fitting excesses (rather
+     than individual ops or raw totals) matters twice over: per-op
+     structural growth with thread count (longer walks, more empty checks)
+     cancels out, and a metric that is globally conserved under retries --
+     e.g. UnlinkedQ's post-flush count, where a retry that re-fetches an
+     invalidated line merely *absorbs* a fetch another op would have paid
+     -- shows zero excess, exactly the zero charge it should get;
+   * **race-window weight** by matching retries against the batched model
+     itself: starting from a grid least squares of ``E = p/(1-p)``,
+     ``p = scale*w*k`` (with ``k`` from
+     :func:`repro.trace.analyze.conflict_windows`, the trace-side mirror
+     of the clock window) against observed failed rounds, the refinement
+     replays the same workload through the batched
+     :class:`repro.core.contention.ContentionModel` and searches the
+     weight that minimizes the squared gap between charged and traced
+     retries per op, per thread count -- closing any gap between
+     trace-side and clock-side window statistics;
+
+3. :func:`save_profiles` / :func:`load_profiles` round-trip the learned
+   profiles as versioned JSON -- ``benchmarks/profiles/learned.json`` is
+   the checked-in artifact the ``--contention learned`` benchmark axis
+   reads.
+
+Every number the batched model charges under ``--contention learned``
+comes from this pipeline; no hand-tuned per-queue constants remain.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import ALL_QUEUES, ContentionModel, LearnedRetryProfile, \
+    QueueHarness
+from repro.core.contention import DEFAULT_RETRY_SCALE, P_CAP
+from .analyze import conflict_windows, modal_cas_roots, op_table
+from .recorder import Trace, TraceRecorder
+from .store import save_trace
+
+PROFILE_SCHEMA = 1
+# numeric fields of a learned profile, in serialization order
+PARAM_FIELDS = ("reads", "flushed_reads", "cas", "flushes", "fences",
+                "weight", "flushed_decay", "max_rounds")
+# headroom over the largest traced failed-round rate when measuring the
+# per-op retry saturation (max_rounds): thread counts past the traced
+# range still grow a little before the queue's true ceiling
+_MAX_ROUNDS_HEADROOM = 1.25
+# contention-decay grid for the flushed-read fit (see RetryProfile
+# .flushed_decay): effective per-round count = F / (1 + delta * k)
+_DELTA_GRID = np.arange(0.0, 2.001, 0.05)
+# weight grid for the least-squares search (step 0.005, deterministic)
+_W_GRID = np.linspace(0.0, 4.0, 801)
+
+
+# --------------------------------------------------------------- workloads
+def make_pairs_plans(nthreads: int, ops_per_thread: int
+                     ) -> Tuple[List[list], int]:
+    """The calibration workload: per-thread enqueue/dequeue pairs over a
+    10-item prefill (mirrors ``benchmarks.workloads.make_plans('pairs')``,
+    re-stated here so ``repro.trace`` does not depend on ``benchmarks``)."""
+    plans = []
+    for t in range(nthreads):
+        p = []
+        for i in range(ops_per_thread // 2):
+            p.append(("enq", (t, i)))
+            p.append(("deq", None))
+        plans.append(p)
+    return plans, 10
+
+
+# ----------------------------------------------------------------- capture
+def capture_trace(queue_name: str, nthreads: int, ops_per_thread: int,
+                  seed: int = 1, model: str = "optane-clwb",
+                  area_nodes: int = 1024) -> Trace:
+    """One exact-scheduler run of the pairs workload, traced."""
+    h = QueueHarness(ALL_QUEUES[queue_name], nthreads=nthreads,
+                     area_nodes=area_nodes, model=model)
+    plans, prefill = make_pairs_plans(nthreads, ops_per_thread)
+    for i in range(prefill):
+        h.queue.enqueue(0, ("pre", i))
+    rec = TraceRecorder()
+    h.run_scheduled(plans, seed=seed, trace=rec)
+    trace = rec.trace
+    trace.meta["workload"] = "pairs"
+    trace.meta["ops_per_thread"] = ops_per_thread
+    return trace
+
+
+# --------------------------------------------------------------- regression
+def _nnls(A: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Tiny non-negative least squares (active-set elimination): solve
+    ``min |Ax - b|`` with ``x >= 0`` by dropping the most negative
+    coordinate until the unconstrained solution is feasible."""
+    n = A.shape[1]
+    active = list(range(n))
+    x = np.zeros(n)
+    while active:
+        sol, *_ = np.linalg.lstsq(A[:, active], b, rcond=None)
+        if (sol >= -1e-12).all():
+            x[active] = np.maximum(sol, 0.0)
+            break
+        active.pop(int(np.argmin(sol)))
+    return x
+
+
+# weight of the cross-kind conservation equation in the per-class fit: the
+# *total* excess must be matched even when retries merely shift events
+# between kinds (one kind's excess offsets another's deficit)
+_CONSERVATION_WEIGHT = 3.0
+
+
+def _fit_weight(k: np.ndarray, rounds: np.ndarray,
+                retry_scale: float) -> float:
+    """Grid least squares of E(k; w) = p/(1-p), p = min(scale*w*k, P_CAP),
+    against observed failed rounds."""
+    if not len(k) or float(k.max()) <= 0:
+        return 1.0
+    best_w, best_sse = 1.0, float("inf")
+    for w in _W_GRID:
+        p = np.minimum(retry_scale * w * k, P_CAP)
+        sse = float(np.sum((p / (1.0 - p) - rounds) ** 2))
+        if sse < best_sse - 1e-12:
+            best_w, best_sse = float(w), sse
+    return best_w
+
+
+# event classes regressed per retry round, keyed by RetryProfile field
+_CLASS_COLS = {"reads": "reads_hit", "flushed_reads": "reads_flushed",
+               "cas": "cas", "flushes": "flushes", "fences": "fences"}
+
+
+def _baseline_per_op(queue_name: str, nthreads: int, ops_per_thread: int,
+                     model: str) -> Dict[str, Dict[str, float]]:
+    """Per-kind per-op class means of an *uncontended batched* run of the
+    same workload: the contention-free baseline the excess is taken over
+    (the tap works under the clock scheduler too -- the recorder numbers
+    primitives itself)."""
+    h = QueueHarness(ALL_QUEUES[queue_name], nthreads=nthreads,
+                     area_nodes=1024, model=model)
+    plans, prefill = make_pairs_plans(nthreads, ops_per_thread)
+    for i in range(prefill):
+        h.queue.enqueue(0, ("pre", i))
+    rec = TraceRecorder()
+    h.run_batched(plans, trace=rec)
+    table = op_table(rec.trace)
+    out: Dict[str, Dict[str, float]] = {}
+    for kind in table.kinds:
+        m = table.of_kind(kind)
+        if m.any():
+            out[kind] = {f: float(getattr(table, col)[m].mean())
+                         for f, col in _CLASS_COLS.items()}
+    return out
+
+
+def _per_trace_stats(traces: Sequence[Trace]) -> Dict[str, List[dict]]:
+    """Per (kind, trace) aggregates: mean failed rounds, per-op class
+    excess over the uncontended batched baseline, and pooled per-op
+    (k, rounds) samples for the initial weight fit.
+
+    Returns kind -> list of one dict per trace with keys ``nthreads``,
+    ``rounds`` (mean failed CAS rounds/op), ``excess`` (class -> mean/op
+    above baseline), ``k`` and ``rounds_i`` (per-op arrays).
+    """
+    out: Dict[str, List[dict]] = {}
+    for trace in traces:
+        table = op_table(trace)
+        roots = modal_cas_roots(trace, table)
+        k = conflict_windows(trace, table, roots)
+        base = _baseline_per_op(
+            trace.meta["queue"], int(trace.meta.get("nthreads", 1)),
+            int(trace.meta.get("ops_per_thread") or 0) or
+            int(np.ceil(len(table) / max(int(trace.meta.get(
+                "nthreads", 1)), 1))),
+            trace.meta.get("model", "optane-clwb"))
+        for kind in table.kinds:
+            m = table.of_kind(kind)
+            if not m.any():
+                continue
+            rounds_i = table.cas_failed[m].astype(np.float64)
+            k_i = k[m].astype(np.float64)
+            # window size where the failures actually happened (weighted by
+            # failed rounds): the k the decay term should see
+            k_eff = (float((k_i * rounds_i).sum() / rounds_i.sum())
+                     if rounds_i.sum() > 0
+                     else (float(k_i.mean()) if len(k_i) else 0.0))
+            kbase = base.get(kind, {f: 0.0 for f in _CLASS_COLS})
+            out.setdefault(kind, []).append({
+                "nthreads": int(trace.meta.get("nthreads", 1)),
+                "ops_per_thread": trace.meta.get("ops_per_thread"),
+                "nops": int(m.sum()),
+                "k_eff": k_eff,
+                "rounds": float(rounds_i.mean()),
+                "excess": {f: float(getattr(table, col)[m].mean())
+                           - kbase.get(f, 0.0)
+                           for f, col in _CLASS_COLS.items()},
+                "k": k[m].astype(np.float64),
+                "rounds_i": rounds_i,
+            })
+    return out
+
+
+# ------------------------------------------------------------- refinement
+def _charged_per_op(queue_name: str, nthreads: int, ops_per_thread: int,
+                    learned: LearnedRetryProfile, model: str,
+                    retry_scale: float) -> Dict[str, float]:
+    """Replay the pairs workload through the batched contention model and
+    report the charged expected retries per op, per kind."""
+    h = QueueHarness(ALL_QUEUES[queue_name], nthreads=nthreads,
+                     area_nodes=1024, model=model)
+    plans, prefill = make_pairs_plans(nthreads, ops_per_thread)
+    for i in range(prefill):
+        h.queue.enqueue(0, ("pre", i))
+    cm = ContentionModel(retry_scale=retry_scale, profiles=learned)
+    h.run_batched(plans, contention=cm)
+    roots = {kind: prof.root
+             for kind, prof in h.queue.retry_profile().items()}
+    nops = nthreads * (ops_per_thread // 2)    # pairs: half enq, half deq
+    return {kind: cm.retries_by_root.get(root, 0.0) / max(nops, 1)
+            for kind, root in roots.items()}
+
+
+def _search_weight(queue_name: str, kind: str, cells: Sequence[Tuple[int,
+                   int]], params: Dict[str, Dict[str, float]],
+                   target: Dict[str, Dict[int, float]], mem_model: str,
+                   retry_scale: float) -> float:
+    """Coarse-then-fine grid search of `kind`'s weight, minimizing the
+    squared gap between the batched model's charged retries per op and the
+    traced failed rounds per op, across the traced thread counts.
+
+    This is measurement all the way down: each candidate weight is
+    *evaluated by running the batched model*, so whatever the clock-window
+    statistics do at a given thread count is priced in, not approximated.
+    """
+    def sse(w: float) -> float:
+        trial = {k: dict(v) for k, v in params.items()}
+        trial[kind]["weight"] = w
+        learned = LearnedRetryProfile(queue=queue_name, params=trial)
+        err = 0.0
+        for nthreads, ops in cells:
+            got = _charged_per_op(queue_name, nthreads, ops, learned,
+                                  mem_model, retry_scale)
+            want = target.get(kind, {}).get(nthreads, 0.0)
+            # relative residuals: the calibration tolerance is relative
+            # per thread count, so a small-count cell must not be
+            # sacrificed to a large-count one; the floor keeps near-zero
+            # cells (e.g. 2 threads, no observed failure) from dominating
+            err += ((got.get(kind, 0.0) - want) / max(want, 0.5)) ** 2
+        return err
+
+    coarse = np.arange(0.0, 3.01, 0.25)
+    best_w = min(coarse, key=sse)
+    fine = np.arange(max(best_w - 0.2, 0.0), best_w + 0.21, 0.05)
+    return float(min(fine, key=sse))
+
+
+# ------------------------------------------------------------------- fit
+def fit_profiles(queue_name: str, traces: Sequence[Trace],
+                 retry_scale: float = DEFAULT_RETRY_SCALE,
+                 refine: bool = True,
+                 refine_sweeps: int = 2) -> LearnedRetryProfile:
+    """Fit a :class:`LearnedRetryProfile` for one queue from its traces.
+
+    `traces` should cover several thread counts (both fits need varying
+    contention levels).  With ``refine=True`` each kind's weight is tuned
+    against the batched model itself (see :func:`_search_weight`); without
+    it the weight comes from the trace-side window statistics alone.
+    """
+    if not traces:
+        raise ValueError("fit_profiles needs at least one trace")
+    stats = _per_trace_stats(traces)
+    kinds = sorted(stats)
+    params: Dict[str, Dict[str, float]] = {k: {} for k in kinds}
+    target: Dict[str, Dict[int, float]] = {}
+    # the joint fit below pairs stats[kind][i] rows across kinds by trace
+    # index; a trace missing a kind (e.g. a producers-only capture) would
+    # silently mis-align the regression, so reject it up front
+    short = {k: len(rows) for k, rows in stats.items()
+             if len(rows) != len(traces)}
+    if short:
+        raise ValueError(
+            f"every trace must contain ops of every kind; {short} "
+            f"(rows per kind) vs {len(traces)} traces -- fit from "
+            "mixed-kind workloads like 'pairs'")
+    # per-class joint fit across kinds: per-kind excess rows apportion the
+    # cost, a heavier cross-kind conservation row pins the total (a
+    # negative excess in one kind nets off another's positive one)
+    ntraces = len(traces)
+
+    def class_system(field: str, delta: float = 0.0
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        A, b = [], []
+        for i in range(ntraces):
+            x = {k: stats[k][i]["rounds"]
+                 / (1.0 + delta * stats[k][i]["k_eff"]) for k in kinds}
+            for ki, kind in enumerate(kinds):
+                row = np.zeros(len(kinds))
+                row[ki] = x[kind]
+                A.append(row)
+                b.append(stats[kind][i]["excess"][field])
+            ntot = sum(stats[k][i]["nops"] for k in kinds)
+            frac = [stats[k][i]["nops"] / max(ntot, 1) for k in kinds]
+            A.append(_CONSERVATION_WEIGHT * np.array(
+                [x[k] * frac[ki] for ki, k in enumerate(kinds)]))
+            b.append(_CONSERVATION_WEIGHT * sum(
+                stats[k][i]["excess"][field] * frac[ki]
+                for ki, k in enumerate(kinds)))
+        return np.asarray(A), np.asarray(b)
+
+    for f in _CLASS_COLS:
+        if f == "flushed_reads":
+            continue
+        A, b = class_system(f)
+        sol = _nnls(A, b)
+        for ki, kind in enumerate(kinds):
+            params[kind][f] = float(sol[ki])
+    # flushed reads: jointly fit the per-round count AND its contention
+    # decay (the post-flush fraction shrinks as more co-scheduled ops
+    # re-fetch the invalidated line first) over a delta grid
+    best = None
+    for delta in _DELTA_GRID:
+        A, b = class_system("flushed_reads", delta)
+        sol = _nnls(A, b)
+        sse = float(((A @ sol - b) ** 2).sum())
+        if best is None or sse < best[0] - 1e-12:
+            best = (sse, float(delta), sol)
+    _, delta, sol = best
+    for ki, kind in enumerate(kinds):
+        params[kind]["flushed_reads"] = float(sol[ki])
+        params[kind]["flushed_decay"] = delta if sol[ki] > 0 else 0.0
+    for kind, rows in stats.items():
+        k_pool = np.concatenate([r["k"] for r in rows])
+        r_pool = np.concatenate([r["rounds_i"] for r in rows])
+        params[kind]["weight"] = _fit_weight(k_pool, r_pool, retry_scale)
+        target[kind] = {r["nthreads"]: r["rounds"] for r in rows}
+        # measured retry saturation: the exact scheduler's failed-round
+        # rate plateaus well below the geometric cap (helping drains the
+        # obstruction), and the weight search below needs the ceiling in
+        # place to fit the unsaturated cells
+        r_max = max(target[kind].values(), default=0.0)
+        params[kind]["max_rounds"] = (_MAX_ROUNDS_HEADROOM * r_max
+                                      if r_max > 0
+                                      else P_CAP / (1.0 - P_CAP))
+    cells = sorted({(r["nthreads"], r["ops_per_thread"])
+                    for rows in stats.values() for r in rows
+                    if r["nthreads"] > 1 and r["ops_per_thread"]})
+    if refine and cells:
+        mem_model = traces[0].meta.get("model", "optane-clwb")
+        for _ in range(refine_sweeps):
+            for kind in sorted(params):
+                params[kind]["weight"] = _search_weight(
+                    queue_name, kind, cells, params, target, mem_model,
+                    retry_scale)
+    source: Dict[str, Any] = {
+        "traces": [{"nthreads": t.meta.get("nthreads"),
+                    "seed": t.meta.get("seed"),
+                    "ops_per_thread": t.meta.get("ops_per_thread"),
+                    "model": t.meta.get("model"),
+                    "events": len(t)} for t in traces],
+        "retry_scale": retry_scale,
+        "target_rounds_per_op": {
+            kind: {str(t): round(v, 4) for t, v in sorted(d.items())}
+            for kind, d in sorted(target.items())},
+    }
+    return LearnedRetryProfile(queue=queue_name, params=params,
+                               source=source)
+
+
+def fit_all(queue_names: Iterable[str],
+            thread_counts: Sequence[int] = (2, 4, 8, 12),
+            ops_per_thread: int = 24, seed: int = 1,
+            model: str = "optane-clwb",
+            trace_dir: Optional[str] = None,
+            log=None) -> Dict[str, LearnedRetryProfile]:
+    """Capture traces and fit profiles for several queues.
+
+    With `trace_dir`, each captured trace is also saved there as
+    ``<queue>_t<threads>_s<seed>.trace.npz``.
+    """
+    say = log or (lambda msg: None)
+    out: Dict[str, LearnedRetryProfile] = {}
+    for name in queue_names:
+        traces = []
+        for nthreads in thread_counts:
+            say(f"# tracing {name} at {nthreads} threads "
+                f"({ops_per_thread} ops/thread, exact scheduler)...")
+            trace = capture_trace(name, nthreads, ops_per_thread,
+                                  seed=seed, model=model)
+            traces.append(trace)
+            if trace_dir:
+                import os
+                os.makedirs(trace_dir, exist_ok=True)
+                save_trace(os.path.join(
+                    trace_dir, f"{name}_t{nthreads}_s{seed}.trace.npz"),
+                    trace)
+        out[name] = fit_profiles(name, traces, refine=True)
+        say(f"# fitted {name}: " + json.dumps(
+            {k: {f: round(v, 3) for f, v in p.items()}
+             for k, p in out[name].params.items()}))
+    return out
+
+
+# ----------------------------------------------------------- serialization
+def save_profiles(path: str, profiles: Dict[str, LearnedRetryProfile],
+                  retry_scale: float = DEFAULT_RETRY_SCALE) -> None:
+    """Write learned profiles as versioned, diff-friendly JSON."""
+    doc = {
+        "schema": PROFILE_SCHEMA,
+        "retry_scale": retry_scale,
+        "generator": "python benchmarks/run.py fit-profiles",
+        "queues": {
+            name: {
+                "params": {kind: {f: round(float(p[f]), 6)
+                                  for f in PARAM_FIELDS}
+                           for kind, p in sorted(lp.params.items())},
+                "source": lp.source,
+            } for name, lp in sorted(profiles.items())
+        },
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def load_profiles(path: str) -> Dict[str, LearnedRetryProfile]:
+    """Load profiles written by :func:`save_profiles` (schema-checked)."""
+    with open(path) as f:
+        doc = json.load(f)
+    if doc.get("schema") != PROFILE_SCHEMA:
+        raise ValueError(
+            f"{path}: profile schema {doc.get('schema')!r}, this reader "
+            f"understands {PROFILE_SCHEMA}")
+    out: Dict[str, LearnedRetryProfile] = {}
+    for name, entry in doc.get("queues", {}).items():
+        params = {}
+        for kind, p in entry.get("params", {}).items():
+            missing = [f for f in PARAM_FIELDS if f not in p]
+            if missing:
+                raise ValueError(
+                    f"{path}: {name}/{kind} missing fields {missing}")
+            params[kind] = {f: float(p[f]) for f in PARAM_FIELDS}
+        out[name] = LearnedRetryProfile(queue=name, params=params,
+                                        source=entry.get("source", {}))
+    return out

@@ -1,0 +1,207 @@
+"""Exact-scheduler trace capture: a low-overhead tap on the NVRAM primitives.
+
+:class:`TraceRecorder` attaches to the batched engine's opt-in tap seam
+(:meth:`repro.core.nvram.NVRAM.set_trace_tap`) and records one row per
+memory primitive into growable columnar numpy arrays -- the stream the
+paper's cost arguments are *about*: which thread touched which cache line,
+in which flush state, under which operation, and how its CASes fared.
+
+The tap sits beside the engine's cost accumulator: it only observes, so a
+recorded run's :class:`repro.core.nvram.Stats` are bit-identical to an
+unrecorded one (property-tested), and the differential oracle
+(``repro.core.nvram_ref``) is untouched.  Under the exact
+:class:`repro.core.scheduler.Scheduler` each row additionally carries the
+scheduler's global step index (grants are serialized, so step order ==
+primitive order); under ``run_single`` the recorder numbers primitives
+itself.
+
+Columns (all ``int64``, one row per primitive):
+
+=========  =============================================================
+``step``   global order: exact-scheduler step index, else a running count
+``tid``    executing simulated thread
+``op_seq`` per-thread operation sequence number (-1 outside any op,
+           e.g. queue construction or prefill)
+``op_kind`` index into ``meta['kinds']`` ('enq'/'deq'; -1 outside ops)
+``prim``   primitive kind: TR_READ/TR_WRITE/TR_WRITE_LINE/TR_CAS/
+           TR_FLUSH/TR_FENCE/TR_MOVNTI (repro.core.nvram)
+``addr``   word address (-1 for fences)
+``line``   cache line number (addr // LINE_WORDS; -1 for fences)
+``state``  TS_* pre-access flush state of the line; TS_INVALIDATED on a
+           fetching primitive (read/write/CAS) is a post-flush access
+``aux``    CAS outcome (1 success / 0 failure), fence pending-entry
+           count; -1 otherwise
+=========  =============================================================
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core.nvram import LINE_WORDS, TR_CAS, TR_READ, TR_WRITE
+
+# fetching primitives: these bring the line into cache, so TS_INVALIDATED
+# pre-state means the access pays the paper's post-flush penalty
+FETCHING_PRIMS = (TR_READ, TR_WRITE, TR_CAS)
+
+COLUMNS = ("step", "tid", "op_seq", "op_kind", "prim", "addr", "line",
+           "state", "aux")
+
+
+@dataclass
+class Trace:
+    """One captured run: columnar event stream + provenance metadata.
+
+    ``meta`` carries ``schema`` (version), ``queue``, ``model``,
+    ``nthreads``, ``seed``, ``scheduler``, ``kinds`` (op-kind code table)
+    and ``regions`` (the engine's named address regions, for mapping
+    addresses back to program sites).  No wall-clock or host state is ever
+    recorded: the same seed produces a byte-identical trace.
+    """
+
+    meta: Dict[str, Any]
+    columns: Dict[str, np.ndarray] = field(default_factory=dict)
+
+    def __len__(self) -> int:
+        return len(self.columns["step"]) if self.columns else 0
+
+    def __getattr__(self, name: str) -> np.ndarray:
+        cols = self.__dict__.get("columns") or {}
+        if name in cols:
+            return cols[name]
+        raise AttributeError(name)
+
+    # ----------------------------------------------------------- utilities
+    def kind_code(self, kind: str) -> int:
+        """Code of op kind `kind` in this trace (-1 if never recorded)."""
+        kinds = self.meta.get("kinds", [])
+        return kinds.index(kind) if kind in kinds else -1
+
+    def region_of(self, addr: int) -> str:
+        """Name of the engine region containing `addr` ('?' if unmapped)."""
+        for name, base, nwords, _persistent in self.meta.get("regions", []):
+            if base <= addr < base + nwords:
+                return name
+        return "?"
+
+    def post_flush_mask(self) -> np.ndarray:
+        """Rows that are post-flush accesses (fetch of an invalidated line).
+
+        Sums to the engine's ``Stats.post_flush_accesses`` for the recorded
+        window -- the trace and the cost accumulator classify identically.
+        """
+        from repro.core.nvram import TS_INVALIDATED
+        return (np.isin(self.columns["prim"], FETCHING_PRIMS)
+                & (self.columns["state"] == TS_INVALIDATED))
+
+
+class TraceRecorder:
+    """Columnar recorder implementing the engine tap protocol.
+
+    Use via the harness::
+
+        rec = TraceRecorder()
+        h.run_scheduled(plans, seed=1, trace=rec)
+        trace = rec.trace          # repro.trace.Trace
+
+    or attach/detach manually with :meth:`attach` / :meth:`finish`.
+    One recorder captures one run.
+    """
+
+    def __init__(self, capacity: int = 4096):
+        self._cap = max(int(capacity), 16)
+        self._n = 0
+        self._cols = {c: np.empty(self._cap, dtype=np.int64)
+                      for c in COLUMNS}
+        self._nv = None
+        self._meta: Dict[str, Any] = {}
+        self._kinds: List[str] = []
+        self._kind_code: Dict[str, int] = {}
+        # per-thread current (op_seq, op_kind); -1 outside any op
+        self._cur_seq: Dict[int, int] = {}
+        self._cur_kind: Dict[int, int] = {}
+        self._op_count: Dict[int, int] = {}
+        self._count = 0          # fallback primitive numbering
+        self._sched_step = -1    # pending exact-scheduler step index
+        self.trace: Optional[Trace] = None
+
+    # ------------------------------------------------------------ lifecycle
+    def attach(self, nvram, meta: Optional[Dict[str, Any]] = None) -> None:
+        if self._nv is not None:
+            raise RuntimeError("recorder already attached")
+        if self.trace is not None:
+            raise RuntimeError(
+                "recorder already used: one recorder captures one run "
+                "(a second attach would concatenate streams); create a "
+                "fresh TraceRecorder")
+        if not hasattr(nvram, "set_trace_tap"):
+            raise TypeError(
+                "trace capture needs the batched engine "
+                "(repro.core.nvram.NVRAM); the reference oracle has no tap "
+                "seam by design")
+        self._nv = nvram
+        self._meta = dict(meta or {})
+        nvram.set_trace_tap(self)
+
+    def finish(self, regions=None) -> Trace:
+        """Detach from the engine and freeze the recorded stream."""
+        if self._nv is not None:
+            self._nv.set_trace_tap(None)
+            self._nv = None
+        meta = dict(self._meta)
+        meta["schema"] = 1
+        meta["kinds"] = list(self._kinds)
+        meta["regions"] = [list(r) for r in (regions or [])]
+        meta["ops_recorded"] = dict(sorted(self._op_count.items()))
+        cols = {c: self._cols[c][:self._n].copy() for c in COLUMNS}
+        self.trace = Trace(meta=meta, columns=cols)
+        return self.trace
+
+    # --------------------------------------------------------- tap protocol
+    def on_sched_step(self, step: int) -> None:
+        """Exact scheduler: the next primitive carries global index `step`."""
+        self._sched_step = step
+
+    def begin_op(self, tid: int, kind: str) -> None:
+        """Harness hook: thread `tid` starts its next `kind` operation."""
+        code = self._kind_code.get(kind)
+        if code is None:
+            code = len(self._kinds)
+            self._kinds.append(kind)
+            self._kind_code[kind] = code
+        self._cur_seq[tid] = self._op_count.get(tid, 0)
+        self._op_count[tid] = self._cur_seq[tid] + 1
+        self._cur_kind[tid] = code
+
+    def on_prim(self, tid: int, prim: int, addr: int, state: int,
+                aux: int) -> None:
+        n = self._n
+        if n == self._cap:
+            self._grow()
+        self._count += 1
+        step = self._sched_step
+        if step >= 0:
+            self._sched_step = -1
+        else:
+            step = self._count
+        c = self._cols
+        c["step"][n] = step
+        c["tid"][n] = tid
+        c["op_seq"][n] = self._cur_seq.get(tid, -1)
+        c["op_kind"][n] = self._cur_kind.get(tid, -1)
+        c["prim"][n] = prim
+        c["addr"][n] = addr
+        c["line"][n] = addr // LINE_WORDS if addr >= 0 else -1
+        c["state"][n] = state
+        c["aux"][n] = aux
+        self._n = n + 1
+
+    # ------------------------------------------------------------ internals
+    def _grow(self) -> None:
+        self._cap *= 2
+        for k, arr in self._cols.items():
+            grown = np.empty(self._cap, dtype=np.int64)
+            grown[:self._n] = arr
+            self._cols[k] = grown

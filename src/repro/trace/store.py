@@ -1,0 +1,84 @@
+"""Versioned on-disk format for captured traces (`.npz` + JSON metadata).
+
+A trace file is a ``numpy.savez_compressed`` archive holding the nine
+int64 columns of :class:`repro.trace.recorder.Trace` plus one ``meta``
+entry: the UTF-8 JSON encoding of the trace metadata, which carries the
+``schema`` version.  Loading validates the schema version, the column set,
+dtypes and equal lengths, and raises :class:`TraceSchemaError` on any
+mismatch -- a trace produced by a future incompatible recorder fails
+loudly instead of mis-parsing.
+
+Determinism: ``save_trace`` writes only the recorded arrays and metadata
+(no timestamps, hostnames or absolute paths), so identical traces produce
+byte-identical files -- the property the determinism tests pin.
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+from typing import Union
+
+import numpy as np
+
+from .recorder import COLUMNS, Trace
+
+SCHEMA_VERSION = 1
+
+
+class TraceSchemaError(ValueError):
+    """The file is not a trace of a schema version this code understands."""
+
+
+def save_trace(path: Union[str, "os.PathLike"], trace: Trace) -> None:
+    """Write `trace` to `path` (conventionally ``*.trace.npz``)."""
+    meta = dict(trace.meta)
+    meta["schema"] = meta.get("schema", SCHEMA_VERSION)
+    payload = {c: np.ascontiguousarray(trace.columns[c], dtype=np.int64)
+               for c in COLUMNS}
+    payload["meta"] = np.frombuffer(
+        json.dumps(meta, sort_keys=True).encode("utf-8"), dtype=np.uint8)
+    # write through a buffer so partial writes never leave a torn file
+    buf = io.BytesIO()
+    np.savez_compressed(buf, **payload)
+    with open(path, "wb") as f:
+        f.write(buf.getvalue())
+
+
+def load_trace(path: Union[str, "os.PathLike"]) -> Trace:
+    """Load a trace saved by :func:`save_trace`, validating the schema."""
+    try:
+        with np.load(path) as npz:
+            names = set(npz.files)
+            if "meta" not in names:
+                raise TraceSchemaError(f"{path}: no trace metadata entry")
+            try:
+                meta = json.loads(bytes(npz["meta"]).decode("utf-8"))
+            except (UnicodeDecodeError, json.JSONDecodeError) as e:
+                raise TraceSchemaError(f"{path}: unparseable metadata: {e}")
+            version = meta.get("schema")
+            if version != SCHEMA_VERSION:
+                raise TraceSchemaError(
+                    f"{path}: trace schema {version!r}, this reader "
+                    f"understands {SCHEMA_VERSION}")
+            missing = [c for c in COLUMNS if c not in names]
+            if missing:
+                raise TraceSchemaError(f"{path}: missing columns {missing}")
+            cols = {c: npz[c] for c in COLUMNS}
+    except (OSError, ValueError) as e:
+        if isinstance(e, TraceSchemaError):
+            raise
+        raise TraceSchemaError(f"{path}: not a readable trace archive: {e}")
+    lengths = {c: len(a) for c, a in cols.items()}
+    if len(set(lengths.values())) != 1:
+        raise TraceSchemaError(f"{path}: ragged columns {lengths}")
+    for c, a in cols.items():
+        if a.dtype != np.int64:
+            raise TraceSchemaError(
+                f"{path}: column {c} has dtype {a.dtype}, expected int64")
+        cols[c] = a.copy()   # detach from the npz mmap
+    # JSON round-trips region tuples as lists; normalize to tuples
+    meta["regions"] = [tuple(r) for r in meta.get("regions", [])]
+    meta["ops_recorded"] = {int(k): v for k, v in
+                            meta.get("ops_recorded", {}).items()}
+    return Trace(meta=meta, columns=cols)

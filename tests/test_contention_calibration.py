@@ -2,16 +2,22 @@
 
 The acceptance criterion for the contention layer: batched multi-thread
 persist-instruction totals (flushes + fences) and flushed-access totals
-(post-flush accesses) must land within 15% of what the exact per-primitive
-OS-thread scheduler -- where CAS failures, retries and helping actually
-execute -- produces at 2--8 threads, for all seven durable queues.
+(post-flush accesses) must land within tolerance of what the exact
+per-primitive OS-thread scheduler -- where CAS failures, retries and
+helping actually execute -- produces at 2--8 threads, for all seven
+durable queues: **15%** for the hand-fit ``retry_profile()`` constants
+(``--contention on``), **10%** for the trace-learned profiles
+(``--contention learned``, fit by ``repro.trace.fit`` -- see
+``python benchmarks/run.py fit-profiles``).  The 12/16-thread extension
+of the learned envelope lives in the slow-marked part of
+``tests/test_trace_fit.py``.
 
 The exact scheduler is the ground truth because its retries are real: a
 thread that loses the link CAS re-reads the tail, takes the helping path,
 and re-touches flushed lines exactly as the algorithm dictates.  The
 contention model replays those costs statistically (see
-repro.core.contention); its default ``retry_scale`` and the per-queue
-``retry_profile()`` expected counts were fit against these very runs.
+repro.core.contention); the hand profiles were fit against these very
+runs, and the learned profiles are regression-fit against traces of them.
 
 Small absolute floors keep the relative tolerance meaningful where ground
 truth is tiny (the second-amendment queues have zero post-flush accesses on
@@ -20,23 +26,27 @@ both sides, which must stay exactly zero -- see the property suite).
 import pytest
 
 from repro.core import ALL_QUEUES, QueueHarness
-from benchmarks.workloads import make_plans
+from benchmarks.workloads import make_plans, resolve_contention
 
 DURABLE7 = ["DurableMSQ", "IzraelevitzQ", "NVTraverseQ", "UnlinkedQ",
             "LinkedQ", "OptUnlinkedQ", "OptLinkedQ"]
 
-TOLERANCE = 0.15
+TOLERANCES = {"on": 0.15, "learned": 0.10}
 PF_FLOOR = 30        # absolute floor for the post-flush denominator
 OPS_PER_THREAD = 24  # exact-scheduler runs are ~ms/op; keep runs small
 
 # Deliberately NOT marked slow: this suite IS the PR's acceptance gate for
 # the contention model, so CI must run it.  The ~2 min it costs is the
-# price of exact-scheduler ground truth; shrink OPS_PER_THREAD before
-# slow-marking it.
+# price of exact-scheduler ground truth (computed once per cell and shared
+# by both model variants); shrink OPS_PER_THREAD before slow-marking it.
+
+_exact_cache = {}
 
 
-def _counts(name, nthreads, engine, seed=1):
+def _counts(name, nthreads, engine, contention="on", seed=1):
     """(persist_instructions, post_flush_accesses) for one run."""
+    if engine == "exact" and (name, nthreads) in _exact_cache:
+        return _exact_cache[(name, nthreads)]
     h = QueueHarness(ALL_QUEUES[name], nthreads=nthreads, area_nodes=1024)
     plans, prefill = make_plans("pairs", nthreads, OPS_PER_THREAD)
     for i in range(prefill):
@@ -45,23 +55,29 @@ def _counts(name, nthreads, engine, seed=1):
     if engine == "exact":
         res = h.run_scheduled(plans, seed=seed)
     else:
-        res = h.run_batched(plans, contention=True)
+        _, cmodel = resolve_contention(contention, name)
+        res = h.run_batched(plans, contention=cmodel)
     assert res.ops_completed == nthreads * OPS_PER_THREAD
     d = h.nvram.total_stats().minus(base)
-    return d.flushes + d.fences, d.post_flush_accesses
+    out = (d.flushes + d.fences, d.post_flush_accesses)
+    if engine == "exact":
+        _exact_cache[(name, nthreads)] = out
+    return out
 
 
 @pytest.mark.parametrize("name", DURABLE7)
-def test_contended_batched_matches_exact_scheduler(name):
+@pytest.mark.parametrize("contention", ["on", "learned"])
+def test_contended_batched_matches_exact_scheduler(name, contention):
+    tol = TOLERANCES[contention]
     for nthreads in (2, 4, 8):
         persist_e, pf_e = _counts(name, nthreads, "exact")
-        persist_b, pf_b = _counts(name, nthreads, "batched")
-        assert abs(persist_b - persist_e) <= TOLERANCE * max(persist_e, 1), (
-            f"{name} t{nthreads}: persist instructions batched={persist_b} "
-            f"exact={persist_e} (> {TOLERANCE:.0%} off)")
-        assert abs(pf_b - pf_e) <= TOLERANCE * max(pf_e, PF_FLOOR), (
-            f"{name} t{nthreads}: flushed accesses batched={pf_b} "
-            f"exact={pf_e} (> {TOLERANCE:.0%} off)")
+        persist_b, pf_b = _counts(name, nthreads, "batched", contention)
+        assert abs(persist_b - persist_e) <= tol * max(persist_e, 1), (
+            f"{name} t{nthreads} [{contention}]: persist instructions "
+            f"batched={persist_b} exact={persist_e} (> {tol:.0%} off)")
+        assert abs(pf_b - pf_e) <= tol * max(pf_e, PF_FLOOR), (
+            f"{name} t{nthreads} [{contention}]: flushed accesses "
+            f"batched={pf_b} exact={pf_e} (> {tol:.0%} off)")
 
 
 def test_contention_charges_grow_with_threads():

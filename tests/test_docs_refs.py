@@ -102,3 +102,23 @@ def test_docs_name_the_load_bearing_tests():
                 "tests/test_contention_calibration.py"):
         assert rel in arch, f"architecture.md does not mention {rel}"
         assert (REPO / rel).is_file(), f"{rel} named in docs but missing"
+
+
+def test_queue_enumeration_single_source_of_truth():
+    """Satellite: docs/queues.md defers to the code's queue registries.
+
+    `repro.core.DURABLE_QUEUES` is the documented source of truth for the
+    queue enumeration: queues.md must say so, its table must list exactly
+    the `ALL_QUEUES` names (7 durable + the MSQ baseline), and no doc may
+    claim a queue that the registries do not know.
+    """
+    from repro.core import ALL_QUEUES, DURABLE_QUEUES
+    text = (REPO / "docs" / "queues.md").read_text()
+    assert "DURABLE_QUEUES" in text, \
+        "queues.md must name repro.core.DURABLE_QUEUES as source of truth"
+    assert len(DURABLE_QUEUES) == 7 and len(ALL_QUEUES) == 8
+    table_names = {m.group(1) for m in
+                   re.finditer(r"^\|\s*(\w+)\s*\|\s*`", text, re.M)}
+    assert table_names == set(ALL_QUEUES), (
+        f"queues.md table lists {sorted(table_names)} but the registries "
+        f"enumerate {sorted(ALL_QUEUES)}")

@@ -1,0 +1,246 @@
+"""The trace subsystem: capture determinism, storage schema, attribution,
+and the learned contention profiles.
+
+Four property groups:
+
+* **Inertness** -- recording must never change what it observes: a traced
+  run's Stats are bit-identical to an untraced one (the tap sits beside
+  the cost accumulator), and the trace's own post-flush classification
+  sums to the engine's counter.
+* **Determinism** -- the exact scheduler is seed-deterministic, the
+  recorder adds no ambient state, and the store writes no timestamps:
+  same seed => byte-identical trace file.
+* **Storage** -- `.npz` round-trips preserve columns and metadata;
+  wrong-version or malformed files are rejected loudly.
+* **Section 8 attribution + learned profiles** -- trace-derived post-flush
+  attribution reproduces the paper's qualitative ordering (second
+  amendment queues strictly below their baselines, at zero), and the
+  checked-in `benchmarks/profiles/learned.json` is complete, measured
+  (no hand constants), and calibrates the batched model within 10% of
+  exact at 2-8 threads -- extended to 12/16 threads (20%, sampled ground
+  truth) in the slow-marked test.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import ALL_QUEUES, QueueHarness
+from repro.trace import (TraceRecorder, TraceSchemaError, capture_trace,
+                         load_trace, post_flush_per_op, post_flush_sites,
+                         save_trace)
+from repro.trace.fit import (PARAM_FIELDS, fit_profiles, load_profiles,
+                             make_pairs_plans)
+from benchmarks.workloads import LEARNED_PROFILES_PATH, resolve_contention
+
+STAT_FIELDS = ["reads", "writes", "cas", "flushes", "fences", "movntis",
+               "post_flush_accesses", "cold_misses", "time_ns"]
+
+DURABLE7 = ["DurableMSQ", "IzraelevitzQ", "NVTraverseQ", "UnlinkedQ",
+            "LinkedQ", "OptUnlinkedQ", "OptLinkedQ"]
+
+
+def _run_traced(name, nthreads, ops, seed, trace=None):
+    h = QueueHarness(ALL_QUEUES[name], nthreads=nthreads, area_nodes=512)
+    plans, prefill = make_pairs_plans(nthreads, ops)
+    for i in range(prefill):
+        h.queue.enqueue(0, ("pre", i))
+    base = h.nvram.total_stats()
+    res = h.run_scheduled(plans, seed=seed, trace=trace)
+    assert res.ops_completed == nthreads * ops
+    return h.nvram.total_stats().minus(base)
+
+
+# ------------------------------------------------------------- inertness
+@pytest.mark.parametrize("name", ["DurableMSQ", "OptUnlinkedQ"])
+def test_recorder_off_vs_on_stats_bit_identical(name):
+    """Attaching a recorder must not perturb any Stats field: the tap only
+    observes.  (The differential oracle suite covers the untraced engine;
+    this pins the traced one against it.)"""
+    plain = _run_traced(name, 2, 12, seed=5)
+    traced = _run_traced(name, 2, 12, seed=5, trace=TraceRecorder())
+    for f in STAT_FIELDS:
+        assert getattr(traced, f) == getattr(plain, f), (
+            f"{name}: tracing perturbed {f}: "
+            f"{getattr(traced, f)} != {getattr(plain, f)}")
+
+
+def test_trace_post_flush_classification_matches_engine():
+    """The trace's pre-access line states reproduce the engine's post-flush
+    accounting exactly: sum(post_flush_mask) == Stats.post_flush_accesses."""
+    rec = TraceRecorder()
+    d = _run_traced("DurableMSQ", 2, 12, seed=5, trace=rec)
+    assert d.post_flush_accesses > 0
+    assert int(rec.trace.post_flush_mask().sum()) == d.post_flush_accesses
+
+
+# ----------------------------------------------------------- determinism
+def test_same_seed_byte_identical_trace(tmp_path):
+    paths = []
+    for i in (0, 1):
+        trace = capture_trace("DurableMSQ", 2, 8, seed=7)
+        p = tmp_path / f"t{i}.trace.npz"
+        save_trace(p, trace)
+        paths.append(p)
+    assert paths[0].read_bytes() == paths[1].read_bytes(), \
+        "same seed must produce a byte-identical trace file"
+
+
+def test_different_seed_different_interleaving(tmp_path):
+    a = capture_trace("DurableMSQ", 3, 8, seed=1)
+    b = capture_trace("DurableMSQ", 3, 8, seed=2)
+    assert (len(a) != len(b)
+            or not np.array_equal(a.columns["tid"], b.columns["tid"]))
+
+
+# --------------------------------------------------------------- storage
+def test_store_roundtrip_preserves_schema(tmp_path):
+    trace = capture_trace("UnlinkedQ", 2, 8, seed=3)
+    p = tmp_path / "u.trace.npz"
+    save_trace(p, trace)
+    back = load_trace(p)
+    assert back.meta["schema"] == 1
+    assert back.meta["queue"] == "UnlinkedQ"
+    assert back.meta["kinds"] == trace.meta["kinds"]
+    for c in trace.columns:
+        assert np.array_equal(back.columns[c], trace.columns[c]), c
+    # region map survives (site attribution needs it)
+    assert any(n.startswith("unlinkedq:") for n, *_ in back.meta["regions"])
+
+
+def test_store_rejects_wrong_version(tmp_path):
+    trace = capture_trace("UnlinkedQ", 2, 6, seed=3)
+    trace.meta["schema"] = 999
+    p = tmp_path / "bad_version.trace.npz"
+    save_trace(p, trace)
+    with pytest.raises(TraceSchemaError, match="schema"):
+        load_trace(p)
+
+
+def test_store_rejects_malformed_files(tmp_path):
+    not_a_trace = tmp_path / "junk.npz"
+    np.savez(not_a_trace, step=np.arange(3))
+    with pytest.raises(TraceSchemaError):
+        load_trace(not_a_trace)
+    garbage = tmp_path / "garbage.npz"
+    garbage.write_bytes(b"this is not an npz archive")
+    with pytest.raises(TraceSchemaError):
+        load_trace(garbage)
+
+
+# --------------------------------------------- section 8 attribution
+def test_paper_s8_opt_queues_strictly_fewer_post_flush_accesses():
+    """Trace-derived attribution reproduces the paper's qualitative
+    ordering: each second-amendment queue shows strictly fewer post-flush
+    accesses per op than its non-opt counterpart -- and in fact zero, with
+    an empty site list, while every baseline attributes at least one
+    concrete (op kind, region, primitive) site."""
+    per_op = {}
+    sites = {}
+    for name in ("UnlinkedQ", "OptUnlinkedQ", "LinkedQ", "OptLinkedQ",
+                 "DurableMSQ"):
+        trace = capture_trace(name, 3, 12, seed=2)
+        per_op[name] = post_flush_per_op(trace)["all"]
+        sites[name] = post_flush_sites(trace)
+    for opt, base in (("OptUnlinkedQ", "UnlinkedQ"),
+                      ("OptLinkedQ", "LinkedQ"),
+                      ("OptUnlinkedQ", "DurableMSQ")):
+        assert per_op[opt] < per_op[base], (
+            f"{opt} ({per_op[opt]:.2f}/op) not strictly below "
+            f"{base} ({per_op[base]:.2f}/op)")
+        assert per_op[opt] == 0.0, f"{opt} must attribute zero"
+        assert sites[opt] == [], f"{opt} must have no post-flush sites"
+        assert sites[base], f"{base} must attribute at least one site"
+    # the attribution names real program sites: DurableMSQ's dequeues
+    # re-read the flushed HEAD root line (module docstring claim)
+    msq_sites = {(s.op_kind, s.region, s.prim)
+                 for s in sites["DurableMSQ"]}
+    assert ("deq", "durablemsq:roots", "read") in msq_sites
+
+
+# ------------------------------------------------------ learned profiles
+def test_checked_in_profiles_are_complete_and_measured():
+    """benchmarks/profiles/learned.json: schema-checked, all seven queues,
+    every numeric field present, provenance recorded, and the second
+    amendment invariant is *measured* (flushed_reads == 0 for opt queues,
+    so contended runs keep post_flush_accesses == 0)."""
+    profiles = load_profiles(LEARNED_PROFILES_PATH)
+    assert set(profiles) == set(DURABLE7)
+    for name, lp in profiles.items():
+        assert set(lp.params) == {"enq", "deq"}, name
+        for kind, p in lp.params.items():
+            for f in PARAM_FIELDS:
+                assert np.isfinite(p[f]) and p[f] >= 0, (name, kind, f)
+        assert lp.source.get("traces"), f"{name}: no fit provenance"
+    for name in ("OptUnlinkedQ", "OptLinkedQ"):
+        for kind in ("enq", "deq"):
+            assert profiles[name].params[kind]["flushed_reads"] == 0.0
+    # raw JSON stays versioned + diff-reviewable
+    with open(LEARNED_PROFILES_PATH) as f:
+        doc = json.load(f)
+    assert doc["schema"] == 1 and "retry_scale" in doc
+
+
+def test_learned_profiles_preserve_second_amendment_under_contention():
+    """Contended batched runs with learned profiles keep the paper's
+    headline invariant: zero post-flush accesses for the opt queues."""
+    for name in ("OptUnlinkedQ", "OptLinkedQ"):
+        h = QueueHarness(ALL_QUEUES[name], nthreads=8, area_nodes=512)
+        plans, prefill = make_pairs_plans(8, 24)
+        for i in range(prefill):
+            h.queue.enqueue(0, ("pre", i))
+        _, cm = resolve_contention("learned", name)
+        res = h.run_batched(plans, contention=cm)
+        assert res.stats.post_flush_accesses == 0
+        assert cm.retries_charged > 0   # and not because nothing happened
+
+
+def test_fit_pipeline_end_to_end_small():
+    """fit_profiles on small fresh traces: produces finite non-negative
+    params for both kinds and records the observed retry targets."""
+    traces = [capture_trace("DurableMSQ", t, 8, seed=4) for t in (2, 3)]
+    lp = fit_profiles("DurableMSQ", traces, refine=False)
+    assert set(lp.params) == {"enq", "deq"}
+    for kind, p in lp.params.items():
+        assert set(p) == set(PARAM_FIELDS)
+        for f, v in p.items():
+            assert np.isfinite(v) and v >= 0, (kind, f, v)
+    assert lp.source["target_rounds_per_op"]
+
+
+# ------------------------------------------------- 12/16-thread envelope
+def _counts(name, nthreads, engine, ops, contention=None, seed=1):
+    h = QueueHarness(ALL_QUEUES[name], nthreads=nthreads, area_nodes=1024)
+    plans, prefill = make_pairs_plans(nthreads, ops)
+    for i in range(prefill):
+        h.queue.enqueue(0, ("pre", i))
+    base = h.nvram.total_stats()
+    if engine == "exact":
+        h.run_scheduled(plans, seed=seed)
+    else:
+        _, cm = resolve_contention(contention, name)
+        h.run_batched(plans, contention=cm)
+    d = h.nvram.total_stats().minus(base)
+    return d.flushes + d.fences, d.post_flush_accesses
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", DURABLE7)
+def test_learned_calibration_extends_to_12_and_16_threads(name):
+    """Past the exact scheduler's practical reach, the learned model stays
+    within 20% of *sampled* exact ground truth (12 ops/thread, one seed)
+    on persist-instruction and flushed-access totals at 12 and 16 threads.
+
+    Slow: each exact 16-thread sample costs ~15-20 s of per-primitive
+    OS-thread scheduling; CI runs this suite in a non-blocking job.
+    """
+    TOL, PF_FLOOR, OPS = 0.20, 30, 12
+    for nthreads in (12, 16):
+        persist_e, pf_e = _counts(name, nthreads, "exact", OPS)
+        persist_b, pf_b = _counts(name, nthreads, "batched", OPS, "learned")
+        assert abs(persist_b - persist_e) <= TOL * max(persist_e, 1), (
+            f"{name} t{nthreads}: persist batched={persist_b} "
+            f"exact={persist_e} (> {TOL:.0%} off)")
+        assert abs(pf_b - pf_e) <= TOL * max(pf_e, PF_FLOOR), (
+            f"{name} t{nthreads}: flushed accesses batched={pf_b} "
+            f"exact={pf_e} (> {TOL:.0%} off)")
