@@ -24,6 +24,7 @@ Examples::
   python benchmarks/run.py --contention learned --threads 8,16  # trace-fitted
   python benchmarks/run.py --engine exact --trace-out traces/   # save traces
   python benchmarks/run.py fit-profiles               # refit learned.json
+  python benchmarks/run.py crash-sweep --out crash.csv   # every crash point
 """
 from __future__ import annotations
 
@@ -242,10 +243,23 @@ def fit_profiles_main(argv) -> None:
           f"to {args.out}")
 
 
+def crash_sweep_main(argv) -> None:
+    """`run.py crash-sweep`: durable linearizability at every scheduler
+    step, via the snapshot/restore crash engine (repro.crash).  Emits the
+    coverage/recovery-cost CSV (--out) and, on violations, one repro
+    artifact per failure (--artifacts-dir) before exiting nonzero."""
+    from repro.crash.__main__ import sweep_main
+    rc = sweep_main(argv)
+    if rc:
+        sys.exit(rc)
+
+
 def main(argv=None) -> None:
     argv = sys.argv[1:] if argv is None else list(argv)
     if argv and argv[0] == "fit-profiles":
         return fit_profiles_main(argv[1:])
+    if argv and argv[0] == "crash-sweep":
+        return crash_sweep_main(argv[1:])
     args = parse_args(argv)
     threads = sorted({int(t) for t in args.threads.split(",")})
     models = args.models.split(",")

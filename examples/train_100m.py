@@ -14,7 +14,6 @@ import argparse
 import dataclasses
 
 from repro.configs import get_config
-from repro.launch import train as train_mod
 
 
 def main() -> None:

@@ -20,7 +20,8 @@ OptLinkedQ   (2nd amend.) 1                       **0**
 from .memmodel import (MEMORY_MODELS, MemoryModel, OPTANE_CLWB, EADR,
                        CXL_MEM, get_memory_model)
 from .contention import ContentionModel, LearnedRetryProfile, RetryProfile
-from .nvram import NVRAM, LINE_WORDS, Stats, ThreadCrashed
+from .nvram import (NVRAM, LINE_WORDS, CrashChoices, EngineSnapshot, Stats,
+                    ThreadCrashed)
 from .nvram_ref import ReferenceNVRAM
 from .scheduler import ClockScheduler, Scheduler
 from .ssmem import SSMem, VolatileAlloc
@@ -39,6 +40,7 @@ from .harness import (ALL_QUEUES, DURABLE_QUEUES, QueueHarness,
 __all__ = [
     "ContentionModel", "LearnedRetryProfile", "RetryProfile",
     "NVRAM", "ReferenceNVRAM", "LINE_WORDS", "Stats", "ThreadCrashed",
+    "CrashChoices", "EngineSnapshot",
     "Scheduler", "ClockScheduler", "SSMem", "VolatileAlloc", "NULL",
     "QueueAlgorithm", "MSQueue", "DurableMSQueue", "IzraelevitzQueue",
     "NVTraverseQueue", "UnlinkedQueue", "LinkedQueue", "OptUnlinkedQueue",

@@ -100,6 +100,7 @@ class QueueHarness:
                                on_event=self.events.append)
         self.ops: List[OpRecord] = []
         self.contention: Optional[ContentionModel] = None   # last run_batched
+        self.last_scheduler: Optional[Scheduler] = None     # last run_scheduled
         self._trace = None            # active repro.trace recorder, if any
 
     # ------------------------------------------------------------- workloads
@@ -126,13 +127,21 @@ class QueueHarness:
 
     def run_scheduled(self, plans: List[List[Tuple[str, Any]]], seed: int = 0,
                       crash_at: Optional[int] = None,
-                      policy: str = "random", trace=None) -> RunResult:
+                      policy: str = "random", trace=None,
+                      snapshot_hook=None) -> RunResult:
         """Exact per-primitive OS-thread scheduler run.  ``trace`` attaches a
         :class:`repro.trace.TraceRecorder` for the duration of the run: the
         engine tap records every primitive (with scheduler step indices) and
-        the harness marks op boundaries; Stats are unaffected."""
+        the harness marks op boundaries; Stats are unaffected.
+
+        ``snapshot_hook(step)`` is forwarded to the :class:`Scheduler`: it
+        fires at every quiescent boundary (see the scheduler docs) -- the
+        crash sweep uses it to capture one :class:`repro.core.nvram.NVRAM`
+        snapshot per step.  The scheduler itself stays reachable afterwards
+        as ``self.last_scheduler`` (step totals, grant kinds)."""
         sched = Scheduler(self.nvram, seed=seed, policy=policy,
-                          crash_at=crash_at)
+                          crash_at=crash_at, snapshot_hook=snapshot_hook)
+        self.last_scheduler = sched
         workers = [self.make_worker(t, plans[t]) for t in range(len(plans))]
         self._trace_begin(trace, len(plans), seed, "exact")
         try:
@@ -218,8 +227,25 @@ class QueueHarness:
         return op
 
     # --------------------------------------------------------------- recovery
-    def crash_and_recover(self, mode: str = "random", seed: int = 0):
-        self.nvram.crash(mode=mode, seed=seed)
+    def crash_and_recover(self, mode: str = "random", seed: int = 0,
+                          snapshot=None, choices=None):
+        """Full-system crash + recovery on this harness's engine.
+
+        ``snapshot`` (an :class:`repro.core.nvram.EngineSnapshot`) is
+        restored first when given -- the crash-sweep path: one scheduled run
+        captured with per-step snapshots replaces rerunning the whole
+        schedule for every crash point.  ``choices`` (a
+        :class:`repro.core.nvram.CrashChoices`) pins the adversarial
+        outcome for ``mode='subset'``.
+        """
+        if snapshot is not None:
+            self.nvram.restore(snapshot)
+        if choices is not None:
+            self.nvram.crash(mode=mode, seed=seed, choices=choices)
+        else:
+            # the reference oracle's crash() has no `choices` parameter;
+            # only the batched engine grows the subset seam
+            self.nvram.crash(mode=mode, seed=seed)
         self.events.append(("crash",))
         # allocator state is volatile: recovery rebuilds the free lists from
         # the (persistent) designated areas (paper §9)

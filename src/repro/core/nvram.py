@@ -96,6 +96,75 @@ class ThreadCrashed(Exception):
     """Raised inside a simulated thread when a crash is injected."""
 
 
+@dataclass(frozen=True)
+class CrashChoices:
+    """Explicit adversarial crash outcome, applied by ``crash(mode='subset')``.
+
+    The 'random' crash mode draws three kinds of decisions; this pins each
+    one so the crash sweep can *enumerate* the full outcome space at a
+    boundary instead of sampling it:
+
+    * ``flush_survivors`` -- the set of ``(tid, pending-index)`` flush
+      entries that reach NVRAM;
+    * ``nt_prefix`` -- per ``(tid, line)``, how many of the thread's
+      pending NT stores to that line persist (a *prefix*: WC buffers drain
+      in issue order and the line evicts atomically);
+    * ``log_prefix`` -- per line, how many of its unapplied stores persist
+      (a prefix, Assumption 1).
+
+    Prefixes are clamped to what actually remains once the surviving
+    flushes have been applied, so enumerating against the pre-crash log
+    lengths over-covers harmlessly (duplicate outcomes, never missed ones).
+    """
+    flush_survivors: frozenset = frozenset()   # {(tid, pending_index)}
+    nt_prefix: tuple = ()                      # (((tid, line), k), ...)
+    log_prefix: tuple = ()                     # ((line, k), ...)
+
+
+class EngineSnapshot:
+    """Frozen copy of an engine's *memory* state -- never its accounting.
+
+    Captured by :meth:`NVRAM.snapshot`, reapplied by :meth:`NVRAM.restore`.
+    The event buffer and counter matrix are deliberately excluded: Stats
+    are monotonic instruments of work *performed*, and restoring memory
+    state must not rewind or perturb them (the crash-sweep tests assert a
+    snapshot/restore round-trip leaves Stats bit-identical).
+
+    ``volatile=False`` captures a crash-sufficient snapshot only (the
+    persistent image, store logs, pending-persist sets and line history):
+    restoring one is only meaningful when immediately followed by
+    :meth:`NVRAM.crash`, which discards volatile state anyway.  The crash
+    sweep takes one such snapshot per scheduler step, so the smaller
+    footprint matters.
+    """
+
+    __slots__ = ("nthreads", "brk", "vbrk", "regions", "pmem", "log",
+                 "log_start", "pending", "everfl", "crashed", "has_volatile",
+                 "vis", "cached", "finval", "vval", "vtouched")
+
+    def __init__(self, nv: "NVRAM", volatile: bool = True):
+        self.nthreads = nv.nthreads
+        self.brk = nv._brk
+        self.vbrk = nv._vbrk
+        self.regions = tuple(nv.regions)
+        self.pmem = nv._pmem[:nv._brk].copy()
+        self.log = {ln: list(entries) for ln, entries in nv._log.items()
+                    if entries}
+        self.log_start = dict(nv._log_start)
+        self.pending = {t: list(pl) for t, pl in nv._pending.items()}
+        nl = -(-nv._brk // LINE_WORDS)
+        self.everfl = nv._everfl[:nl].copy()
+        self.crashed = nv.crashed
+        self.has_volatile = volatile
+        if volatile:
+            self.vis = nv._vis[:nv._brk].copy()
+            self.cached = nv._cached[:nl].copy()
+            self.finval = nv._finval[:nl].copy()
+            vused = nv._vbrk - NVRAM._VOLATILE_BASE
+            self.vval = nv._vval[:vused].copy()
+            self.vtouched = nv._vtouched[:vused].copy()
+
+
 @dataclass
 class Stats:
     """Per-thread persistence/cost counters (paper metrics)."""
@@ -176,6 +245,9 @@ class NVRAM:
         self._counts = np.zeros((nthreads, N_EV), dtype=np.int64)
         self._tls = threading.local()
         self.crashed = False
+        # recovery-work tallies (crash-sweep reporting axis; not Stats)
+        self.pread_count = 0
+        self.pwrite_count = 0
         self._lock = threading.Lock()   # guards structural mutation (alloc)
 
     # ------------------------------------------------------------ thread id
@@ -472,8 +544,74 @@ class NVRAM:
             _, addr, v = ent
             self._pmem[addr] = v
 
+    # ------------------------------------------------------ snapshot/restore
+    def snapshot(self, volatile: bool = True) -> EngineSnapshot:
+        """Capture this engine's memory state (see :class:`EngineSnapshot`).
+
+        Pure observation: nothing is appended to the event buffer and no
+        counter moves, so taking a snapshot cannot perturb Stats.  With
+        ``volatile=False`` only the crash-relevant state is copied (the
+        persistent image, per-line store logs, pending-persist sets and
+        ever-flushed history) -- restore such a snapshot only to crash() it.
+        """
+        return EngineSnapshot(self, volatile=volatile)
+
+    def restore(self, snap: EngineSnapshot) -> None:
+        """Reapply a snapshot's memory state in place.
+
+        The address space (break pointers + region table) rewinds to the
+        snapshot's, so regions allocated afterwards are forgotten -- their
+        addresses will be handed out again and rewritten before any read
+        (the allocators zero or fully initialize before use).  Cost
+        accounting is untouched: Stats remain whatever the engine has
+        accumulated, because restore models *state transplantation*, not
+        un-executing work.
+        """
+        if snap.nthreads != self.nthreads:
+            raise ValueError(
+                f"snapshot taken with nthreads={snap.nthreads}, "
+                f"engine has {self.nthreads}")
+        if snap.brk > self._pcap:
+            self._grow_p(snap.brk)
+        vused = snap.vbrk - self._VOLATILE_BASE
+        if vused > self._vcap:
+            self._grow_v(vused)
+        self._brk = snap.brk
+        self._vbrk = snap.vbrk
+        self.regions = list(snap.regions)
+        self._pmem[:snap.brk] = snap.pmem
+        nl = len(snap.everfl)
+        self._everfl[:] = 0
+        self._everfl[:nl] = snap.everfl
+        self._log = {ln: list(entries) for ln, entries in snap.log.items()}
+        self._log_start = dict(snap.log_start)
+        self._pending = {t: list(pl) for t, pl in snap.pending.items()}
+        self.crashed = snap.crashed
+        if snap.has_volatile:
+            self._vis[:snap.brk] = snap.vis
+            self._cached[:] = 0
+            self._cached[:nl] = snap.cached
+            self._finval[:] = 0
+            self._finval[:nl] = snap.finval
+            self._vval[:vused] = snap.vval
+            self._vtouched[:] = False
+            self._vtouched[:vused] = snap.vtouched
+        else:
+            # crash-only snapshot: give the volatile level a post-crash-like
+            # default (coherent view = persistent image, cold caches) so a
+            # restore is well-defined even before crash() wipes it for real
+            self._vis[:snap.brk] = snap.pmem
+            self._cached[:] = 0
+            self._finval[:] = 0
+            self._vtouched[:] = False
+        # contention bookkeeping is a per-run measurement aid, not memory
+        # state: clear it rather than time-travel it
+        self._line_epoch.clear()
+        self._cas_words.clear()
+
     # ----------------------------------------------------------------- crash
-    def crash(self, mode: str = "random", seed: int = 0) -> None:
+    def crash(self, mode: str = "random", seed: int = 0,
+              choices: Optional[CrashChoices] = None) -> None:
         """Full-system crash (paper §2 failure model).
 
         mode='min'    -- nothing beyond fenced state survives (pending flushes
@@ -482,6 +620,10 @@ class NVRAM:
                          additionally each line persists a random *prefix* of
                          its remaining stores (implicit eviction, Assumption 1).
         mode='max'    -- everything reaches NVRAM (all stores applied).
+        mode='subset' -- the outcome pinned by ``choices`` (a
+                         :class:`CrashChoices`): the crash sweep uses this to
+                         exhaustively enumerate every adversarial outcome at
+                         a boundary when the pending set is small.
         Under a persist-on-store model (eADR) every visible store is durable,
         so all modes behave like 'max'.  Volatile memory (cache + DRAM space)
         is wiped regardless.
@@ -519,6 +661,31 @@ class NVRAM:
                     k = rng.randint(0, len(log))  # prefix (Assumption 1)
                     for (a, v) in log[:k]:
                         self._pmem[a] = v
+        elif mode == "subset":
+            # same decision structure as 'random', but every draw is pinned
+            # by `choices`; prefixes clamp to what remains after the chosen
+            # flushes applied (see CrashChoices)
+            ch = choices if choices is not None else CrashChoices()
+            nt_pref = dict(ch.nt_prefix)
+            for t in sorted(self._pending):
+                plist = self._pending[t]
+                nt_by_line: Dict[int, List[Tuple]] = {}
+                for i, ent in enumerate(plist):
+                    if ent[0] == "flush":
+                        if (t, i) in ch.flush_survivors:
+                            self._apply_persist(ent)
+                    else:
+                        nt_by_line.setdefault(ent[1] // LINE_WORDS,
+                                              []).append(ent)
+                for line, ents in nt_by_line.items():
+                    k = min(nt_pref.get((t, line), 0), len(ents))
+                    for ent in ents[:k]:
+                        self._apply_persist(ent)
+            log_pref = dict(ch.log_prefix)
+            for line, log in list(self._log.items()):
+                k = min(log_pref.get(line, 0), len(log))
+                for (a, v) in log[:k]:
+                    self._pmem[a] = v
         elif mode == "min":
             pass
         else:
@@ -538,12 +705,16 @@ class NVRAM:
     # ------------------------------------------------------ recovery access
     def pread(self, addr: int) -> Any:
         """Recovery-time direct read of the persistent image (not on the
-        fast path; costs are accounted separately by the harness)."""
+        fast path; costs are accounted separately by the harness).  The
+        plain `pread_count` tally feeds the crash sweep's recovery-work
+        axis; it is not part of Stats."""
+        self.pread_count += 1
         return self._pmem[addr]
 
     def pwrite(self, addr: int, value: Any) -> None:
         """Recovery-time direct persistent write (recovery persists its
         reconstruction before normal operation resumes)."""
+        self.pwrite_count += 1
         self._pmem[addr] = value
         self._vis[addr] = value
 

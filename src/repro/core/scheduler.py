@@ -46,13 +46,29 @@ from .nvram import NVRAM, ThreadCrashed
 
 class Scheduler:
     def __init__(self, nvram: NVRAM, seed: int = 0, policy: str = "random",
-                 crash_at: Optional[int] = None, max_steps: int = 2_000_000):
+                 crash_at: Optional[int] = None, max_steps: int = 2_000_000,
+                 snapshot_hook: Optional[Callable[[int], None]] = None):
         self.nvram = nvram
         self.rng = random.Random(seed)
         self.policy = policy
         self.crash_at = crash_at
         self.max_steps = max_steps
+        # Crash-sweep seam: called as snapshot_hook(s) at every *quiescent
+        # boundary* -- every live thread parked at a yield point, s
+        # primitives fully executed (including the trailing non-primitive
+        # code of the thread that ran primitive s).  The engine state at
+        # boundary s is exactly what a crash_at=s run would leave behind,
+        # so one hooked run captures every crash point at once.  Called
+        # once more after the last primitive (s = total) on crash-free runs.
+        self.snapshot_hook = snapshot_hook
         self.steps = 0
+        # grants[i] = (tid, primitive kind) of granted primitive i+1 --
+        # the sweep classifies crash boundaries (persist-adjacent vs
+        # interior) from this record.  Only recorded on hooked (crash-
+        # capture) runs: long exact runs (trace fitting, calibration)
+        # must not accumulate millions of unused tuples.
+        self.grants: List[tuple] = []
+        self._record_grants = snapshot_hook is not None
         self.crashed = False
         self._cv = threading.Condition()
         self._waiting: set = set()
@@ -77,6 +93,8 @@ class Scheduler:
             # granted: consume and run one primitive
             self._grant = None
             self._waiting.discard(tid)
+            if self._record_grants:
+                self.grants.append((tid, kind))
             # trace hook: the primitive about to execute carries this global
             # step index (grants are serialized, so the stamp cannot race)
             tap = getattr(self.nvram, "_tap", None)
@@ -125,6 +143,10 @@ class Scheduler:
                     self._cv.notify_all()
                     self._cv.wait_for(lambda: len(self._done) == n)
                     break
+                if self.snapshot_hook is not None:
+                    # quiescent boundary: `steps` primitives fully executed,
+                    # all live threads parked -- safe to snapshot the engine
+                    self.snapshot_hook(self.steps)
                 if self.policy == "rr":
                     tid = live[self.steps % len(live)]
                 else:
@@ -138,6 +160,9 @@ class Scheduler:
 
         for t in threads:
             t.join()
+        if self.snapshot_hook is not None and not self.crashed:
+            # final boundary: every primitive executed, all threads done
+            self.snapshot_hook(self.steps)
         self.nvram.step_hook = None
         return self.crashed
 

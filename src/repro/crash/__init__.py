@@ -1,0 +1,29 @@
+"""Exhaustive crash-sweep subsystem (paper §2 failure model, §7 claim).
+
+Checks durable linearizability at **every** scheduler step for the durable
+queues, fast enough for CI: one exact-scheduler run is captured with a
+per-step engine snapshot (:mod:`repro.crash.capture`), then each crash
+point is replayed by restore + crash + recover instead of rerunning the
+whole schedule (:mod:`repro.crash.sweep`).  Failures become one-command
+repro artifacts (:mod:`repro.crash.artifact`)::
+
+    python -m repro.crash sweep --queues OptUnlinkedQ
+    python -m repro.crash repro crash_artifacts/OptUnlinkedQ_step120_min.json
+
+See docs/architecture.md (crash subsystem) and docs/benchmarking.md
+(crash-sweep CSV schema).
+"""
+from .capture import PERSIST_KINDS, Boundary, Capture, capture_run
+from .sweep import (DEFAULT_MODES, ChoiceSpace, SweepResult, choice_space,
+                    enumerate_choices, standard_plans, sweep_queue,
+                    sweep_queues)
+from .artifact import (ARTIFACT_VERSION, failure_artifact, load_artifact,
+                       reproduce, save_artifact)
+
+__all__ = [
+    "PERSIST_KINDS", "Boundary", "Capture", "capture_run",
+    "DEFAULT_MODES", "ChoiceSpace", "SweepResult", "choice_space",
+    "enumerate_choices", "standard_plans", "sweep_queue", "sweep_queues",
+    "ARTIFACT_VERSION", "failure_artifact", "load_artifact", "reproduce",
+    "save_artifact",
+]

@@ -1,0 +1,162 @@
+"""CLI for the crash-sweep subsystem.
+
+::
+
+    python -m repro.crash sweep [--queues A,B | --shard k/n] [--out CSV]
+                                [--artifacts-dir DIR] ...
+    python -m repro.crash repro <artifact.json> [--method snapshot|rerun]
+
+``sweep`` exits nonzero iff any crash point violates durable
+linearizability (writing one repro artifact per violation); ``repro``
+exits nonzero iff the artifact's violation still reproduces.  CI runs the
+sweep as a sharded blocking matrix job and uploads the artifacts of
+failing shards (`.github/workflows/ci.yml`).
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import os
+import sys
+from typing import List
+
+from repro.core import DURABLE_QUEUES
+
+from .artifact import load_artifact, reproduce, save_artifact
+from .sweep import DEFAULT_MODES, sweep_queue
+
+CSV_FIELDS = [
+    "queue", "seed", "nthreads", "per_thread", "model", "crash_step",
+    "mode", "boundary", "prim_before", "prim_after", "pending_flush",
+    "pending_nt", "log_words", "subset_combos", "ok", "recovered_len",
+    "recovery_preads", "recovery_pwrites", "recovery_us",
+]
+
+
+def _shard(names: List[str], spec: str) -> List[str]:
+    """'k/n' -> every n-th queue starting at k (round-robin by sorted name,
+    so shards stay balanced as queues are added)."""
+    k, n = (int(x) for x in spec.split("/", 1))
+    if not (0 <= k < n):
+        raise ValueError(f"shard {spec!r}: need 0 <= k < n")
+    return names[k::n]
+
+
+def sweep_main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.crash sweep",
+        description="Exhaustive crash sweep: check durable linearizability "
+                    "at every scheduler step (snapshot/restore path).")
+    ap.add_argument("--queues", default=",".join(sorted(DURABLE_QUEUES)),
+                    help="comma-separated queue names "
+                         "(default: all durable queues)")
+    ap.add_argument("--shard", default=None, metavar="K/N",
+                    help="run shard K of N over the sorted queue list "
+                         "(CI matrix axis); applied after --queues")
+    ap.add_argument("--threads", type=int, default=3)
+    ap.add_argument("--ops", type=int, default=6,
+                    help="enqueues per thread (a dequeue follows every "
+                         "other one; default 6 = the standard workload)")
+    ap.add_argument("--seed", type=int, default=3)
+    ap.add_argument("--policy", default="random", choices=["random", "rr"])
+    ap.add_argument("--model", default="optane-clwb")
+    ap.add_argument("--area-nodes", type=int, default=64,
+                    help="allocator designated-area size (smaller = "
+                         "smaller snapshots + faster recovery scans)")
+    ap.add_argument("--modes", default=",".join(DEFAULT_MODES))
+    ap.add_argument("--no-subset", action="store_true",
+                    help="skip the exhaustive flush-subset enumeration")
+    ap.add_argument("--subset-cap", type=int, default=64,
+                    help="max outcome combos to enumerate per boundary "
+                         "(larger spaces fall back to the sampled modes)")
+    ap.add_argument("--out", default=None,
+                    help="write the per-crash-point coverage/recovery-cost "
+                         "CSV here")
+    ap.add_argument("--artifacts-dir", default=None,
+                    help="write one repro JSON per violation here")
+    args = ap.parse_args(argv)
+
+    names = [q for q in args.queues.split(",") if q]
+    unknown = [q for q in names if q not in DURABLE_QUEUES]
+    if unknown:
+        ap.error(f"unknown queue(s) {unknown}; have {sorted(DURABLE_QUEUES)}")
+    if args.shard:
+        names = _shard(sorted(names), args.shard)
+        print(f"# shard {args.shard}: {','.join(names) or '(empty)'}")
+
+    all_rows, n_failures = [], 0
+    print("name,us_per_call,derived")
+    for name in names:
+        r = sweep_queue(name, nthreads=args.threads, per_thread=args.ops,
+                        seed=args.seed, policy=args.policy, model=args.model,
+                        area_nodes=args.area_nodes,
+                        modes=tuple(args.modes.split(",")),
+                        subset=not args.no_subset,
+                        subset_cap=args.subset_cap, log=print)
+        cov = r.coverage()
+        all_rows.extend(r.rows)
+        us_per_recovery = (cov["recovery_us_total"]
+                           / max(cov["crashes_checked"], 1))
+        print(f"crash/{name},{us_per_recovery:.3f},"
+              f"boundaries={cov['boundaries']};"
+              f"persist_adjacent={cov['persist_adjacent']};"
+              f"interior={cov['interior']};"
+              f"crashes={cov['crashes_checked']};"
+              f"subset_enumerated={cov['subset_enumerated']};"
+              f"subset_skipped={cov['subset_skipped']};"
+              f"failures={cov['failures']};wall_s={r.wall_s:.1f}")
+        n_failures += len(r.failures)
+        if r.failures and args.artifacts_dir:
+            os.makedirs(args.artifacts_dir, exist_ok=True)
+            # sequence number: one step can yield several subset-mode
+            # violations (distinct CrashChoices) -- each gets its own file
+            for i, art in enumerate(r.failures):
+                path = os.path.join(
+                    args.artifacts_dir,
+                    f"{art['queue']}_{i:04d}_step{art['crash_step']}_"
+                    f"{art['mode']}.json")
+                save_artifact(path, art)
+                print(f"# wrote repro artifact {path} "
+                      f"(python -m repro.crash repro {path})")
+
+    if args.out and all_rows:
+        with open(args.out, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=CSV_FIELDS)
+            w.writeheader()
+            w.writerows(all_rows)
+        print(f"# wrote {len(all_rows)} rows to {args.out}")
+    if n_failures:
+        print(f"# {n_failures} durable-linearizability violation(s)",
+              file=sys.stderr)
+        return 1
+    return 0
+
+
+def repro_main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.crash repro",
+        description="Replay a crash-sweep failure artifact.  Exits nonzero "
+                    "iff the violation still reproduces.")
+    ap.add_argument("artifact", help="path to the repro JSON")
+    ap.add_argument("--method", default="snapshot",
+                    choices=["snapshot", "rerun"],
+                    help="snapshot: the sweep's fast path; rerun: "
+                         "independent rerun-from-scratch with crash_at")
+    args = ap.parse_args(argv)
+    art = load_artifact(args.artifact)
+    ok, _why, _recovered = reproduce(art, method=args.method, log=print)
+    return 1 if not ok else 0
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    if not argv or argv[0] not in ("sweep", "repro"):
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    if argv[0] == "sweep":
+        return sweep_main(argv[1:])
+    return repro_main(argv[1:])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

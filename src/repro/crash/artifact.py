@@ -1,0 +1,123 @@
+"""Failure-repro artifacts: a sweep violation as one JSON file.
+
+A crash-sweep failure is fully determined by (queue, workload shape,
+scheduler seed/policy, memory model, crash step, crash mode, crash seed,
+subset choices) -- everything else is deterministic.  :func:`failure_artifact`
+packs exactly that, :func:`save_artifact` / :func:`load_artifact` round-trip
+it, and :func:`reproduce` replays it either way:
+
+* ``method='snapshot'`` -- the sweep's own path (capture once, restore the
+  boundary, crash);
+* ``method='rerun'``    -- the classic independent path (rerun the whole
+  schedule from scratch with ``crash_at=step``), confirming the snapshot
+  seam itself is not the bug.
+
+One command::
+
+    python -m repro.crash repro <file> [--method rerun]
+
+exits nonzero iff the durable-linearizability violation still reproduces.
+CI uploads these files from failing sweep shards.
+"""
+from __future__ import annotations
+
+import json
+from typing import Optional, Tuple
+
+from repro.core import (DURABLE_QUEUES, CrashChoices, QueueHarness,
+                        check_durable_linearizability, split_at_crash)
+
+ARTIFACT_VERSION = 1
+
+
+def _choices_to_json(choices: Optional[CrashChoices]):
+    if choices is None:
+        return None
+    return {
+        "flush_survivors": sorted(list(e) for e in choices.flush_survivors),
+        "nt_prefix": [[list(k), v] for k, v in choices.nt_prefix],
+        "log_prefix": [list(kv) for kv in choices.log_prefix],
+    }
+
+
+def _choices_from_json(data) -> Optional[CrashChoices]:
+    if data is None:
+        return None
+    return CrashChoices(
+        flush_survivors=frozenset(tuple(e) for e in data["flush_survivors"]),
+        nt_prefix=tuple((tuple(k), v) for k, v in data["nt_prefix"]),
+        log_prefix=tuple((line, k) for line, k in data["log_prefix"]))
+
+
+def failure_artifact(capture, crash_step: int, mode: str, crash_seed: int,
+                     choices: Optional[CrashChoices], why: str,
+                     recovered: list) -> dict:
+    """Build the repro dict for one violation found by the sweep."""
+    per_thread = sum(1 for kind, _ in capture.plans[0] if kind == "enq")
+    return {
+        "version": ARTIFACT_VERSION,
+        "queue": capture.queue_name,
+        "nthreads": capture.nthreads,
+        "per_thread": per_thread,
+        "seed": capture.seed,
+        "policy": capture.policy,
+        "model": capture.model,
+        "area_nodes": capture.area_nodes,
+        "crash_step": crash_step,
+        "mode": mode,
+        "crash_seed": crash_seed,
+        "choices": _choices_to_json(choices),
+        "why": why,
+        "recovered": [repr(it) for it in recovered],
+    }
+
+
+def save_artifact(path: str, art: dict) -> None:
+    with open(path, "w") as f:
+        json.dump(art, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def load_artifact(path: str) -> dict:
+    with open(path) as f:
+        art = json.load(f)
+    if art.get("version") != ARTIFACT_VERSION:
+        raise ValueError(f"artifact version {art.get('version')!r} "
+                         f"(this code reads {ARTIFACT_VERSION})")
+    return art
+
+
+def reproduce(art: dict, method: str = "snapshot",
+              log=None) -> Tuple[bool, str, list]:
+    """Replay an artifact.  Returns (ok, why, recovered): ``ok=False``
+    means the durable-linearizability violation reproduced."""
+    from .sweep import _check_point, standard_plans
+    from .capture import capture_run
+
+    name = art["queue"]
+    plans = standard_plans(art["nthreads"], art["per_thread"])
+    choices = _choices_from_json(art["choices"])
+    h = QueueHarness(DURABLE_QUEUES[name], nthreads=art["nthreads"],
+                     area_nodes=art["area_nodes"], model=art["model"])
+    if method == "snapshot":
+        cap = capture_run(h, plans, seed=art["seed"], policy=art["policy"])
+        ok, why, recovered, _pr, _pw, _us = _check_point(
+            h, cap, art["crash_step"], art["mode"],
+            crash_seed=art["crash_seed"], choices=choices)
+    elif method == "rerun":
+        res = h.run_scheduled(plans, seed=art["seed"], policy=art["policy"],
+                              crash_at=art["crash_step"])
+        pre_events, _ = split_at_crash(h.events)
+        pre_ops = list(res.ops)
+        h.crash_and_recover(mode=art["mode"], seed=art["crash_seed"],
+                            choices=choices)
+        recovered = h.queue.drain(0)
+        ok, why = check_durable_linearizability(pre_ops, pre_events,
+                                                recovered)
+    else:
+        raise ValueError(f"method {method!r} (snapshot|rerun)")
+    if log:
+        verdict = "violation REPRODUCED" if not ok else "no violation"
+        log(f"{name} step={art['crash_step']} mode={art['mode']} "
+            f"[{method}]: {verdict} ({why}); recovered={recovered!r}")
+    return ok, why, recovered

@@ -1,0 +1,120 @@
+"""Snapshot capture: ONE exact-scheduler run, every crash point preserved.
+
+The classic way to test a crash point is to rerun the whole schedule from
+scratch with ``crash_at=s`` -- ~milliseconds per primitive on the OS-thread
+scheduler, so checking *every* boundary of even a small workload costs
+hours.  This module replaces that with a single hooked run:
+
+* the exact :class:`repro.core.Scheduler` calls ``snapshot_hook(s)`` at
+  every quiescent boundary (all live threads parked at yield points, ``s``
+  primitives fully executed);
+* at each boundary we take an :class:`repro.core.nvram.EngineSnapshot`
+  (crash-sufficient by default: persistent image + store logs + pending
+  persist sets) and record the harness-side history cursor (how many ops
+  exist, which completed, how many linearization events happened);
+* because the scheduler is seed-deterministic, the first ``s`` primitives
+  of a ``crash_at=s`` rerun are *identical* to the hooked run's prefix --
+  so restoring boundary ``s``'s snapshot and crashing reproduces the rerun
+  exactly (asserted by ``tests/test_crash_sweep.py``).
+
+The recorded op/event cursors let :meth:`Capture.pre_crash_ops` and
+:meth:`Capture.pre_crash_events` rebuild the pre-crash history that the
+durable-linearizability checker needs, without rerunning anything.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, List, Tuple
+
+from repro.core.harness import OpRecord, QueueHarness
+
+#: scheduler primitive kinds whose adjacency makes a boundary
+#: "persist-adjacent" (the crash sweep's coverage classification):
+#: boundaries right before/after explicit persist work are where
+#: crash-recovery bugs hide (NVTraverse; Zuriel et al.).
+PERSIST_KINDS = frozenset({"flush", "fence", "movnti"})
+
+
+@dataclass
+class Boundary:
+    """State at one crash point: after `step` primitives executed."""
+    step: int
+    snap: Any                      # EngineSnapshot (crash-sufficient)
+    ops_len: int                   # harness.ops existing at this boundary
+    events_len: int                # linearization events so far
+    completed: Tuple[bool, ...]    # per existing op: returned before crash?
+    items: Tuple[Any, ...]         # per existing op: item (deq result if done)
+
+
+@dataclass
+class Capture:
+    """A full run plus everything needed to crash it anywhere."""
+    queue_name: str
+    nthreads: int
+    seed: int
+    policy: str
+    model: str
+    area_nodes: int
+    plans: List[list]
+    total_steps: int
+    kinds: List[str]               # kinds[i] = primitive i+1's kind
+    boundaries: List[Boundary]     # index s -> boundary after s primitives
+    ops: List[OpRecord] = field(default_factory=list)    # final (crash-free)
+    events: List[tuple] = field(default_factory=list)    # frozen event log
+
+    def pre_crash_ops(self, step: int) -> List[OpRecord]:
+        """The op history a crash_at=`step` run would have produced."""
+        b = self.boundaries[step]
+        return [OpRecord(tid=self.ops[i].tid, kind=self.ops[i].kind,
+                         item=b.items[i], completed=b.completed[i])
+                for i in range(b.ops_len)]
+
+    def pre_crash_events(self, step: int) -> List[tuple]:
+        """The linearization-event prefix visible at crash point `step`."""
+        return self.events[:self.boundaries[step].events_len]
+
+    def boundary_class(self, step: int) -> str:
+        """'persist-adjacent' if the primitive just executed or the next
+        one due is persist work (flush/fence/movnti), else 'interior'."""
+        before = self.kinds[step - 1] if step >= 1 else None
+        after = self.kinds[step] if step < self.total_steps else None
+        return ("persist-adjacent"
+                if before in PERSIST_KINDS or after in PERSIST_KINDS
+                else "interior")
+
+
+def capture_run(harness: QueueHarness, plans: List[list], seed: int = 0,
+                policy: str = "random",
+                volatile_snapshots: bool = False) -> Capture:
+    """Run `plans` to completion on `harness`'s exact scheduler, capturing
+    a boundary record at every step.  Returns the :class:`Capture`; the
+    harness is left in its end-of-run state (sweeps restore over it).
+
+    ``volatile_snapshots=True`` captures full snapshots (volatile state
+    included) -- only needed when a restored boundary is *resumed* rather
+    than crashed; the sweep never needs it.
+    """
+    nv = harness.nvram
+    boundaries: List[Boundary] = []
+
+    def hook(step: int) -> None:
+        boundaries.append(Boundary(
+            step=step,
+            snap=nv.snapshot(volatile=volatile_snapshots),
+            ops_len=len(harness.ops),
+            events_len=len(harness.events),
+            completed=tuple(r.completed for r in harness.ops),
+            items=tuple(r.item for r in harness.ops)))
+
+    res = harness.run_scheduled([list(p) for p in plans], seed=seed,
+                                policy=policy, snapshot_hook=hook)
+    sched = harness.last_scheduler
+    assert not res.crashed, "capture runs must be crash-free"
+    assert len(boundaries) == sched.steps + 1, \
+        f"expected {sched.steps + 1} boundaries, got {len(boundaries)}"
+    return Capture(
+        queue_name=harness.queue_cls.NAME, nthreads=len(plans), seed=seed,
+        policy=policy, model=nv.model.name, area_nodes=harness.mem.area_nodes,
+        plans=[list(p) for p in plans], total_steps=sched.steps,
+        kinds=[k for _, k in sched.grants], boundaries=boundaries,
+        ops=list(res.ops), events=list(harness.events))

@@ -1,0 +1,279 @@
+"""Exhaustive crash sweep: durable linearizability at EVERY boundary.
+
+For one queue, :func:`sweep_queue`:
+
+1. captures a standard exact-scheduler run once (:mod:`repro.crash.capture`);
+2. for every crash step ``1..total`` applies the adversarial crash modes --
+   ``min`` / ``random`` / ``max`` (paper §2 failure model) plus the
+   ``subset`` mode, which *enumerates* every combination of surviving
+   pending flushes, NT-store prefixes and per-line store-log prefixes
+   whenever that outcome space is small enough (``subset_cap``);
+3. runs the queue's recovery from each crashed image, drains it, and checks
+   the result against the pre-crash history with
+   :func:`repro.core.check_durable_linearizability`;
+4. classifies each boundary (persist-adjacent vs interior; see
+   :data:`repro.crash.capture.PERSIST_KINDS`) and tallies coverage, plus a
+   recovery-work axis (persistent reads/writes + wall time per recovery).
+
+Every violation becomes a one-command repro artifact
+(:mod:`repro.crash.artifact`; ``python -m repro.crash repro <file>``).
+"""
+from __future__ import annotations
+
+import itertools
+import time
+from dataclasses import dataclass, field
+from typing import Dict, Iterator, List, Optional, Tuple
+
+from repro.core import (DURABLE_QUEUES, CrashChoices, QueueHarness,
+                        check_durable_linearizability)
+from repro.core.nvram import LINE_WORDS
+
+from .capture import Boundary, Capture, capture_run
+
+#: the three sampled adversarial modes (the paper's failure model corners
+#: plus a seeded draw); `subset` is driven separately by its outcome space
+DEFAULT_MODES = ("min", "random", "max")
+
+
+def standard_plans(nthreads: int = 3, per_thread: int = 6,
+                   tag=None) -> List[list]:
+    """The standard crash workload (same shape as tests/test_crash_recovery):
+    each thread enqueues `per_thread` items, dequeuing after every odd one."""
+    plans = []
+    for t in range(nthreads):
+        p = []
+        for i in range(per_thread):
+            item = (t, i) if tag is None else (tag, t, i)
+            p.append(("enq", item))
+            if i % 2 == 1:
+                p.append(("deq", None))
+        plans.append(p)
+    return plans
+
+
+@dataclass
+class ChoiceSpace:
+    """The adversarial outcome space at one boundary (from its snapshot).
+
+    ``combos`` counts what the subset mode enumerates: every subset of the
+    pending flush entries x every per-(thread, line) NT-store prefix --
+    the *persist decisions*, where durability bugs hide -- crossed with
+    the two implicit-eviction corners (no unapplied store survives / every
+    line's full log survives).  The interior per-line eviction prefixes
+    form a product too large to enumerate and are sampled by the 'random'
+    mode instead.
+    """
+    flush_entries: List[Tuple[int, int]]          # (tid, pending index)
+    nt_groups: Dict[Tuple[int, int], int]         # (tid, line) -> #NT stores
+    log_lines: Dict[int, int]                     # line -> #unapplied stores
+    combos: int = 1
+
+    def __post_init__(self):
+        n = 2 ** len(self.flush_entries)
+        for c in self.nt_groups.values():
+            n *= c + 1
+        if self.log_lines:
+            n *= 2
+        self.combos = n
+
+
+def choice_space(boundary: Boundary) -> ChoiceSpace:
+    """Enumerate the crash-outcome axes recorded in a boundary snapshot."""
+    snap = boundary.snap
+    flush_entries: List[Tuple[int, int]] = []
+    nt_groups: Dict[Tuple[int, int], int] = {}
+    for t, plist in sorted(snap.pending.items()):
+        for i, ent in enumerate(plist):
+            if ent[0] == "flush":
+                flush_entries.append((t, i))
+            else:
+                key = (t, ent[1] // LINE_WORDS)
+                nt_groups[key] = nt_groups.get(key, 0) + 1
+    log_lines = {line: len(log) for line, log in snap.log.items() if log}
+    return ChoiceSpace(flush_entries, nt_groups, log_lines)
+
+
+def enumerate_choices(space: ChoiceSpace) -> Iterator[CrashChoices]:
+    """All crash outcomes of `space` (see :class:`ChoiceSpace` for what
+    'all' means), as CrashChoices for mode='subset'."""
+    nt_keys = sorted(space.nt_groups)
+    log_corners = [()]
+    if space.log_lines:
+        log_corners.append(tuple(sorted(space.log_lines.items())))
+    for bits in itertools.product((False, True),
+                                  repeat=len(space.flush_entries)):
+        survivors = frozenset(e for e, keep in zip(space.flush_entries, bits)
+                              if keep)
+        for nt_ks in itertools.product(
+                *[range(space.nt_groups[k] + 1) for k in nt_keys]):
+            for log_prefix in log_corners:
+                yield CrashChoices(
+                    flush_survivors=survivors,
+                    nt_prefix=tuple(zip(nt_keys, nt_ks)),
+                    log_prefix=log_prefix)
+
+
+@dataclass
+class SweepResult:
+    queue: str
+    seed: int
+    nthreads: int
+    per_thread: int
+    model: str
+    total_steps: int
+    rows: List[dict] = field(default_factory=list)
+    failures: List[dict] = field(default_factory=list)   # repro artifacts
+    wall_s: float = 0.0
+
+    def coverage(self) -> dict:
+        """Coverage summary: which boundaries were exercised and how."""
+        steps = {r["crash_step"] for r in self.rows}
+        persist = {r["crash_step"] for r in self.rows
+                   if r["boundary"] == "persist-adjacent"}
+        subset_rows = [r for r in self.rows if r["mode"] == "subset"]
+        checks = sum((r["subset_combos"] if r["mode"] == "subset" else 1)
+                     for r in self.rows)
+        rec_us = sum(r["recovery_us"] for r in self.rows)
+        return {
+            "boundaries": len(steps),
+            "persist_adjacent": len(persist),
+            "interior": len(steps) - len(persist),
+            "subset_enumerated": sum(1 for r in subset_rows
+                                     if r["subset_combos"]),
+            "subset_skipped": sum(1 for r in subset_rows
+                                  if not r["subset_combos"]),
+            "crashes_checked": checks,
+            "recovery_us_total": rec_us,
+            "failures": len(self.failures),
+        }
+
+
+def _check_point(harness: QueueHarness, capture: Capture, step: int,
+                 mode: str, crash_seed: int,
+                 choices: Optional[CrashChoices] = None):
+    """Restore boundary `step`, crash with `mode`, recover, drain, check.
+    Returns (ok, why, recovered, preads, pwrites, wall_us)."""
+    b = capture.boundaries[step]
+    nv = harness.nvram
+    nv.restore(b.snap)
+    # the checker reads the Capture's frozen history, not the live lists;
+    # truncate them so ~thousands of recoveries don't accumulate dead
+    # crash-marker/drain events (the queue's on_event stays bound to the
+    # same list object, so clearing in place is safe)
+    del harness.events[:]
+    del harness.ops[:]
+    p0, w0 = nv.pread_count, nv.pwrite_count
+    t0 = time.perf_counter()
+    harness.crash_and_recover(mode=mode, seed=crash_seed, choices=choices)
+    recovered = harness.queue.drain(0)
+    wall_us = (time.perf_counter() - t0) * 1e6
+    ok, why = check_durable_linearizability(
+        capture.pre_crash_ops(step), capture.pre_crash_events(step),
+        recovered)
+    return (ok, why, recovered,
+            nv.pread_count - p0, nv.pwrite_count - w0, wall_us)
+
+
+def sweep_queue(name: str, nthreads: int = 3, per_thread: int = 6,
+                seed: int = 3, policy: str = "random",
+                model: str = "optane-clwb", area_nodes: int = 64,
+                modes: Tuple[str, ...] = DEFAULT_MODES, subset: bool = True,
+                subset_cap: int = 64, steps: Optional[range] = None,
+                log=None) -> SweepResult:
+    """Sweep every crash point of the standard workload for one queue.
+
+    ``subset_cap`` bounds the per-boundary exhaustive enumeration: when a
+    boundary's outcome space is larger (e.g. mid allocator-area zeroing,
+    with hundreds of pending flushes) the subset row records
+    ``subset_combos=0`` and the boundary is still covered by the three
+    sampled modes.  ``steps`` restricts the crash points (default: all of
+    ``1..total_steps``).
+    """
+    if name not in DURABLE_QUEUES:
+        raise ValueError(f"unknown durable queue {name!r} "
+                         f"(have {sorted(DURABLE_QUEUES)})")
+    t_start = time.perf_counter()
+    harness = QueueHarness(DURABLE_QUEUES[name], nthreads=nthreads,
+                           area_nodes=area_nodes, model=model)
+    plans = standard_plans(nthreads, per_thread)
+    capture = capture_run(harness, plans, seed=seed, policy=policy)
+    result = SweepResult(queue=name, seed=seed, nthreads=nthreads,
+                         per_thread=per_thread, model=model,
+                         total_steps=capture.total_steps)
+    sweep_steps = steps if steps is not None \
+        else range(1, capture.total_steps + 1)
+
+    def base_row(step: int, space: ChoiceSpace) -> dict:
+        return {
+            "queue": name, "seed": seed, "nthreads": nthreads,
+            "per_thread": per_thread, "model": model, "crash_step": step,
+            "boundary": capture.boundary_class(step),
+            "prim_before": capture.kinds[step - 1] if step >= 1 else "",
+            "prim_after": (capture.kinds[step]
+                           if step < capture.total_steps else ""),
+            "pending_flush": len(space.flush_entries),
+            "pending_nt": sum(space.nt_groups.values()),
+            "log_words": sum(space.log_lines.values()),
+        }
+
+    def record_failure(row: dict, why: str, recovered: list,
+                       choices: Optional[CrashChoices]) -> None:
+        from .artifact import failure_artifact
+        result.failures.append(failure_artifact(
+            capture=capture, crash_step=row["crash_step"], mode=row["mode"],
+            crash_seed=seed, choices=choices, why=why, recovered=recovered))
+        if log:
+            log(f"FAIL {name} step={row['crash_step']} mode={row['mode']}: "
+                f"{why}")
+
+    for step in sweep_steps:
+        b = capture.boundaries[step]
+        space = choice_space(b)
+        for mode in modes:
+            row = base_row(step, space)
+            ok, why, recovered, pr, pw, us = _check_point(
+                harness, capture, step, mode, crash_seed=seed)
+            row.update(mode=mode, subset_combos=None, ok=ok,
+                       recovered_len=len(recovered), recovery_preads=pr,
+                       recovery_pwrites=pw, recovery_us=us)
+            result.rows.append(row)
+            if not ok:
+                record_failure(row, why, recovered, None)
+        if subset:
+            row = base_row(step, space)
+            row.update(mode="subset", subset_combos=0, ok=True,
+                       recovered_len=0, recovery_preads=0,
+                       recovery_pwrites=0, recovery_us=0.0)
+            if space.combos <= subset_cap:
+                for choices in enumerate_choices(space):
+                    ok, why, recovered, pr, pw, us = _check_point(
+                        harness, capture, step, "subset", crash_seed=seed,
+                        choices=choices)
+                    row["subset_combos"] += 1
+                    row["recovered_len"] = max(row["recovered_len"],
+                                               len(recovered))
+                    row["recovery_preads"] += pr
+                    row["recovery_pwrites"] += pw
+                    row["recovery_us"] += us
+                    if not ok:
+                        row["ok"] = False
+                        record_failure(row, why, recovered, choices)
+            result.rows.append(row)
+    result.wall_s = time.perf_counter() - t_start
+    return result
+
+
+def sweep_queues(names: List[str], log=None, **kwargs) -> List[SweepResult]:
+    """Sweep several queues; kwargs are forwarded to :func:`sweep_queue`."""
+    out = []
+    for name in names:
+        r = sweep_queue(name, log=log, **kwargs)
+        if log:
+            cov = r.coverage()
+            log(f"{name}: {cov['boundaries']} boundaries "
+                f"({cov['persist_adjacent']} persist-adjacent), "
+                f"{cov['crashes_checked']} crashes checked, "
+                f"{cov['failures']} failures, {r.wall_s:.1f}s")
+        out.append(r)
+    return out

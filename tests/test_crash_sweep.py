@@ -1,0 +1,286 @@
+"""The crash-sweep subsystem (repro.crash): snapshot/restore crash engine,
+exhaustive durable-linearizability sweeps, repro artifacts.
+
+Four guarantees are pinned here:
+
+* **snapshot == rerun**: restoring a per-step engine snapshot and crashing
+  produces *exactly* the state a rerun-from-scratch ``crash_at=step`` run
+  would crash into -- the whole sweep stands on this equivalence;
+* **observation-only seam**: a snapshot/restore round-trip at every
+  scheduler boundary leaves engine Stats bit-identical to an untouched run
+  (mirroring the trace-tap guarantee);
+* **exhaustive sweep passes**: every crash step x {min, random, max} plus
+  the enumerated flush-subset outcomes is durably linearizable for all 7
+  durable queues (reduced size in tier-1; the full standard workload in
+  the slow suite and, sharded and blocking, in CI);
+* **recovery idempotence**: recovering twice from the same crash image
+  drains the same queue as recovering once.
+"""
+import pytest
+
+from repro.core import (DURABLE_QUEUES, NVRAM, QueueHarness,
+                        check_durable_linearizability, split_at_crash)
+from repro.crash import (capture_run, choice_space, enumerate_choices,
+                         failure_artifact, load_artifact, reproduce,
+                         save_artifact, standard_plans, sweep_queue)
+from repro.crash.capture import PERSIST_KINDS
+
+STAT_FIELDS = ["reads", "writes", "cas", "flushes", "fences", "movntis",
+               "post_flush_accesses", "cold_misses", "time_ns"]
+
+
+def _harness(name, nthreads=3, area_nodes=64):
+    return QueueHarness(DURABLE_QUEUES[name], nthreads=nthreads,
+                        area_nodes=area_nodes)
+
+
+# ---------------------------------------------------------------------------
+# the load-bearing equivalence: snapshot path == rerun-from-scratch
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["DurableMSQ", "OptUnlinkedQ", "LinkedQ"])
+def test_snapshot_crash_equals_rerun_from_scratch(name):
+    """Restoring boundary s and crashing == rerunning with crash_at=s:
+    same pre-crash history metadata, same recovered queue."""
+    h = _harness(name)
+    plans = standard_plans(3, 6)
+    cap = capture_run(h, plans, seed=3)
+    total = cap.total_steps
+    for crash_at in [2, 7, total // 4, total // 2, 2 * total // 3, total - 1]:
+        b = cap.boundaries[crash_at]
+        h.nvram.restore(b.snap)
+        h.crash_and_recover(mode="random", seed=11)
+        rec_snap = h.queue.drain(0)
+        # independent classic path
+        h2 = _harness(name)
+        r2 = h2.run_scheduled(standard_plans(3, 6), seed=3,
+                              crash_at=crash_at)
+        pre_events, _ = split_at_crash(h2.events)
+        h2.crash_and_recover(mode="random", seed=11)
+        rec_rerun = h2.queue.drain(0)
+        assert rec_snap == rec_rerun, f"step {crash_at}"
+        assert b.ops_len == len(r2.ops)
+        assert b.completed == tuple(r.completed for r in r2.ops)
+        assert b.items == tuple(r.item for r in r2.ops)
+        assert cap.pre_crash_events(crash_at) == pre_events
+        ok, why = check_durable_linearizability(
+            cap.pre_crash_ops(crash_at), cap.pre_crash_events(crash_at),
+            rec_snap)
+        assert ok, f"step {crash_at}: {why}"
+
+
+def test_capture_boundaries_and_kinds():
+    h = _harness("DurableMSQ")
+    cap = capture_run(h, standard_plans(2, 4), seed=1)
+    assert len(cap.boundaries) == cap.total_steps + 1
+    assert [b.step for b in cap.boundaries] == list(range(cap.total_steps + 1))
+    assert len(cap.kinds) == cap.total_steps
+    assert set(cap.kinds) <= {"read", "write", "cas", "flush", "fence",
+                              "movnti"}
+    # classification: a boundary adjacent to persist work is persist-adjacent
+    for s in range(1, cap.total_steps + 1):
+        cls = cap.boundary_class(s)
+        adjacent = (cap.kinds[s - 1] in PERSIST_KINDS
+                    or (s < cap.total_steps and cap.kinds[s] in PERSIST_KINDS))
+        assert cls == ("persist-adjacent" if adjacent else "interior")
+    # both classes occur on a real schedule
+    classes = {cap.boundary_class(s) for s in range(1, cap.total_steps + 1)}
+    assert classes == {"persist-adjacent", "interior"}
+
+
+# ---------------------------------------------------------------------------
+# observation-only: snapshot/restore round-trip cannot perturb Stats
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", ["DurableMSQ", "OptUnlinkedQ"])
+def test_snapshot_roundtrip_stats_bit_identical(name):
+    """A full snapshot + in-place restore at EVERY scheduler boundary must
+    leave per-thread Stats (including time_ns) bit-identical to an
+    untouched run, and not change the execution's outcome."""
+    plans = standard_plans(3, 5)
+    h_plain = _harness(name)
+    h_plain.run_scheduled(standard_plans(3, 5), seed=2)
+
+    h_rt = _harness(name)
+
+    def roundtrip(step):
+        h_rt.nvram.restore(h_rt.nvram.snapshot(volatile=True))
+
+    h_rt.run_scheduled(plans, seed=2, snapshot_hook=roundtrip)
+
+    sp, sr = h_plain.nvram.stats, h_rt.nvram.stats
+    for t in range(3):
+        for f in STAT_FIELDS:
+            assert getattr(sp[t], f) == getattr(sr[t], f), \
+                f"thread {t}: {f} perturbed by snapshot/restore round-trip"
+    assert [r.item for r in h_plain.ops] == [r.item for r in h_rt.ops]
+    assert h_plain.events == h_rt.events
+    assert h_plain.queue.drain(0) == h_rt.queue.drain(0)
+
+
+# ---------------------------------------------------------------------------
+# the sweep itself
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(DURABLE_QUEUES))
+def test_sweep_every_boundary_reduced(name):
+    """Tier-1: every crash step x {min,random,max} + enumerated subsets on
+    a reduced workload (2 threads) is durably linearizable."""
+    r = sweep_queue(name, nthreads=2, per_thread=4, seed=1, area_nodes=32,
+                    subset_cap=32)
+    assert not r.failures, r.failures[0]
+    cov = r.coverage()
+    assert cov["boundaries"] == r.total_steps, \
+        "sweep must visit every crash step"
+    assert cov["persist_adjacent"] + cov["interior"] == cov["boundaries"]
+    assert cov["persist_adjacent"] > 0 and cov["interior"] > 0
+    assert cov["subset_enumerated"] > 0, \
+        "no boundary had a small enough outcome space to enumerate?"
+    assert cov["crashes_checked"] >= 3 * r.total_steps
+    # recovery-work axis is populated
+    assert all(row["recovery_preads"] >= 0 for row in r.rows)
+    assert any(row["recovery_preads"] > 0 for row in r.rows)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("name", sorted(DURABLE_QUEUES))
+def test_sweep_full_standard_workload(name):
+    """Acceptance: the full sweep (standard 3-thread workload, every step,
+    all modes + subsets) passes and stays well inside the 90s budget.
+    CI also runs this sharded and blocking via `run.py crash-sweep`."""
+    r = sweep_queue(name)
+    assert not r.failures, r.failures[0]
+    assert r.coverage()["boundaries"] == r.total_steps
+    assert r.wall_s < 90, f"sweep took {r.wall_s:.1f}s"
+
+
+# ---------------------------------------------------------------------------
+# recovery idempotence
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(DURABLE_QUEUES))
+def test_recovery_idempotence(name):
+    """Recovering twice from the same crash image == recovering once; and
+    the snapshot path is deterministic (same snapshot + seed -> same
+    drain)."""
+    h = _harness(name)
+    cap = capture_run(h, standard_plans(3, 6), seed=3)
+    for step in (cap.total_steps // 3, cap.total_steps // 2,
+                 cap.total_steps - 1):
+        b = cap.boundaries[step]
+        h.nvram.restore(b.snap)
+        h.crash_and_recover(mode="random", seed=5)
+        once = h.queue.drain(0)
+        # same crash image, recover, then crash AGAIN (harshest mode: only
+        # what recovery persisted survives) and recover a second time
+        h.nvram.restore(b.snap)
+        h.crash_and_recover(mode="random", seed=5)
+        h.crash_and_recover(mode="min")
+        twice = h.queue.drain(0)
+        assert once == twice, \
+            f"{name} step {step}: double recovery diverged"
+        # determinism of the sweep's replay
+        h.nvram.restore(b.snap)
+        h.crash_and_recover(mode="random", seed=5)
+        again = h.queue.drain(0)
+        assert once == again
+
+
+# ---------------------------------------------------------------------------
+# the subset mode at engine level
+# ---------------------------------------------------------------------------
+def test_subset_mode_enumerates_pending_outcomes():
+    """With one pending flush and unapplied stores, the enumerated subset
+    outcomes must include both the 'nothing survived' and 'everything
+    survived' corners, each matching the corresponding sampled mode."""
+    def scenario():
+        nv = NVRAM(1)
+        a = nv.alloc_region(16, "r")
+        nv.write(a, "x1")
+        nv.flush(a)             # pending flush covering the first store
+        nv.write(a + 1, "x2")   # unapplied store behind the flush point
+        nv.write(a + 8, "y1")   # second line, never flushed
+        return nv, a
+
+    nv, a = scenario()
+    snap = nv.snapshot(volatile=False)
+
+    class FakeBoundary:
+        pass
+
+    fb = FakeBoundary()
+    fb.snap = snap
+    space = choice_space(fb)
+    assert len(space.flush_entries) == 1
+    # all three stores are still unapplied (a flush only *schedules* the
+    # write-back; nothing leaves the log until a fence or crash applies it)
+    assert sum(space.log_lines.values()) == 3
+    choices = list(enumerate_choices(space))
+    assert len(choices) == space.combos == 4    # 2 flush-subsets x 2 corners
+
+    outcomes = set()
+    for ch in choices:
+        nv.restore(snap)
+        nv.crash(mode="subset", choices=ch)
+        outcomes.add((nv.pread(a), nv.pread(a + 1), nv.pread(a + 8)))
+    # min corner: nothing persisted; max corner: everything did
+    nv.restore(snap)
+    nv.crash(mode="min")
+    assert (nv.pread(a), nv.pread(a + 1), nv.pread(a + 8)) in outcomes
+    nv.restore(snap)
+    nv.crash(mode="max")
+    assert (nv.pread(a), nv.pread(a + 1), nv.pread(a + 8)) in outcomes
+    assert ("x1", None, None) in outcomes       # flush survived alone
+    assert len(outcomes) >= 3
+
+
+def test_restore_rewinds_address_space():
+    """Regions allocated after a snapshot are forgotten by restore, so
+    repeated recoveries cannot leak address space across crash points."""
+    nv = NVRAM(1)
+    nv.alloc_region(16, "base")
+    snap = nv.snapshot()
+    brk, nregions = nv._brk, len(nv.regions)
+    nv.alloc_region(4096, "post-snapshot")
+    nv.restore(snap)
+    assert nv._brk == brk and len(nv.regions) == nregions
+
+
+# ---------------------------------------------------------------------------
+# failure-repro artifacts
+# ---------------------------------------------------------------------------
+def test_artifact_roundtrip_and_repro_both_methods(tmp_path):
+    """An artifact round-trips through JSON and replays through both the
+    snapshot path and the independent rerun path, agreeing on the
+    recovered queue."""
+    h = _harness("DurableMSQ")
+    cap = capture_run(h, standard_plans(3, 6), seed=3)
+    step = cap.total_steps // 2
+    art = failure_artifact(cap, crash_step=step, mode="random", crash_seed=3,
+                           choices=None, why="synthetic (healthy point)",
+                           recovered=[("t", 0)])
+    path = tmp_path / "repro.json"
+    save_artifact(str(path), art)
+    loaded = load_artifact(str(path))
+    assert loaded == art
+
+    ok_s, _, rec_s = reproduce(loaded, method="snapshot")
+    ok_r, _, rec_r = reproduce(loaded, method="rerun")
+    assert ok_s and ok_r, "healthy crash point must not report a violation"
+    assert rec_s == rec_r, "snapshot and rerun repro paths diverged"
+
+
+def test_artifact_subset_choices_roundtrip(tmp_path):
+    """Subset-mode artifacts carry their CrashChoices through JSON."""
+    from repro.crash.artifact import _choices_from_json, _choices_to_json
+    from repro.core import CrashChoices
+    ch = CrashChoices(flush_survivors=frozenset({(0, 1), (2, 0)}),
+                      nt_prefix=(((1, 5), 2),),
+                      log_prefix=((7, 3), (9, 1)))
+    assert _choices_from_json(_choices_to_json(ch)) == ch
+    assert _choices_to_json(None) is None
+    assert _choices_from_json(None) is None
+
+
+def test_cli_shard_partitions_queues():
+    from repro.crash.__main__ import _shard
+    names = sorted(DURABLE_QUEUES)
+    shards = [_shard(names, f"{k}/4") for k in range(4)]
+    assert sorted(q for s in shards for q in s) == names
+    assert all(s for s in shards), "4-way sharding must keep shards busy"
