@@ -17,14 +17,18 @@ Prints ``name,us_per_call,derived`` CSV lines per the harness contract, and
 
 Examples::
 
-  python benchmarks/run.py --smoke                    # CI smoke run
-  python benchmarks/run.py --ops 1000 --threads 1,2,4,8,16,32,64
-  python benchmarks/run.py --models eadr --workloads mixed5050
-  python benchmarks/run.py --contention on --threads 8,16   # contended only
-  python benchmarks/run.py --contention learned --threads 8,16  # trace-fitted
-  python benchmarks/run.py --engine exact --trace-out traces/   # save traces
-  python benchmarks/run.py fit-profiles               # refit learned.json
-  python benchmarks/run.py crash-sweep --out crash.csv   # every crash point
+  PYTHONPATH=src python benchmarks/run.py --smoke     # CI smoke run
+  PYTHONPATH=src python benchmarks/run.py --ops 1000 --threads 1,2,4,8,16,32,64
+  PYTHONPATH=src python benchmarks/run.py --models eadr --workloads mixed5050
+  PYTHONPATH=src python benchmarks/run.py --contention learned --threads 8,16
+  PYTHONPATH=src python benchmarks/run.py --engine exact --trace-out traces/
+  PYTHONPATH=src python benchmarks/run.py fit-profiles   # refit learned.json
+  PYTHONPATH=src python benchmarks/run.py crash-sweep --out crash.csv
+  PYTHONPATH=src python benchmarks/run.py fastpath-smoke --out fp.csv
+
+``repro`` comes from the pyproject / ``PYTHONPATH=src`` convention (under
+pytest the pythonpath is configured for you); there is no ``sys.path``
+mutation here.
 """
 from __future__ import annotations
 
@@ -32,15 +36,20 @@ import argparse
 import csv
 import os
 import sys
+import time
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.core import ALL_QUEUES, DURABLE_QUEUES, NVRAM, ONLL, QueueHarness
 
-from repro.core import NVRAM, ONLL  # noqa: E402
-from benchmarks.workloads import contention_label, run_workload  # noqa: E402
+try:        # package import (pytest / `python -m benchmarks.run`)
+    from benchmarks.workloads import (contention_label, make_plans,
+                                      run_workload)
+except ModuleNotFoundError:   # script mode: sibling module on sys.path[0]
+    from workloads import contention_label, make_plans, run_workload
 
-DURABLE = ["DurableMSQ", "IzraelevitzQ", "NVTraverseQ", "UnlinkedQ",
-           "LinkedQ", "OptUnlinkedQ", "OptLinkedQ"]
+# The queue axis is owned by repro.core.DURABLE_QUEUES (the crash sweep
+# shards over the same registry); tests/test_benchmark_queues.py asserts
+# this stays true so new queues cannot silently drop out of benchmarks.
+DURABLE = list(DURABLE_QUEUES)
 WORKLOADS = ["mixed5050", "pairs", "producers", "consumers", "prodcons"]
 MODELS = ["optane-clwb", "eadr", "cxl"]
 
@@ -144,7 +153,10 @@ def bench_roofline(path: str = None) -> None:
               "`python -m repro.launch.dryrun` first)")
         return
     print("name,us_per_call,derived")
-    from benchmarks.roofline import load_cells, roofline_terms
+    try:
+        from benchmarks.roofline import load_cells, roofline_terms
+    except ModuleNotFoundError:
+        from roofline import load_cells, roofline_terms
     for cell in load_cells(path):
         t = roofline_terms(cell)
         if t is None:
@@ -206,6 +218,130 @@ def parse_args(argv=None) -> argparse.Namespace:
     return args
 
 
+def fastpath_smoke_main(argv) -> None:
+    """`run.py fastpath-smoke`: the schedule-compiler acceptance smoke.
+
+    Four runs of the same workload per queue:
+
+    * ``per-op@cap``   -- the pre-compiler stack (per-primitive replay,
+      per-primitive allocator-area zeroing, collector running) at that
+      stack's practical scale cap (``--cap-ops``, default 6400 total ops
+      at 64 threads -- "a few thousand ops" per the pre-compiler docs);
+    * ``per-op``       -- the same stack pushed to the full ``--ops``
+      scale (areas amortize; the steady per-op cost);
+    * ``per-op+bulk-alloc`` -- per-op ops with this PR's vectorized
+      allocator seam + GC pause, isolating those two contributions;
+    * ``compiled``     -- the full fast path at full scale.
+
+    Two gates, both enforced: the compiled path must be ``--min-speedup``
+    (default 10x) cheaper per op than the per-op stack at its practical
+    cap, and ``--min-speedup-same-scale`` (default 3x) cheaper than the
+    per-op stack at the identical full scale, inside ``--budget-s`` wall
+    clock.  All four us/op figures are printed and written to the CSV, so
+    neither ratio hides the other.
+    """
+    ap = argparse.ArgumentParser(
+        prog="run.py fastpath-smoke",
+        description=fastpath_smoke_main.__doc__.splitlines()[0])
+    ap.add_argument("--threads", type=int, default=64)
+    ap.add_argument("--ops", type=int, default=100_000,
+                    help="total ops across all threads (default 100k)")
+    ap.add_argument("--cap-ops", type=int, default=6400,
+                    help="total ops for the per-op stack's practical-cap "
+                         "baseline (default 6400: the pre-compiler reach)")
+    ap.add_argument("--queues", default="DurableMSQ,OptUnlinkedQ")
+    ap.add_argument("--workload", default="mixed5050")
+    ap.add_argument("--model", default="optane-clwb")
+    ap.add_argument("--min-speedup", type=float, default=10.0,
+                    help="required compiled (at --ops) vs per-op (at "
+                         "--cap-ops) per-op speedup (default 10x)")
+    ap.add_argument("--min-speedup-same-scale", type=float, default=2.5,
+                    help="required compiled vs per-op speedup at the "
+                         "identical --ops scale (default 2.5x; measured "
+                         "~3-4x, the margin absorbs CI-runner noise)")
+    ap.add_argument("--budget-s", type=float, default=60.0,
+                    help="wall-clock budget per compiled run")
+    ap.add_argument("--out", default=None, help="CSV destination")
+    args = ap.parse_args(argv)
+    ops_per_thread = max(1, -(-args.ops // args.threads))
+    total = ops_per_thread * args.threads
+    cap_per_thread = max(1, -(-args.cap_ops // args.threads))
+    cap_total = cap_per_thread * args.threads
+    modes = [
+        # (label, ops/thread, compiled?, vectorized allocator seam?,
+        #  pause GC?) -- the first two reproduce the stack as it stood
+        # before the schedule compiler: every primitive and every
+        # allocator-area zeroing replayed one Python call at a time, with
+        # the collector running.
+        ("per-op@cap", cap_per_thread, False, False, False),
+        ("per-op", ops_per_thread, False, False, False),
+        ("per-op+bulk-alloc", ops_per_thread, False, True, True),
+        ("compiled", ops_per_thread, True, True, True),
+    ]
+    rows, failures = [], []
+    print(f"# fastpath-smoke: {args.workload} x {args.threads} threads x "
+          f"{total} ops ({args.model}; per-op cap baseline {cap_total} ops)")
+    print("name,us_per_call,derived")
+    for qname in args.queues.split(","):
+        cell = {}
+        for label, opt, compiled, bulk, pause_gc in modes:
+            h = QueueHarness(ALL_QUEUES[qname], nthreads=args.threads,
+                             model=args.model)
+            h.nvram.enable_bulk_init = bulk
+            plans, prefill = make_plans(args.workload, args.threads,
+                                        opt, seed=0)
+            for i in range(prefill):
+                h.queue.enqueue(0, ("pre", i))
+            t0 = time.perf_counter()
+            res = h.run_batched(plans, compiled=compiled, pause_gc=pause_gc)
+            wall = time.perf_counter() - t0
+            n = opt * args.threads
+            assert res.ops_completed == n
+            us = wall * 1e6 / n
+            cell[label] = us
+            rows.append({
+                "queue": qname, "workload": args.workload,
+                "model": args.model, "threads": args.threads, "mode": label,
+                "ops": n, "wall_s": round(wall, 3),
+                "us_per_op": round(us, 3),
+                "fast_ops": h.fast.fast_ops if h.fast else 0,
+                "bailed_ops": h.fast.bailed_ops if h.fast else 0,
+                "speedup_vs_cap": "", "speedup_same_scale": "",
+            })
+        speedup_cap = cell["per-op@cap"] / cell["compiled"]
+        speedup_same = cell["per-op"] / cell["compiled"]
+        rows[-1]["speedup_vs_cap"] = round(speedup_cap, 2)
+        rows[-1]["speedup_same_scale"] = round(speedup_same, 2)
+        print(f"fastpath/{qname}/compiled,{cell['compiled']:.3f},"
+              f"perop_cap_us={cell['per-op@cap']:.1f};"
+              f"perop_us={cell['per-op']:.1f};"
+              f"perop_bulk_us={cell['per-op+bulk-alloc']:.1f};"
+              f"speedup_vs_cap={speedup_cap:.1f}x;"
+              f"speedup_same_scale={speedup_same:.1f}x")
+        wall_compiled = rows[-1]["wall_s"]
+        if speedup_cap < args.min_speedup:
+            failures.append(
+                f"{qname}: {speedup_cap:.1f}x vs per-op@cap < "
+                f"{args.min_speedup:.0f}x required")
+        if speedup_same < args.min_speedup_same_scale:
+            failures.append(
+                f"{qname}: {speedup_same:.1f}x at same scale < "
+                f"{args.min_speedup_same_scale:.0f}x required")
+        if wall_compiled > args.budget_s:
+            failures.append(f"{qname}: compiled run took {wall_compiled}s "
+                            f"(> {args.budget_s}s budget)")
+    if args.out:
+        with open(args.out, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+            w.writeheader()
+            w.writerows(rows)
+        print(f"# wrote {len(rows)} rows to {args.out}")
+    if failures:
+        for msg in failures:
+            print(f"# FASTPATH SMOKE FAILURE: {msg}", file=sys.stderr)
+        sys.exit(1)
+
+
 def fit_profiles_main(argv) -> None:
     """`run.py fit-profiles`: capture exact-scheduler traces and refit the
     learned contention profiles (benchmarks/profiles/learned.json)."""
@@ -214,7 +350,9 @@ def fit_profiles_main(argv) -> None:
         description="Trace the exact scheduler and fit per-queue contention "
                     "profiles (repro.trace.fit); writes the JSON the "
                     "--contention learned axis reads.")
-    ap.add_argument("--queues", default=",".join(DURABLE))
+    # all 8 queues, MSQ included: the volatile baseline gets a learned
+    # profile too so every contention axis value covers every queue
+    ap.add_argument("--queues", default=",".join(ALL_QUEUES))
     ap.add_argument("--threads", default="2,4,8,12",
                     help="thread counts to trace (default 2,4,8,12: the "
                          "12-thread sample anchors the extrapolation "
@@ -260,6 +398,8 @@ def main(argv=None) -> None:
         return fit_profiles_main(argv[1:])
     if argv and argv[0] == "crash-sweep":
         return crash_sweep_main(argv[1:])
+    if argv and argv[0] == "fastpath-smoke":
+        return fastpath_smoke_main(argv[1:])
     args = parse_args(argv)
     threads = sorted({int(t) for t in args.threads.split(",")})
     models = args.models.split(",")

@@ -23,6 +23,9 @@ from .contention import ContentionModel, LearnedRetryProfile, RetryProfile
 from .nvram import (NVRAM, LINE_WORDS, CrashChoices, EngineSnapshot, Stats,
                     ThreadCrashed)
 from .nvram_ref import ReferenceNVRAM
+from .opsched import (FastPathExecutor, OpSchedule, QueueSchedules,
+                      ScheduleError, compile_schedule, linearizing_root,
+                      retry_touches_persistent)
 from .scheduler import ClockScheduler, Scheduler
 from .ssmem import SSMem, VolatileAlloc
 from .queue_base import NULL, QueueAlgorithm
@@ -47,4 +50,6 @@ __all__ = [
     "OptLinkedQueue", "ONLL", "ALL_QUEUES", "DURABLE_QUEUES", "QueueHarness",
     "check_durable_linearizability", "split_at_crash", "MemoryModel",
     "MEMORY_MODELS", "OPTANE_CLWB", "EADR", "CXL_MEM", "get_memory_model",
+    "FastPathExecutor", "OpSchedule", "QueueSchedules", "ScheduleError",
+    "compile_schedule", "linearizing_root", "retry_touches_persistent",
 ]

@@ -64,8 +64,8 @@ counts exactly -- the property suite asserts bit-equality.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Mapping, Optional, Tuple
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, List, Mapping, Optional, Tuple, Union
 
 from .memmodel import MemoryModel
 from .nvram import (EV_CAS, EV_FENCE, EV_FENCE_LINE, EV_FLUSH, EV_HIT,
@@ -104,16 +104,34 @@ class RetryProfile:
     # Contention decay of the post-flush fraction: a retry's re-read pays
     # the post-flush fetch only if no co-scheduled op re-fetched the
     # invalidated line first, so the effective per-round count shrinks as
-    # the window widens: flushed_reads / (1 + flushed_decay * k).  0 (the
-    # hand-profile default) keeps the count contention-constant; the
-    # trace fit (repro.trace.fit) learns it from 2..12-thread traces.
-    flushed_decay: float = 0.0
+    # the window widens.  Two forms:
+    #   * a scalar d (the inert hand-profile default 0.0): the parametric
+    #     shape flushed_reads / (1 + d * k);
+    #   * a tuple shape s: a per-window-size table -- the round's count is
+    #     flushed_reads * s[min(k, len(s)) - 1] for window size k >= 1 --
+    #     measured directly per traced thread count by the trace fit
+    #     (repro.trace.fit), which captures the faster-than-1/(1+dk)
+    #     decay the exact scheduler shows at 12-16 threads.
+    flushed_decay: Union[float, Tuple[float, ...]] = 0.0
     # Saturation of the expected failed rounds per op.  The geometric
     # E = p/(1-p) caps at P_CAP/(1-P_CAP) (~5.7) once many threads hammer
     # one root, but the exact scheduler saturates lower and per-queue
     # (helping drains the obstruction; the root CAS serializes).  The
     # default keeps the hand-profile behavior; the trace fit measures it.
     max_rounds: float = P_CAP / (1.0 - P_CAP)
+
+    def flushed_scale(self, k: int) -> float:
+        """Multiplier on the per-round flushed-read count at window size
+        ``k`` (>= 1): the parametric 1/(1+d*k) for a scalar decay, the
+        measured per-k table entry for a tuple shape."""
+        d = self.flushed_decay
+        if isinstance(d, tuple):
+            if not d:
+                return 1.0
+            return d[min(k, len(d)) - 1]
+        if d > 0:
+            return 1.0 / (1.0 + d * k)
+        return 1.0
 
     def event_units(self, model: MemoryModel
                     ) -> List[Tuple[Tuple[int, ...], float, bool]]:
@@ -177,6 +195,13 @@ class LearnedRetryProfile:
     def bind(self, declared: Dict[str, RetryProfile]
              ) -> Dict[str, RetryProfile]:
         """Graft learned numbers onto the queue's declared roots."""
+        def _coerce(f, v):
+            # flushed_decay may be a measured per-window-size shape
+            # (serialized as a list); everything else is scalar
+            if f == "flushed_decay" and isinstance(v, (list, tuple)):
+                return tuple(float(x) for x in v)
+            return float(v)
+
         out: Dict[str, RetryProfile] = {}
         for kind, prof in declared.items():
             p = self.params.get(kind)
@@ -185,7 +210,7 @@ class LearnedRetryProfile:
                 continue
             out[kind] = RetryProfile(
                 root=prof.root,
-                **{f: float(p.get(f, getattr(prof, f)))
+                **{f: _coerce(f, p.get(f, getattr(prof, f)))
                    for f in _LEARNED_FIELDS})
         return out
 
@@ -236,8 +261,19 @@ class ContentionModel:
         self._frac: Dict[Tuple[int, str, int], float] = {}
 
     # ------------------------------------------------------------ lifecycle
-    def begin_run(self, nvram, profiles: Dict[str, RetryProfile]) -> None:
-        """Bind to an engine + the queue's retry profiles for one run."""
+    def begin_run(self, nvram, profiles: Dict[str, RetryProfile],
+                  schedules=None) -> None:
+        """Bind to an engine + the queue's retry profiles for one run.
+
+        ``schedules`` (the queue's :meth:`repro.core.queue_base.
+        QueueAlgorithm.schedule_facts`) grounds the profiles in the
+        queue's declared op schedule instead of hand-maintained tables:
+        each kind's tracked root address comes from the schedule's root
+        CAS, and a kind whose retry loop provably touches no persistent
+        line gets its ``flushed_reads`` zeroed -- a volatile-only retry
+        cannot re-incur the post-flush penalty, whatever a (learned or
+        hand-fit) profile claims.
+        """
         if not hasattr(nvram, "charge_events"):
             raise TypeError(
                 "contention modeling needs the batched engine "
@@ -248,6 +284,18 @@ class ContentionModel:
         self._profiles = dict(profiles or {})
         if self.learned is not None:
             self._profiles = self.learned.bind(self._profiles)
+        if schedules:
+            for kind, prof in list(self._profiles.items()):
+                facts = schedules.get(kind)
+                if facts is None:
+                    continue
+                changes = {}
+                if prof.root != facts["root"]:
+                    changes["root"] = facts["root"]
+                if not facts["flushable_retry"] and prof.flushed_reads:
+                    changes["flushed_reads"] = 0.0
+                if changes:
+                    self._profiles[kind] = replace(prof, **changes)
         self._units = {k: p.event_units(nvram.model)
                        for k, p in self._profiles.items()}
         self._roots = sorted({p.root for p in self._profiles.values()})
@@ -299,11 +347,10 @@ class ContentionModel:
                     self.retries_by_root.get(w, 0.0) + expected
                 for u, (codes, per_round, decays) in \
                         enumerate(self._units[kind]):
-                    if decays and prof.flushed_decay > 0:
+                    if decays:
                         # wider window => some other op likely re-fetched
                         # the invalidated line first; this round hits it
-                        per_round = per_round / \
-                            (1.0 + prof.flushed_decay * k)
+                        per_round = per_round * prof.flushed_scale(k)
                     key = (tid, kind, u)
                     acc = self._frac.get(key, 0.0) + expected * per_round
                     whole = int(acc)

@@ -20,8 +20,9 @@ from __future__ import annotations
 
 from typing import Any
 
-from .contention import RetryProfile
 from .nvram import LINE_WORDS, NVRAM
+from .opsched import (AllocP, Cas, Fence, FifoLayout, Flush, L, OpSchedule,
+                      QueueSchedules, Read, Retire, WriteLine)
 from .queue_base import NULL, QueueAlgorithm, alloc_root_lines
 from .ssmem import SSMem
 
@@ -49,20 +50,45 @@ class DurableMSQueue(QueueAlgorithm):
             self.pflush(self.HEAD)
             self.pfence()
 
-    # ---------------------------------------------------------- contention
-    def retry_profile(self):
-        # enq retry: re-read TAIL (hit) and the obstructing tail->next on a
-        # line the winner flushed (post-flush), then take the helping path --
-        # persist the obstruction (flush+fence) and CAS TAIL forward before
-        # re-attempting the link CAS.  deq retry: pure re-reads -- the HEAD
-        # and node lines were already re-fetched (and so re-cached) by
-        # whichever op touched them first after the invalidating flush, so a
-        # retry adds hits, not post-flush accesses.
-        return {
-            "enq": RetryProfile(root=self.TAIL, reads=1, flushed_reads=0.8,
-                                cas=2, flushes=1, fences=1, weight=0.6),
-            "deq": RetryProfile(root=self.HEAD, reads=4),
-        }
+    # ---------------------------------------- steady-state schedule facts
+    # enq retry: re-read TAIL (hit) and the obstructing tail->next on a
+    # line the winner flushed (post-flush), then take the helping path --
+    # persist the obstruction (flush+fence) and CAS TAIL forward before
+    # re-attempting the link CAS.  deq retry: pure re-reads -- the HEAD
+    # and node lines were already re-fetched (and so re-cached) by
+    # whichever op touched them first after the invalidating flush, so a
+    # retry adds hits, not post-flush accesses.  (Roots come from the
+    # op_schedule's root CAS; see queue_base.retry_profile.)
+    RETRY_SHAPES = {
+        "enq": dict(reads=1, flushed_reads=0.8, cas=2, flushes=1, fences=1,
+                    weight=0.6),
+        "deq": dict(reads=4),
+    }
+
+    def op_schedule(self):
+        """Steady state (paper §10 baseline): 2 fences/enq, 1 fence/deq,
+        post-flush re-reads of the tail link and head line."""
+        enq = OpSchedule("enq", steps=(
+            AllocP(),
+            WriteLine(L("new_p"), (None, NULL, 0, 0, 0, 0, 0, 0), item_at=0),
+            Flush(L("new_p")), Fence(),              # fence #1: node content
+            Read(L("TAIL")),
+            Read(L("tail_p", NEXT)),
+            Cas(L("tail_p", NEXT), ("sym", "new_p"), event="enq"),
+            Flush(L("tail_p", NEXT)), Fence(),       # fence #2: link durable
+            Cas(L("TAIL"), ("sym", "new_p"), root=True),
+        ), retry_from=4)
+        deq = OpSchedule("deq", steps=(
+            Read(L("HEAD")),
+            Read(L("head_p", NEXT)),
+            Read(L("TAIL")),                         # MSQ reclamation guard
+            Read(L("next_p", ITEM)),
+            Cas(L("HEAD"), ("sym", "next_p"), root=True, event="deq"),
+            Flush(L("HEAD")), Fence(),               # 1 fence per dequeue
+            Retire(("sym", "head_p")),
+        ))
+        return QueueSchedules(enq=enq, deq=deq, layout=FifoLayout(
+            head_root="HEAD", next_off=NEXT, item_off=ITEM))
 
     # ------------------------------------------------------------------ ops
     def enqueue(self, tid: int, item: Any) -> None:

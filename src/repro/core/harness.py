@@ -34,6 +34,7 @@ from typing import Any, Dict, List, Optional, Tuple, Type, Union
 from .contention import ContentionModel
 from .memmodel import MemoryModel
 from .nvram import NVRAM, Stats
+from .opsched import FastPathExecutor
 from .scheduler import ClockScheduler, Scheduler
 from .ssmem import SSMem
 from .queue_base import QueueAlgorithm
@@ -100,6 +101,7 @@ class QueueHarness:
                                on_event=self.events.append)
         self.ops: List[OpRecord] = []
         self.contention: Optional[ContentionModel] = None   # last run_batched
+        self.fast: Optional[FastPathExecutor] = None        # last run_batched
         self.last_scheduler: Optional[Scheduler] = None     # last run_scheduled
         self._trace = None            # active repro.trace recorder, if any
 
@@ -170,12 +172,23 @@ class QueueHarness:
 
     def run_batched(self, plans: List[List[Tuple[str, Any]]],
                     contention: Union[ContentionModel, bool, None] = None,
-                    trace=None) -> RunResult:
+                    trace=None, compiled: Optional[bool] = None,
+                    pause_gc: bool = True) -> RunResult:
         """Clock-driven op-granularity execution: no OS threads, no yield
-        points.  This is the throughput path -- thousands of ops per thread
-        across 1..64 threads are practical (the exact scheduler caps out
-        around 60 ops/thread).  The schedule is deterministic (see
+        points.  This is the throughput path -- hundreds of thousands of
+        ops across 1..64+ threads are practical (the exact scheduler caps
+        out around 60 ops/thread).  The schedule is deterministic (see
         ClockScheduler); interleavings vary only through the plans.
+
+        ``compiled`` controls the schedule-compiler fast path
+        (:mod:`repro.core.opsched`): by default steady-state ops replay
+        their compiled schedules (~10x+ faster per op) and everything else
+        bails to real per-primitive execution; Stats are bit-identical
+        either way (the fast-path equivalence suite is the gate).  Pass
+        ``compiled=False`` to force per-op execution -- the reference
+        behavior the equivalence tests compare against.  The fast path is
+        disabled automatically when a trace recorder is attached (traces
+        record real primitives) or on the reference engine.
 
         ``contention`` attaches a CAS-contention model to the clock windows:
         pass a configured :class:`repro.core.contention.ContentionModel`, or
@@ -190,20 +203,32 @@ class QueueHarness:
             contention = None
         op_lists: List[List] = []
         op_kinds: List[List[str]] = []
+        op_items: List[List] = []
         for t, plan in enumerate(plans):
             thunks = []
             for kind, item in plan:
                 thunks.append(self._make_op(t, kind, item))
             op_lists.append(thunks)
             op_kinds.append([kind for kind, _ in plan])
+            op_items.append([item for _, item in plan])
         if contention is not None:
-            contention.begin_run(self.nvram, self.queue.retry_profile())
+            contention.begin_run(self.nvram, self.queue.retry_profile(),
+                                 schedules=self.queue.schedule_facts())
         self.contention = contention
-        sched = ClockScheduler(self.nvram, contention=contention)
+        fast = None
+        if compiled is None:
+            compiled = True
+        if compiled and trace is None and isinstance(self.nvram, NVRAM):
+            fast = self._make_fast_executor()
+        self.fast = fast
+        sched = ClockScheduler(self.nvram, contention=contention, fast=fast,
+                               pause_gc=pause_gc)
         self._trace_begin(trace, len(plans), None, "batched")
         try:
-            sched.run(op_lists, op_kinds=op_kinds)
+            sched.run(op_lists, op_kinds=op_kinds, op_items=op_items)
         finally:
+            if fast is not None:
+                fast.flush_counts()   # land deferred compiled-op charges
             self._trace_end(trace)
             # don't leave later (uncontended) runs on this engine paying
             # for the per-primitive epoch/CAS-tag stamping
@@ -212,6 +237,17 @@ class QueueHarness:
         return RunResult(crashed=False, ops=self.ops, events=self.events,
                          stats=self.nvram.total_stats(), ops_completed=done,
                          sim_time_ns=self.nvram.sim_time_ns())
+
+    def _make_fast_executor(self):
+        """Build the compiled-schedule executor for this harness's queue,
+        or None when the queue declares no op_schedule()."""
+        if self.queue.op_schedule() is None:
+            return None
+
+        def record(tid: int, kind: str, item: Any) -> None:
+            self.ops.append(OpRecord(tid=tid, kind=kind, item=item,
+                                     completed=True))
+        return FastPathExecutor(self.queue, self.nvram, record=record)
 
     def _make_op(self, tid: int, kind: str, item: Any):
         def op():

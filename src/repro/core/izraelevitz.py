@@ -13,8 +13,9 @@ from __future__ import annotations
 
 from typing import Any
 
-from .contention import RetryProfile
 from .nvram import LINE_WORDS, NVRAM
+from .opsched import (AllocP, Cas, Fence, FifoLayout, Flush, L, OpSchedule,
+                      QueueSchedules, Read, Retire, WriteLine)
 from .queue_base import NULL, QueueAlgorithm, alloc_root_lines
 from .ssmem import SSMem
 
@@ -43,28 +44,47 @@ class IzraelevitzQueue(QueueAlgorithm):
             self.pflush(self.TAIL)
             self.pfence()
 
-    # ---------------------------------------------------------- contention
-    def retry_profile(self):
-        # the transform persists after EVERY shared access, so a retry
-        # replays flush(+fence) per re-read and re-touches the lines those
-        # very flushes invalidated -- the fence-heavy baseline is also the
-        # retry-heavy one.  NVTraverseQ inherits this with the read/CAS-fail
-        # fences elided (FENCE_AFTER_READ=False), mirroring the fast path.
-        # Expected counts fit against the exact scheduler (a re-read is
-        # post-flush only when no co-scheduled op re-fetched the line first).
-        if self.FENCE_AFTER_READ:
-            return {
-                "enq": RetryProfile(root=self.TAIL, flushed_reads=1.6,
-                                    flushes=3, fences=3),
-                "deq": RetryProfile(root=self.HEAD, flushed_reads=3.2,
-                                    flushes=5, fences=5),
-            }
-        return {
-            "enq": RetryProfile(root=self.TAIL, flushed_reads=2.5,
-                                flushes=3, weight=0.8),
-            "deq": RetryProfile(root=self.HEAD, flushed_reads=4,
-                                flushes=5, weight=0.8),
-        }
+    # ---------------------------------------- steady-state schedule facts
+    # The transform persists after EVERY shared access, so a retry replays
+    # flush(+fence) per re-read and re-touches the lines those very
+    # flushes invalidated -- the fence-heavy baseline is also the
+    # retry-heavy one.  NVTraverseQ overrides this with the read/CAS-fail
+    # fences elided (FENCE_AFTER_READ=False), mirroring the fast path.
+    # Expected counts fit against the exact scheduler (a re-read is
+    # post-flush only when no co-scheduled op re-fetched the line first).
+    RETRY_SHAPES = {
+        "enq": dict(flushed_reads=1.6, flushes=3, fences=3),
+        "deq": dict(flushed_reads=3.2, flushes=5, fences=5),
+    }
+
+    def op_schedule(self):
+        """Steady state: the general transform's persist-per-access
+        schedule applied to MSQ (read/CAS-fail fences present iff
+        ``FENCE_AFTER_READ``)."""
+        far = self.FENCE_AFTER_READ
+
+        def pread(loc):       # _pread: read + flush (+ fence)
+            return (Read(loc), Flush(loc)) + ((Fence(),) if far else ())
+
+        enq = OpSchedule("enq", steps=(
+            AllocP(),
+            WriteLine(L("new_p"), (None, NULL, 0, 0, 0, 0, 0, 0), item_at=0),
+            Flush(L("new_p")), Fence(),
+        ) + pread(L("TAIL")) + pread(L("tail_p", NEXT)) + (
+            Cas(L("tail_p", NEXT), ("sym", "new_p"), event="enq"),
+            Flush(L("tail_p", NEXT)), Fence(),
+            Cas(L("TAIL"), ("sym", "new_p"), root=True),
+            Flush(L("TAIL")), Fence(),
+        ), retry_from=4)
+        deq = OpSchedule("deq", steps=(
+            pread(L("HEAD")) + pread(L("head_p", NEXT))
+            + pread(L("TAIL")) + pread(L("next_p", ITEM)) + (
+                Cas(L("HEAD"), ("sym", "next_p"), root=True, event="deq"),
+                Flush(L("HEAD")), Fence(),
+                Retire(("sym", "head_p")),
+            )))
+        return QueueSchedules(enq=enq, deq=deq, layout=FifoLayout(
+            head_root="HEAD", next_off=NEXT, item_off=ITEM))
 
     # -- transformed accessors ---------------------------------------------
     def _pread(self, addr: int) -> Any:
@@ -150,3 +170,8 @@ class IzraelevitzQueue(QueueAlgorithm):
 class NVTraverseQueue(IzraelevitzQueue):
     NAME = "NVTraverseQ"
     FENCE_AFTER_READ = False
+
+    RETRY_SHAPES = {
+        "enq": dict(flushed_reads=2.5, flushes=3, weight=0.8),
+        "deq": dict(flushed_reads=4, flushes=5, weight=0.8),
+    }

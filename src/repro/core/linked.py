@@ -20,8 +20,10 @@ from __future__ import annotations
 
 from typing import Any, Set
 
-from .contention import RetryProfile
 from .nvram import LINE_WORDS, NVRAM
+from .opsched import (AllocP, Cas, Fence, FifoLayout, Flush, L, OpSchedule,
+                      PersistedAdd, PersistedDiscard, QueueSchedules, Read,
+                      Retire, SlotSet, Write, WriteLine)
 from .queue_base import NULL, QueueAlgorithm, alloc_root_lines
 from .ssmem import SSMem
 
@@ -53,17 +55,62 @@ class LinkedQueue(QueueAlgorithm):
             self.pfence()
             self._persisted.add(dummy)
 
-    # ---------------------------------------------------------- contention
-    def retry_profile(self):
-        # retries issue no flushes, so no new invalidations: the lines the
-        # backward walk flushed are re-fetched once in the base accounting
-        # and retries re-read them as hits (exact-scheduler flushed-access
-        # totals stay flat).  LinkedQ's post-flush cost lives in the walk
-        # itself, not in the CAS loop.
-        return {
-            "enq": RetryProfile(root=self.TAIL, reads=2),
-            "deq": RetryProfile(root=self.HEAD, reads=4),
-        }
+    # ---------------------------------------- steady-state schedule facts
+    # Retries issue no flushes, so no new invalidations: the lines the
+    # backward walk flushed are re-fetched once in the base accounting
+    # and retries re-read them as hits (exact-scheduler flushed-access
+    # totals stay flat).  LinkedQ's post-flush cost lives in the walk
+    # itself, not in the CAS loop.
+    RETRY_SHAPES = {
+        "enq": dict(reads=2),
+        "deq": dict(reads=4),
+    }
+
+    def op_schedule(self):
+        """Steady state (§5.2): one fence per op.  The enqueue's backward
+        walk covers exactly the new node plus the (already-durable) tail --
+        a longer not-yet-durable suffix means a pending enqueue is still in
+        flight, which op-granularity execution excludes; the
+        ``tail_persisted`` guard bails to real execution otherwise.  The
+        dequeue piggybacks the previously-retired node's flag flush on its
+        own fence (``_to_flush`` slot; NULL on a thread's first dequeue --
+        warmup bails)."""
+        enq = OpSchedule("enq", steps=(
+            AllocP(),
+            PersistedDiscard("new_p"),      # recycled addr no longer durable
+            WriteLine(L("new_p"), (None, NULL, 0, NULL, 0, 0, 0, 0),
+                      item_at=0),
+            Read(L("TAIL")),
+            Read(L("tail_p", NEXT)),
+            Write(L("new_p", PRED), ("sym", "tail_p")),
+            Write(L("new_p", INIT), ("c", 1)),     # after content: Asm. 1
+            Cas(L("tail_p", NEXT), ("sym", "new_p"), event="enq"),
+            # backward-walk persist: the suffix [new node, durable tail]
+            Read(L("new_p", PRED)),
+            Flush(L("new_p")),
+            Read(L("tail_p", PRED)),
+            Flush(L("tail_p")),
+            Fence(),                               # the ONE fence
+            PersistedAdd("new_p", "tail_p"),
+            Cas(L("TAIL"), ("sym", "new_p"), root=True),
+        ), guards=(("tail_persisted",),), retry_from=3)
+        deq = OpSchedule("deq", steps=(
+            Read(L("HEAD")),
+            Read(L("head_p", NEXT)),
+            Read(L("TAIL")),                       # MSQ guard
+            Read(L("next_p", ITEM)),
+            Cas(L("HEAD"), ("sym", "next_p"), root=True, event="deq"),
+            # piggyback protocol: clear the current head's flag now, flush
+            # the previously retired node, one fence covers both
+            Write(L("head_p", INIT), ("c", 0)),
+            Flush(L("prev")),
+            Flush(L("HEAD")),
+            Fence(),                               # the ONE fence
+            Retire(("sym", "prev")),
+            SlotSet("_to_flush", ("sym", "head_p")),
+        ), guards=(("slot_nonnull", "_to_flush"),))
+        return QueueSchedules(enq=enq, deq=deq, layout=FifoLayout(
+            head_root="HEAD", next_off=NEXT, item_off=ITEM))
 
     # --------------------------------------------------------------- enqueue
     def enqueue(self, tid: int, item: Any) -> None:

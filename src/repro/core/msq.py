@@ -11,8 +11,9 @@ from __future__ import annotations
 
 from typing import Any
 
-from .contention import RetryProfile
 from .nvram import NVRAM
+from .opsched import (AllocV, Cas, FifoLayout, L, OpSchedule, QueueSchedules,
+                      Read, Write)
 from .queue_base import NULL, QueueAlgorithm
 from .ssmem import VolatileAlloc
 
@@ -41,12 +42,33 @@ class MSQueue(QueueAlgorithm):
         nv.write(n + NEXT, NULL)
         return n
 
-    def retry_profile(self):
-        # everything is volatile: a retry re-reads cached words and re-CASes
-        return {
-            "enq": RetryProfile(root=self.TAIL, reads=2),
-            "deq": RetryProfile(root=self.HEAD, reads=4),
-        }
+    # everything is volatile: a retry re-reads cached words and re-CASes
+    RETRY_SHAPES = {
+        "enq": dict(reads=2),
+        "deq": dict(reads=4),
+    }
+
+    def op_schedule(self):
+        """Steady state: pure volatile pointer chasing, no persists -- the
+        memory-model-invariant baseline."""
+        enq = OpSchedule("enq", steps=(
+            AllocV(),
+            Write(L("new_v", ITEM), ("item",)),
+            Write(L("new_v", NEXT), ("c", NULL)),
+            Read(L("TAIL")),
+            Read(L("tail_v", NEXT)),
+            Cas(L("tail_v", NEXT), ("sym", "new_v"), event="enq"),
+            Cas(L("TAIL"), ("sym", "new_v"), root=True),
+        ), uses_ssmem=False, retry_from=3)
+        deq = OpSchedule("deq", steps=(
+            Read(L("HEAD")),
+            Read(L("head_v", NEXT)),
+            Read(L("TAIL")),                     # MSQ reclamation guard
+            Read(L("next_v", ITEM)),
+            Cas(L("HEAD"), ("sym", "next_v"), root=True, event="deq"),
+        ), uses_ssmem=False)
+        return QueueSchedules(enq=enq, deq=deq, layout=FifoLayout(
+            head_root="HEAD", next_off=NEXT, item_off=ITEM, volatile=True))
 
     def enqueue(self, tid: int, item: Any) -> None:
         nv = self.nvram

@@ -240,6 +240,10 @@ class NVRAM:
         # with and without it; when None the cost is one predicate per
         # primitive.
         self._tap = None
+        # Benchmarking escape hatch: False forces allocator-area zeroing
+        # back onto the per-primitive path (the seed behavior), so the
+        # fastpath smoke can report an honest fully-per-op baseline.
+        self.enable_bulk_init = True
         # --- batched cost accumulator -------------------------------------
         self._ebuf: List[int] = []            # packed tid * N_EV + code
         self._counts = np.zeros((nthreads, N_EV), dtype=np.int64)
@@ -756,6 +760,73 @@ class NVRAM:
         for _ in range(repeat):
             for c in codes:
                 buf.append(base + c)
+
+    # ------------------------------------------------- compiled-op seam
+    # The schedule compiler (repro.core.opsched) replays a queue op's
+    # event shape as ONE pre-reduced count vector instead of dozens of
+    # event-buffer appends.  Charging goes straight into the counter
+    # matrix -- the same destination the bincount reduction feeds -- so
+    # compiled and per-primitive execution produce identical counts and
+    # identical (dot-product) thread clocks.
+    def charge_counts(self, tid: int, vec: np.ndarray) -> None:
+        """Add one compiled op's (N_EV,) event-count vector to `tid`."""
+        self._counts[tid] += vec
+
+    def bulk_line_init(self, base: int, nlines: int) -> None:
+        """Vectorized allocator-area init: the exact accounting + state
+        effects of, per line, ``write_full_line(a, [0]*LINE_WORDS)`` (+
+        ``flush(a)`` when the model needs flushes) followed by ONE
+        ``fence()`` -- the ssmem designated-area zeroing schedule (paper
+        §5.1.3).  Event counts, line state, the persistent image and the
+        per-line ``_log_start`` positions come out bit-identical to the
+        per-primitive sequence; only the Python-loop overhead (tens of
+        milliseconds per 4096-node area) is removed.
+
+        Callers (``SSMem._new_area``) must only use this when no
+        scheduler step hook and no trace tap are attached: the compiled
+        form has no per-primitive yield points to report.
+        """
+        assert self.step_hook is None and self._tap is None
+        tid = self.tid
+        lo, hi = base, base + nlines * LINE_WORDS
+        line0 = base // LINE_WORDS
+        self._drain()
+        c = self._counts[tid]
+        c[EV_WRITE] += nlines          # one full-line store per line
+        c[EV_HIT] += nlines
+        self._vis[lo:hi] = 0
+        self._pmem[lo:hi] = 0
+        if self.model.persist_on_store:
+            # eADR: stores persist on visibility; pflush is elided and the
+            # fence drains nothing
+            self._cached[line0:line0 + nlines] = 1
+            self._finval[line0:line0 + nlines] = 0
+            c[EV_FENCE] += 1
+            return
+        # flush-based platforms: every line is flushed once, then one
+        # fence drains all nlines distinct lines
+        c[EV_FLUSH] += nlines
+        c[EV_FENCE] += 1
+        c[EV_FENCE_LINE] += nlines
+        if self.model.flush_invalidates:
+            self._cached[line0:line0 + nlines] = 0
+            self._finval[line0:line0 + nlines] = 1
+        else:
+            self._cached[line0:line0 + nlines] = 1
+            self._finval[line0:line0 + nlines] = 0
+        self._everfl[line0:line0 + nlines] = 1
+        # the LINE_WORDS zero-stores per line were logged and drained by
+        # the fence: logs end empty with the start cursor advanced (past
+        # any pre-existing unapplied entries too -- the zeros overwrote
+        # whatever values those would have applied)
+        ls = self._log_start
+        log = self._log
+        for ln in range(line0, line0 + nlines):
+            pre = log.get(ln)
+            n = LINE_WORDS + (len(pre) if pre else 0)
+            ls[ln] = ls.get(ln, 0) + n
+            if pre:
+                pre.clear()
 
     # ------------------------------------------------------------- reporting
     def _drain(self) -> None:

@@ -20,8 +20,11 @@ from __future__ import annotations
 
 from typing import Any, List, Set, Tuple
 
-from .contention import RetryProfile
 from .nvram import LINE_WORDS, NVRAM
+from .opsched import (AllocP, AllocV, Cas, Fence, FifoLayout, Flush, L,
+                      Movnti, OpSchedule, PersistedAdd, PersistedDiscard,
+                      QueueSchedules, Read, Retire, RetireV, SlotSet, Write,
+                      WriteLine)
 from .queue_base import NULL, QueueAlgorithm
 from .ssmem import SSMem, VolatileAlloc
 
@@ -92,15 +95,76 @@ class OptLinkedQueue(QueueAlgorithm):
         nv.write(v + V_PREDV, predv)
         return v
 
-    # ---------------------------------------------------------- contention
-    def retry_profile(self):
-        # second amendment: retries re-read Volatile halves only (index,
-        # pred pointer, next) -- zero flushed_reads, so contended runs keep
-        # post_flush_accesses == 0 (property-tested).
-        return {
-            "enq": RetryProfile(root=self.TAIL, reads=4),
-            "deq": RetryProfile(root=self.HEAD, reads=4),
-        }
+    # ---------------------------------------- steady-state schedule facts
+    # Second amendment: retries re-read Volatile halves only (index, pred
+    # pointer, next) -- zero flushed_reads (the volatile-only retry body
+    # in the schedule proves it), so contended runs keep
+    # post_flush_accesses == 0 (property-tested).
+    RETRY_SHAPES = {
+        "enq": dict(reads=4),
+        "deq": dict(reads=4),
+    }
+
+    def op_schedule(self):
+        """Steady state (§6.2, §6.3): the enqueue's backward flush walk
+        covers exactly its own Persistent half (the tail's is already
+        durable -- ``tail_persisted`` bails otherwise), then movnti-writes
+        the per-thread last-enqueue record (penultimate before last) and
+        issues the single fence.  Dequeue mirrors OptUnlinkedQ."""
+        enq = OpSchedule("enq", steps=(
+            AllocP(),
+            PersistedDiscard("new_p"),   # recycled addr: durable-hint evict
+            WriteLine(L("new_p"), (None, 0, NULL, 0, 0, 0, 0, 0), item_at=0),
+            AllocV(),
+            Write(L("new_v", V_ITEM), ("item",)),
+            Write(L("new_v", V_INDEX), ("c", 0)),
+            Write(L("new_v", V_NEXT), ("c", NULL)),
+            Write(L("new_v", V_PPTR), ("sym", "new_p")),
+            Write(L("new_v", V_PREDV), ("c", NULL)),
+            Read(L("TAIL")),
+            Read(L("tail_v", V_NEXT)),
+            Read(L("tail_v", V_INDEX)),        # volatile reads only
+            Read(L("tail_v", V_PPTR)),
+            Write(L("new_p", P_PRED), ("sym", "tail_p")),
+            Write(L("new_p", P_INDEX), ("idx",)),     # index LAST
+            Write(L("new_v", V_INDEX), ("idx",)),
+            Write(L("new_v", V_PREDV), ("sym", "tail_v")),
+            Cas(L("tail_v", V_NEXT), ("sym", "new_v"), event="enq"),
+            # backward flush walk over the volatile chain: own pnode, then
+            # stop at the durable tail (flush reads nothing back)
+            Read(L("new_v", V_PPTR)),
+            Flush(L("new_p")),
+            Read(L("new_v", V_PREDV)),
+            Read(L("tail_v", V_PPTR)),
+            # per-thread record: penultimate BEFORE last (crash-prefix
+            # safety), all movnti -- never read on the fast path
+            Movnti(L("LASTENQ", R_PEN_PTR, per_tid=True),
+                   ("slot", "_last", 0)),
+            Movnti(L("LASTENQ", R_PEN_IDX, per_tid=True),
+                   ("slot", "_last", 1)),
+            Movnti(L("LASTENQ", R_LAST_PTR, per_tid=True), ("sym", "new_p")),
+            Movnti(L("LASTENQ", R_LAST_IDX, per_tid=True), ("idx",)),
+            Fence(),                            # the ONE fence
+            PersistedAdd("new_p"),
+            SlotSet("_last", ("tup", ("sym", "new_p"), ("idx",))),
+            Cas(L("TAIL"), ("sym", "new_v"), root=True),
+        ), guards=(("tail_persisted",),), retry_from=9)
+        deq = OpSchedule("deq", steps=(
+            Read(L("HEAD")),
+            Read(L("head_v", V_NEXT)),
+            Read(L("TAIL")),                    # MSQ guard
+            Read(L("next_v", V_ITEM)),
+            Read(L("next_v", V_INDEX)),
+            Cas(L("HEAD"), ("sym", "next_v"), root=True, event="deq"),
+            Movnti(L("HEADIDX", per_tid=True), ("idx",)),
+            Fence(),                            # the ONE fence
+            Read(L("head_v", V_PPTR)),
+            Retire(("sym", "head_p")),
+            RetireV(("sym", "head_v")),
+        ))
+        return QueueSchedules(enq=enq, deq=deq, layout=FifoLayout(
+            head_root="HEAD", next_off=V_NEXT, item_off=V_ITEM,
+            idx_off=V_INDEX, pptr_off=V_PPTR, volatile=True))
 
     # --------------------------------------------------------------- enqueue
     def enqueue(self, tid: int, item: Any) -> None:

@@ -17,8 +17,10 @@ from __future__ import annotations
 
 from typing import Any, List, Tuple
 
-from .contention import RetryProfile
 from .nvram import LINE_WORDS, NVRAM
+from .opsched import (AllocP, AllocV, Cas, Fence, FifoLayout, Flush, L,
+                      Movnti, OpSchedule, QueueSchedules, Read, Retire,
+                      RetireV, Write, WriteLine)
 from .queue_base import NULL, QueueAlgorithm
 from .ssmem import SSMem, VolatileAlloc
 
@@ -70,15 +72,57 @@ class OptUnlinkedQueue(QueueAlgorithm):
         nv.write(v + V_PPTR, pptr)
         return v
 
-    # ---------------------------------------------------------- contention
-    def retry_profile(self):
-        # second amendment: the fast path reads/CASes Volatile halves only,
-        # so a retry is pure cached work -- zero flushed_reads.  Contended
-        # runs must preserve post_flush_accesses == 0 (property-tested).
-        return {
-            "enq": RetryProfile(root=self.TAIL, reads=3),
-            "deq": RetryProfile(root=self.HEAD, reads=4),
-        }
+    # ---------------------------------------- steady-state schedule facts
+    # Second amendment: the fast path reads/CASes Volatile halves only, so
+    # a retry is pure cached work -- zero flushed_reads (the schedule's
+    # volatile-only retry body *proves* it: the contention model zeroes
+    # any flushed-read claim).  Contended runs must preserve
+    # post_flush_accesses == 0 (property-tested).
+    RETRY_SHAPES = {
+        "enq": dict(reads=3),
+        "deq": dict(reads=4),
+    }
+
+    def op_schedule(self):
+        """Steady state (§6.1, §6.3): enqueue flushes its Persistent half
+        once (never read back); dequeue's only persistent-memory work is
+        one movnti + one fence.  Zero accesses to flushed content."""
+        enq = OpSchedule("enq", steps=(
+            AllocP(),
+            # linked unset before a meaningful index is visible (§5.1.1)
+            WriteLine(L("new_p"), (None, 0, 0, 0, 0, 0, 0, 0), item_at=0),
+            AllocV(),
+            Write(L("new_v", V_ITEM), ("item",)),
+            Write(L("new_v", V_INDEX), ("c", 0)),
+            Write(L("new_v", V_NEXT), ("c", NULL)),
+            Write(L("new_v", V_PPTR), ("sym", "new_p")),
+            Read(L("TAIL")),
+            Read(L("tail_v", V_NEXT)),
+            Read(L("tail_v", V_INDEX)),       # VOLATILE tail: no post-flush
+            Write(L("new_p", P_INDEX), ("idx",)),
+            Write(L("new_v", V_INDEX), ("idx",)),
+            Cas(L("tail_v", V_NEXT), ("sym", "new_v"), event="enq"),
+            Write(L("new_p", P_LINKED), ("c", 1)),
+            Flush(L("new_p")), Fence(),       # flushed once, never read
+            Cas(L("TAIL"), ("sym", "new_v"), root=True),
+        ), retry_from=7)
+        deq = OpSchedule("deq", steps=(
+            Read(L("HEAD")),
+            Read(L("head_v", V_NEXT)),
+            Read(L("TAIL")),                  # MSQ guard
+            Read(L("next_v", V_ITEM)),
+            Read(L("next_v", V_INDEX)),
+            Cas(L("HEAD"), ("sym", "next_v"), root=True, event="deq"),
+            # persist this thread's head index: movnti, never read back
+            Movnti(L("HEADIDX", per_tid=True), ("idx",)),
+            Fence(),                          # the ONE fence
+            Read(L("head_v", V_PPTR)),
+            Retire(("sym", "head_p")),        # both halves, epoch-protected
+            RetireV(("sym", "head_v")),
+        ))
+        return QueueSchedules(enq=enq, deq=deq, layout=FifoLayout(
+            head_root="HEAD", next_off=V_NEXT, item_off=V_ITEM,
+            idx_off=V_INDEX, pptr_off=V_PPTR, volatile=True))
 
     # --------------------------------------------------------------- enqueue
     def enqueue(self, tid: int, item: Any) -> None:

@@ -20,6 +20,8 @@ from typing import Any, Callable, Dict, Optional
 
 from .contention import RetryProfile
 from .nvram import LINE_WORDS, NVRAM
+from .opsched import (QueueSchedules, linearizing_root,
+                      retry_touches_persistent)
 from .ssmem import SSMem
 
 NULL = 0
@@ -62,21 +64,80 @@ class QueueAlgorithm:
         self.pflush(addr)
         self.pfence()
 
+    # -- steady-state schedule contract --------------------------------------
+    # Class-level per-round retry shapes (see RetryProfile): numeric facts
+    # only -- the contended root *addresses* are instance-specific and come
+    # from op_schedule()'s root-marked CAS, so the numbers stay declarative.
+    RETRY_SHAPES: Dict[str, Dict[str, float]] = {}
+
+    def op_schedule(self) -> Optional[QueueSchedules]:
+        """The queue's steady-state ops as typed primitive programs.
+
+        Concrete queues return a :class:`repro.core.opsched.QueueSchedules`
+        describing the exact reads, writes, CAS, model-aware pflush/pfence,
+        movnti and allocator interactions of one successful steady-state
+        enqueue and dequeue -- the same facts :meth:`retry_profile` and the
+        B2 persist-count tables assert, as one source of truth.  Three
+        consumers:
+
+        * the batched scheduler's fast path compiles and replays it
+          (:mod:`repro.core.opsched`), bailing to real execution for
+          anything the program does not cover;
+        * the contention layer locates each kind's CAS root and checks
+          whether a retry can touch flushed content at all;
+        * the equivalence suite pins the compiled replay bit-identical to
+          per-op execution on every memory model.
+
+        ``None`` (the default) opts the queue out of the fast path.
+        """
+        return None
+
     # -- contention contract -------------------------------------------------
     def retry_profile(self) -> Dict[str, RetryProfile]:
         """Per-op-kind shape of ONE failed CAS round, for the batched path.
 
-        Concrete queues return ``{'enq': RetryProfile(...), 'deq': ...}``
-        describing which root word each kind's linearizing CAS targets and
-        the event codes a retry replays -- cached re-reads, re-reads of
-        *flushed* content (the post-flush cost a retry re-incurs), and any
-        helping-path flush/fence work.  The batched scheduler's
+        Returns ``{'enq': RetryProfile(...), 'deq': ...}``: which root word
+        each kind's tracked CAS targets and the event codes a retry round
+        replays -- cached re-reads, re-reads of *flushed* content (the
+        post-flush cost a retry re-incurs), and any helping-path
+        flush/fence work.  The batched scheduler's
         :class:`repro.core.contention.ContentionModel` charges these per
         modeled CAS failure; the exact scheduler ignores them (its retries
-        execute for real).  An empty dict (the default) opts the queue out
-        of contention modeling entirely.
+        execute for real).
+
+        The default implementation combines the class-level
+        ``RETRY_SHAPES`` numbers with root addresses resolved from
+        :meth:`op_schedule` (the schedule's ``root=True`` CAS), so queues
+        declare per-round costs once and never repeat address facts.  An
+        empty dict (no shapes, no schedule) opts the queue out of
+        contention modeling entirely.
         """
-        return {}
+        scheds = self.op_schedule()
+        if not self.RETRY_SHAPES or scheds is None:
+            return {}
+        return {
+            kind: RetryProfile(
+                root=linearizing_root(self, scheds.of_kind(kind)), **shape)
+            for kind, shape in self.RETRY_SHAPES.items()
+        }
+
+    def schedule_facts(self) -> Dict[str, Dict[str, Any]]:
+        """Contention-relevant facts derived from :meth:`op_schedule`:
+        per op kind, the tracked root CAS address and whether a failed-CAS
+        retry can touch persistent (flushable) content at all.  The
+        :class:`repro.core.contention.ContentionModel` grounds every
+        profile (hand-fit or learned) in these instead of trusting
+        hand-maintained tables."""
+        scheds = self.op_schedule()
+        if scheds is None:
+            return {}
+        return {
+            sched.kind: {
+                "root": linearizing_root(self, sched),
+                "flushable_retry": retry_touches_persistent(self, sched),
+            }
+            for sched in scheds
+        }
 
     def enqueue(self, tid: int, item: Any) -> None:
         raise NotImplementedError

@@ -36,6 +36,7 @@ scheduler: crash tests use :class:`Scheduler`, benchmarks use
 """
 from __future__ import annotations
 
+import gc
 import heapq
 import random
 import threading
@@ -193,41 +194,86 @@ class ClockScheduler:
     (e.g. the mixed5050 generator's seed), not the scheduler.
     """
 
-    def __init__(self, nvram: NVRAM, contention=None):
+    def __init__(self, nvram: NVRAM, contention=None, fast=None,
+                 pause_gc: bool = True):
         self.nvram = nvram
         self.contention = contention   # Optional[ContentionModel]
+        self.fast = fast               # Optional[opsched.FastPathExecutor]
+        self.pause_gc = pause_gc       # False: seed-era GC behavior
         self.ops_run = 0
 
     def run(self, op_lists: List[List[Callable[[], None]]],
-            op_kinds: Optional[List[List[str]]] = None) -> bool:
+            op_kinds: Optional[List[List[str]]] = None,
+            op_items: Optional[List[List]] = None) -> bool:
         """op_lists[t] is thread t's sequence of zero-argument op thunks;
-        op_kinds[t][i] (required when a contention model is attached) names
-        thunk i's kind ('enq'/'deq') so retries charge the right profile.
-        Returns False (this scheduler never injects crashes)."""
+        op_kinds[t][i] (required when a contention model or fast executor
+        is attached) names thunk i's kind ('enq'/'deq') so retries charge
+        the right profile; op_items[t][i] is the enqueued item (fast path
+        only).  Returns False (this scheduler never injects crashes).
+
+        With a :class:`repro.core.opsched.FastPathExecutor` attached, each
+        op is first offered to the compiled schedule replay; ops outside
+        the steady state (empty dequeues, warmup, allocator refills) fall
+        back to their real thunk, after which the executor resyncs its
+        logical view.  Thread clocks are read back from the engine either
+        way, so the schedule (and every Stat) is identical to per-op
+        execution -- asserted bit-for-bit by the equivalence suite."""
         nv = self.nvram
         cm = self.contention
+        fast = self.fast
         if cm is not None and op_kinds is None:
             raise ValueError("contention modeling needs op_kinds")
+        if fast is not None and (op_kinds is None or op_items is None):
+            raise ValueError("the fast path needs op_kinds and op_items")
         prev_hook, nv.step_hook = nv.step_hook, None   # no yield points
+        # Throughput runs allocate millions of small acyclic objects
+        # (op records, event tuples, store-log entries); generational GC
+        # passes over the growing live set cost ~30% of wall time for
+        # zero reclaim.  Refcounting handles everything we drop.
+        gc_was_enabled = self.pause_gc and gc.isenabled()
+        if gc_was_enabled:
+            gc.disable()
         try:
             cursors = [0] * len(op_lists)
             heap = [(nv.thread_time_ns(t), t) for t, ops in
                     enumerate(op_lists) if ops]
             heapq.heapify(heap)
+            heappush, heappop = heapq.heappush, heapq.heappop
+            timed = (fast is not None and cm is None and fast.timed)
             while heap:
-                t_start, t = heapq.heappop(heap)
-                nv.set_tid(t)
-                if cm is not None:
-                    nv.epoch += 1     # one clock-window tick per op
-                op_lists[t][cursors[t]]()
-                self.ops_run += 1
-                if cm is not None:
-                    t_end = cm.after_op(t, op_kinds[t][cursors[t]], t_start)
+                t_start, t = heappop(heap)
+                i = cursors[t]
+                if timed:
+                    # compiled replay with exact incremental clocks: the
+                    # engine is only consulted on bail (real execution)
+                    t_end = fast.try_op_timed(t, op_kinds[t][i],
+                                              op_items[t][i], t_start)
+                    if t_end is None:
+                        nv.set_tid(t)
+                        op_lists[t][i]()
+                        fast.after_real_op(t, op_kinds[t][i])
+                        t_end = nv.thread_time_ns(t)
                 else:
-                    t_end = nv.thread_time_ns(t)
+                    nv.set_tid(t)
+                    if cm is not None:
+                        nv.epoch += 1     # one clock-window tick per op
+                    if fast is not None:
+                        kind = op_kinds[t][i]
+                        if not fast.try_op(t, kind, op_items[t][i]):
+                            op_lists[t][i]()
+                            fast.after_real_op(t, kind)
+                    else:
+                        op_lists[t][i]()
+                    if cm is not None:
+                        t_end = cm.after_op(t, op_kinds[t][i], t_start)
+                    else:
+                        t_end = nv.thread_time_ns(t)
+                self.ops_run += 1
                 cursors[t] += 1
                 if cursors[t] < len(op_lists[t]):
-                    heapq.heappush(heap, (t_end, t))
+                    heappush(heap, (t_end, t))
         finally:
             nv.step_hook = prev_hook
+            if gc_was_enabled:
+                gc.enable()
         return False

@@ -48,18 +48,29 @@ class SSMem:
 
     # ----------------------------------------------------------------- areas
     def _new_area(self, tid: int) -> int:
-        base = self.nvram.alloc_region(self.area_nodes * LINE_WORDS,
-                                       name=f"{self.name}:area:t{tid}",
-                                       persistent=True)
+        nv = self.nvram
+        base = nv.alloc_region(self.area_nodes * LINE_WORDS,
+                               name=f"{self.name}:area:t{tid}",
+                               persistent=True)
         # zero + persist the whole area with one fence (paper §5.1.3);
-        # persist-on-store platforms (eADR) need no flushes at all
-        needs_flush = self.nvram.model.needs_flush
-        for i in range(self.area_nodes):
-            a = base + i * LINE_WORDS
-            self.nvram.write_full_line(a, [0] * LINE_WORDS)
-            if needs_flush:
-                self.nvram.flush(a)
-        self.nvram.fence()
+        # persist-on-store platforms (eADR) need no flushes at all.
+        # On the batched engine, with no per-primitive observers attached
+        # (scheduler step hook, trace tap) and no outstanding persists to
+        # coalesce into the fence, the whole schedule is applied through
+        # the vectorized seam -- bit-identical accounting, ~100x faster.
+        if (getattr(nv, "bulk_line_init", None) is not None
+                and getattr(nv, "enable_bulk_init", False)
+                and nv.step_hook is None and getattr(nv, "_tap", None) is None
+                and not nv._pending.get(nv.tid)):
+            nv.bulk_line_init(base, self.area_nodes)
+        else:
+            needs_flush = nv.model.needs_flush
+            for i in range(self.area_nodes):
+                a = base + i * LINE_WORDS
+                nv.write_full_line(a, [0] * LINE_WORDS)
+                if needs_flush:
+                    nv.flush(a)
+            nv.fence()
         self._areas[tid].append(base)
         self._cursor[tid] = 0
         return base

@@ -20,8 +20,10 @@ from __future__ import annotations
 
 from typing import Any, List, Tuple
 
-from .contention import RetryProfile
 from .nvram import LINE_WORDS, NVRAM
+from .opsched import (AllocP, Cas, Fence, FifoLayout, Flush, L, OpSchedule,
+                      QueueSchedules, Read, Retire, SlotSet, Write,
+                      WriteLine)
 from .queue_base import NULL, QueueAlgorithm, alloc_root_lines
 from .ssmem import SSMem
 
@@ -50,17 +52,50 @@ class UnlinkedQueue(QueueAlgorithm):
             self.pflush(self.HEAD)
             self.pfence()
 
-    # ---------------------------------------------------------- contention
-    def retry_profile(self):
-        # retries issue no flushes of their own, so they add no NEW line
-        # invalidations: the flushed tail/head node lines are re-fetched
-        # once (charged to whichever op touches them first -- already in the
-        # base accounting) and a retry re-reads them as plain hits.  The
-        # exact scheduler confirms flushed-access totals stay flat here.
-        return {
-            "enq": RetryProfile(root=self.TAIL, reads=3),
-            "deq": RetryProfile(root=self.HEAD, reads=4),
-        }
+    # ---------------------------------------- steady-state schedule facts
+    # Retries issue no flushes of their own, so they add no NEW line
+    # invalidations: the flushed tail/head node lines are re-fetched
+    # once (charged to whichever op touches them first -- already in the
+    # base accounting) and a retry re-reads them as plain hits.  The
+    # exact scheduler confirms flushed-access totals stay flat here.
+    RETRY_SHAPES = {
+        "enq": dict(reads=3),
+        "deq": dict(reads=4),
+    }
+
+    def op_schedule(self):
+        """Steady state (Figure 1): one fence per op; the enqueue reads the
+        flushed tail node's index (post-flush), the dequeue reads the
+        flushed node content and its own flushed head line."""
+        enq = OpSchedule("enq", steps=(
+            AllocP(),                                          # Line 21
+            WriteLine(L("new_p"), (None, NULL, 0, 0, 0, 0, 0, 0),
+                      item_at=0),                              # Lines 22-24
+            Read(L("TAIL")),                                   # Line 26
+            Read(L("tail_p", NEXT)),                           # Line 27
+            Read(L("tail_p", INDEX)),                          # Line 28 (rhs)
+            Write(L("new_p", INDEX), ("idx",)),                # Line 28
+            Cas(L("tail_p", NEXT), ("sym", "new_p"),
+                event="enq"),                                  # Line 29
+            Write(L("new_p", LINKED), ("c", 1)),               # Line 30
+            Flush(L("new_p")), Fence(),                        # the ONE fence
+            Cas(L("TAIL"), ("sym", "new_p"), root=True),       # Line 32
+        ), retry_from=2)
+        deq = OpSchedule("deq", steps=(
+            Read(L("HEAD")),                                   # Line 8
+            Read(L("head_p", NEXT)),                           # Line 9
+            Read(L("TAIL")),                                   # MSQ guard
+            Read(L("next_p", INDEX)),                          # Line 13
+            Read(L("next_p", ITEM)),                           # Line 14
+            Cas(L("HEAD"), ("tup", ("sym", "next_p"), ("idx",)),
+                root=True, event="deq"),                       # DWCAS
+            Flush(L("HEAD")), Fence(),                         # the ONE fence
+            Retire(("sym", "prev")),                           # Lines 16-17
+            SlotSet("node_to_retire", ("sym", "head_p")),      # Line 18
+        ), guards=(("slot_nonnull", "node_to_retire"),))
+        return QueueSchedules(enq=enq, deq=deq, layout=FifoLayout(
+            head_root="HEAD", next_off=NEXT, item_off=ITEM, idx_off=INDEX,
+            head_is_tuple=True))
 
     # --------------------------------------------------------------- enqueue
     def enqueue(self, tid: int, item: Any) -> None:

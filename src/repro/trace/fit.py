@@ -68,6 +68,13 @@ _MAX_ROUNDS_HEADROOM = 1.25
 # contention-decay grid for the flushed-read fit (see RetryProfile
 # .flushed_decay): effective per-round count = F / (1 + delta * k)
 _DELTA_GRID = np.arange(0.0, 2.001, 0.05)
+# minimum mean excess flushed reads per trace before a measured per-k
+# decay shape replaces the jointly-fit parametric curve (thin signals
+# produce noise-dominated, upward-biased ratio tables)
+_SHAPE_MIN_EVENTS = 8.0
+# the smallest measured per-round ratio must sit at or below this for a
+# shape to count as "measured decay" (an all-flat table is clamp noise)
+_SHAPE_MAX_FLAT = 0.8
 # weight grid for the least-squares search (step 0.005, deterministic)
 _W_GRID = np.linspace(0.0, 4.0, 801)
 
@@ -347,6 +354,70 @@ def fit_profiles(queue_name: str, traces: Sequence[Trace],
     for ki, kind in enumerate(kinds):
         params[kind]["flushed_reads"] = float(sol[ki])
         params[kind]["flushed_decay"] = delta if sol[ki] > 0 else 0.0
+    # Per-window-size decay shape: instead of forcing the measured decay
+    # through the parametric 1/(1+delta*k), read the per-round flushed
+    # fraction off each traced thread count directly and tabulate it by
+    # integer window size (RetryProfile.flushed_decay accepts the tuple;
+    # the scalar stays as the inert default and the parametric fallback).
+    # The exact scheduler's 12-16-thread runs decay faster than 1/(1+dk)
+    # -- threads re-fetch invalidated lines almost immediately -- and the
+    # table captures that, which is what pushes the wide-thread envelope.
+    for ki, kind in enumerate(kinds):
+        fr = params[kind]["flushed_reads"]
+        if fr <= 0 or not params[kind]["flushed_decay"]:
+            continue
+        usable = [r for r in stats[kind]
+                  if r["rounds"] > 1e-9 and r["k_eff"] > 0]
+        pts = [(r["k_eff"],
+                min(max(r["excess"]["flushed_reads"], 0.0)
+                    / (r["rounds"] * fr), 1.0))
+               for r in usable]
+        if len(pts) < 2:
+            continue
+        # The per-point ratios bypass the joint (cross-kind conservation)
+        # system, so they are only trustworthy when the traces actually
+        # contain a measurable number of excess flushed reads; with a thin
+        # signal the clamped ratios bias high and the parametric scalar
+        # (fit jointly) extrapolates better.
+        mean_events = float(np.mean(
+            [max(r["excess"]["flushed_reads"], 0.0) * r["nops"]
+             for r in usable]))
+        if mean_events < _SHAPE_MIN_EVENTS:
+            continue
+        # and the measured region must actually exhibit decay: a table
+        # that is flat (clamped at 1) over every traced window size and
+        # only "decays" in the extrapolated tail contradicts the joint
+        # fit's delta and merely re-inflates small-k charges
+        if min(f for _, f in pts) > _SHAPE_MAX_FLAT:
+            continue
+        pts.sort()
+        ks = np.array([p[0] for p in pts])
+        fs = np.array([p[1] for p in pts])
+        kmax = int(np.ceil(ks.max())) + 8     # cover past the traced range
+        grid = np.arange(1, kmax + 1, dtype=float)
+        shape = np.interp(grid, ks, fs)
+        # beyond the last measured window size, continue the fitted
+        # parametric decay anchored at the measured boundary
+        kb = float(ks.max())
+        fb = float(fs[-1])
+        beyond = grid > kb
+        shape[beyond] = fb * (1.0 + delta * kb) / (1.0 + delta * grid[beyond])
+        shape = np.minimum.accumulate(np.clip(shape, 0.0, 1.0))
+        table = tuple(round(float(x), 6) for x in shape)
+
+        def _sse(fn):
+            return sum(
+                (fr * fn(r["k_eff"]) * r["rounds"]
+                 - max(r["excess"]["flushed_reads"], 0.0)) ** 2
+                for r in stats[kind] if r["rounds"] > 1e-9)
+
+        def _tab(k, _t=table):
+            return _t[max(1, min(int(round(k)), len(_t))) - 1]
+
+        # adopt the table only where it explains the measurements at
+        # least as well as the scalar curve it replaces
+        if _sse(_tab) <= _sse(lambda k: 1.0 / (1.0 + delta * k)) + 1e-12:
+            params[kind]["flushed_decay"] = table
     for kind, rows in stats.items():
         k_pool = np.concatenate([r["k"] for r in rows])
         r_pool = np.concatenate([r["rounds_i"] for r in rows])
@@ -414,7 +485,9 @@ def fit_all(queue_names: Iterable[str],
                     trace)
         out[name] = fit_profiles(name, traces, refine=True)
         say(f"# fitted {name}: " + json.dumps(
-            {k: {f: round(v, 3) for f, v in p.items()}
+            {k: {f: ([round(float(x), 3) for x in v]
+                     if isinstance(v, (list, tuple)) else round(v, 3))
+                 for f, v in p.items()}
              for k, p in out[name].params.items()}))
     return out
 
@@ -423,14 +496,19 @@ def fit_all(queue_names: Iterable[str],
 def save_profiles(path: str, profiles: Dict[str, LearnedRetryProfile],
                   retry_scale: float = DEFAULT_RETRY_SCALE) -> None:
     """Write learned profiles as versioned, diff-friendly JSON."""
+    def _ser(v):
+        # flushed_decay may be a per-window-size shape (tuple -> JSON list)
+        if isinstance(v, (list, tuple)):
+            return [round(float(x), 6) for x in v]
+        return round(float(v), 6)
+
     doc = {
         "schema": PROFILE_SCHEMA,
         "retry_scale": retry_scale,
         "generator": "python benchmarks/run.py fit-profiles",
         "queues": {
             name: {
-                "params": {kind: {f: round(float(p[f]), 6)
-                                  for f in PARAM_FIELDS}
+                "params": {kind: {f: _ser(p[f]) for f in PARAM_FIELDS}
                            for kind, p in sorted(lp.params.items())},
                 "source": lp.source,
             } for name, lp in sorted(profiles.items())
@@ -449,6 +527,11 @@ def load_profiles(path: str) -> Dict[str, LearnedRetryProfile]:
         raise ValueError(
             f"{path}: profile schema {doc.get('schema')!r}, this reader "
             f"understands {PROFILE_SCHEMA}")
+    def _de(v):
+        if isinstance(v, list):
+            return tuple(float(x) for x in v)
+        return float(v)
+
     out: Dict[str, LearnedRetryProfile] = {}
     for name, entry in doc.get("queues", {}).items():
         params = {}
@@ -457,7 +540,7 @@ def load_profiles(path: str) -> Dict[str, LearnedRetryProfile]:
             if missing:
                 raise ValueError(
                     f"{path}: {name}/{kind} missing fields {missing}")
-            params[kind] = {f: float(p[f]) for f in PARAM_FIELDS}
+            params[kind] = {f: _de(p[f]) for f in PARAM_FIELDS}
         out[name] = LearnedRetryProfile(queue=name, params=params,
                                         source=entry.get("source", {}))
     return out

@@ -1,0 +1,53 @@
+"""Queue-enumeration drift guards.
+
+``repro.core.DURABLE_QUEUES`` is the single source of truth for "which
+queues exist"; the benchmark CLI and the crash-sweep sharding must derive
+from it so a newly added queue cannot silently drop out of benchmarks,
+contention profiles or the durability gate.
+"""
+import inspect
+
+from repro.core import ALL_QUEUES, DURABLE_QUEUES
+
+
+def test_benchmark_durable_list_derives_from_registry():
+    from benchmarks.run import DURABLE
+    assert DURABLE == list(DURABLE_QUEUES), (
+        "benchmarks/run.py DURABLE drifted from repro.core.DURABLE_QUEUES; "
+        "derive it, don't copy it")
+    # no hand-maintained queue-name literals left in the module source
+    src = inspect.getsource(inspect.getmodule(__import__("benchmarks.run",
+                                                         fromlist=["run"])))
+    assert 'DURABLE = list(DURABLE_QUEUES)' in src
+
+
+def test_crash_sweep_shards_cover_registry():
+    """The CI matrix shards by sorted queue name over the same registry:
+    every durable queue lands in exactly one shard and no shard is empty."""
+    from repro.crash.__main__ import _shard
+
+    names = sorted(DURABLE_QUEUES)
+    shards = [_shard(names, f"{k}/4") for k in range(4)]
+    assert sorted(q for s in shards for q in s) == names
+    assert all(shards), "a CI crash-sweep shard would run empty"
+
+
+def test_crash_sweep_default_derives_from_registry():
+    import repro.crash.__main__ as crash_main
+
+    src = inspect.getsource(crash_main)
+    assert '",".join(sorted(DURABLE_QUEUES))' in src, (
+        "crash-sweep --queues default no longer derives from "
+        "repro.core.DURABLE_QUEUES")
+
+
+def test_learned_profiles_cover_every_queue():
+    """The learned-contention axis must cover all 8 queues (MSQ included:
+    the volatile baseline gets a measured profile too)."""
+    from benchmarks.workloads import load_learned_profiles
+
+    profiles = load_learned_profiles()
+    missing = set(ALL_QUEUES) - set(profiles)
+    assert not missing, (
+        f"benchmarks/profiles/learned.json is missing {sorted(missing)}; "
+        "re-run `python benchmarks/run.py fit-profiles`")

@@ -1,0 +1,122 @@
+"""Fast-path bail-out coverage: everything outside the compiled steady
+state must fall back to real per-primitive execution with Stats still
+bit-exact against the per-op path.
+
+The named non-steady-state cases from the schedule-compiler design:
+
+* **empty-dequeue bursts** -- a dequeue on an empty queue runs a different
+  primitive program (flush/fence the head, report empty) and, for
+  NVTraverseQ, even leaves unfenced flushes pending into the next op;
+* **first-op sentinel warmup** -- per-thread retire/flush slots
+  (``node_to_retire`` / ``_to_flush``) are still NULL, and the very first
+  ops run against cold roots;
+* **allocator area refills** -- ``SSMem.alloc`` mid-op carves and zeroes a
+  whole designated area (hundreds of primitives).
+"""
+import random
+
+import pytest
+
+from repro.core import ALL_QUEUES, QueueHarness
+
+DURABLE7 = sorted(q for q in ALL_QUEUES if q != "MSQ")
+
+
+def _run_pair(qname, plans, prefill=0, area_nodes=64, model="optane-clwb",
+              nthreads=None):
+    nthreads = nthreads if nthreads is not None else len(plans)
+    out = []
+    for compiled in (False, True):
+        h = QueueHarness(ALL_QUEUES[qname], nthreads=nthreads,
+                         area_nodes=area_nodes, model=model)
+        for i in range(prefill):
+            h.queue.enqueue(0, ("pre", i))
+        res = h.run_batched([list(p) for p in plans], compiled=compiled)
+        out.append((h, res))
+    return out
+
+
+def assert_pair_bit_exact(qname, plans, **kw):
+    (h_ref, r_ref), (h_fast, r_fast) = _run_pair(qname, plans, **kw)
+    s_ref, s_fast = h_ref.nvram.stats, h_fast.nvram.stats
+    for t in s_ref:
+        assert s_ref[t] == s_fast[t], (
+            f"{qname}: thread {t}\n  per-op: {s_ref[t]}\n"
+            f"  fast:   {s_fast[t]}")
+    assert r_ref.events == r_fast.events
+    assert r_ref.ops == r_fast.ops
+    assert h_ref.queue.drain(0) == h_fast.queue.drain(0)
+    return h_fast
+
+
+@pytest.mark.parametrize("qname", DURABLE7)
+def test_empty_dequeue_bursts_bail(qname):
+    """Drain past empty repeatedly: every empty dequeue must execute for
+    real (the compiled schedule covers successful dequeues only)."""
+    plans = [[("deq", None)] * 12 + [("enq", (t, i)) for i in range(3)]
+             + [("deq", None)] * 8 for t in range(3)]
+    h = assert_pair_bit_exact(qname, plans, prefill=4)
+    assert h.fast.bailed_ops > 0, "no op bailed -- the burst missed empty"
+
+
+@pytest.mark.parametrize("qname", DURABLE7)
+def test_sentinel_warmup_bails_then_settles(qname):
+    """From a completely fresh queue (no prefill, cold slots) the first
+    ops may bail; the run must still be bit-exact and the tail of the run
+    must reach the fast path."""
+    plans = [[("enq", (t, i)) for i in range(6)]
+             + [("deq", None), ("enq", ("x", t)), ("deq", None)]
+             for t in range(2)]
+    h = assert_pair_bit_exact(qname, plans, prefill=0)
+    assert h.fast.fast_ops > 0
+
+
+@pytest.mark.parametrize("qname", ["DurableMSQ", "UnlinkedQ", "OptLinkedQ"])
+def test_area_refill_bails_midrun(qname):
+    """A tiny designated area forces refills mid-run; the enqueue that
+    would carve a new area must run for real (zeroing schedule included)
+    and the logical view must resync."""
+    plans = [[("enq", (t, i)) for i in range(40)] for t in range(2)]
+    h = assert_pair_bit_exact(qname, plans, prefill=0, area_nodes=8)
+    assert h.fast.bailed_ops >= 2    # at least one refill per thread
+
+
+def test_random_plans_bit_exact_property():
+    """Property-style sweep: random interleavings of enq/deq (hitting
+    empty, warmup and refill bails unpredictably) stay bit-exact across
+    queues, models and seeds."""
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        pytest.skip("hypothesis not installed")
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1), st.sampled_from(DURABLE7),
+           st.sampled_from(["optane-clwb", "eadr", "cxl"]))
+    def prop(seed, qname, model):
+        rng = random.Random(seed)
+        plans = []
+        for t in range(rng.randint(1, 3)):
+            plan = []
+            for i in range(rng.randint(5, 25)):
+                if rng.random() < 0.55:
+                    plan.append(("enq", (t, i)))
+                else:
+                    plan.append(("deq", None))
+            plans.append(plan)
+        assert_pair_bit_exact(qname, plans, prefill=rng.randint(0, 4),
+                              area_nodes=rng.choice([8, 64]), model=model)
+
+    prop()
+
+
+@pytest.mark.parametrize("qname", ["NVTraverseQ"])
+def test_pending_persists_from_bailed_op_block_fast_path(qname):
+    """NVTraverseQ's empty dequeue leaves unfenced flushes pending; the
+    next op on that thread must bail too (PendingEmpty guard) so the real
+    fence drains them with the correct line count."""
+    plans = [[("deq", None), ("enq", ("a", 1)), ("deq", None)]]
+    h = assert_pair_bit_exact(qname, plans, prefill=0)
+    # first deq (empty) bails; the following enq sees pending flushes and
+    # must bail as well
+    assert h.fast.bailed_ops >= 2

@@ -1,0 +1,137 @@
+"""The schedule-compiler fast path's equivalence gate.
+
+``QueueHarness.run_batched`` now replays compiled steady-state op
+schedules (:mod:`repro.core.opsched`) instead of executing every primitive
+per op.  The acceptance criterion is *bit identity*: for all 8 queues x 3
+memory models x contention off/on/learned, the compiled fast path must
+produce exactly the per-thread Stats (every counter AND the float
+``time_ns``), the same linearization events, the same op records and the
+same final queue contents as per-op ClockScheduler execution
+(``compiled=False``).  Both executor backends -- the generated-code one
+and the instruction interpreter -- are held to the same standard.
+"""
+import pytest
+
+from repro.core import (ALL_QUEUES, MEMORY_MODELS, FastPathExecutor,
+                        QueueHarness, linearizing_root,
+                        retry_touches_persistent)
+from benchmarks.workloads import make_plans, resolve_contention
+
+QUEUES8 = sorted(ALL_QUEUES)
+CONTENTION = ["off", "on", "learned"]
+
+
+def _run(qname, compiled, model, contention="off", workload="mixed5050",
+         nthreads=3, ops=40, area_nodes=256, prefill=None, seed=0,
+         backend="codegen"):
+    h = QueueHarness(ALL_QUEUES[qname], nthreads=nthreads,
+                     area_nodes=area_nodes, model=model)
+    plans, wl_prefill = make_plans(workload, nthreads, ops, seed=seed)
+    for i in range(wl_prefill if prefill is None else prefill):
+        h.queue.enqueue(0, ("pre", i))
+    _, cmodel = resolve_contention(contention, qname)
+    if compiled and backend != "codegen":
+        # route the harness through the interpreter backend
+        orig = h._make_fast_executor
+
+        def _interp():
+            ex = orig()
+            return None if ex is None else FastPathExecutor(
+                h.queue, h.nvram, record=ex.record, backend="interp")
+        h._make_fast_executor = _interp
+    res = h.run_batched(plans, compiled=compiled, contention=cmodel)
+    return h, res
+
+
+def assert_bit_identical(qname, model, contention, **kw):
+    h_ref, r_ref = _run(qname, False, model, contention, **kw)
+    h_fast, r_fast = _run(qname, True, model, contention, **kw)
+    s_ref, s_fast = h_ref.nvram.stats, h_fast.nvram.stats
+    for t in s_ref:
+        assert s_ref[t] == s_fast[t], (
+            f"{qname}/{model}/{contention}: thread {t} Stats diverge\n"
+            f"  per-op: {s_ref[t]}\n  fast:   {s_fast[t]}")
+    assert r_ref.events == r_fast.events
+    assert r_ref.ops == r_fast.ops
+    assert r_ref.sim_time_ns == r_fast.sim_time_ns
+    # final logical queue contents must agree too
+    assert h_ref.queue.drain(0) == h_fast.queue.drain(0)
+    return h_fast
+
+
+@pytest.mark.parametrize("model", sorted(MEMORY_MODELS))
+@pytest.mark.parametrize("qname", QUEUES8)
+def test_fastpath_bit_identical_all_models(qname, model):
+    """The core gate: 8 queues x 3 models, mixed workload, contention off."""
+    h = assert_bit_identical(qname, model, "off")
+    assert h.fast is not None and h.fast.fast_ops > 0, \
+        "fast path never engaged -- the equivalence test lost its subject"
+
+
+@pytest.mark.parametrize("contention", ["on", "learned"])
+@pytest.mark.parametrize("qname", QUEUES8)
+def test_fastpath_bit_identical_contended(qname, contention):
+    """Contended runs: the compiled replay must feed the ContentionModel
+    the same CAS tags, line epochs and clocks as per-op execution."""
+    assert_bit_identical(qname, "optane-clwb", contention)
+
+
+@pytest.mark.parametrize("qname", ["DurableMSQ", "UnlinkedQ", "OptLinkedQ"])
+def test_fastpath_bit_identical_interpreter_backend(qname):
+    """The instruction-interpreting backend executes the identical opcode
+    program; hold it to the same bit-identity bar as the codegen one."""
+    h_ref, r_ref = _run(qname, False, "optane-clwb")
+    h_int, r_int = _run(qname, True, "optane-clwb", backend="interp")
+    s_ref, s_int = h_ref.nvram.stats, h_int.nvram.stats
+    for t in s_ref:
+        assert s_ref[t] == s_int[t]
+    assert r_ref.events == r_int.events and r_ref.ops == r_int.ops
+
+
+@pytest.mark.parametrize("qname", QUEUES8)
+def test_fastpath_pairs_and_bursts(qname):
+    """Different op mixes reach different steady states; pairs and
+    producer bursts must replay bit-identically too."""
+    assert_bit_identical(qname, "optane-clwb", "off", workload="pairs")
+    assert_bit_identical(qname, "optane-clwb", "off", workload="producers")
+
+
+def test_fastpath_mostly_fast_in_steady_state():
+    """Sanity on coverage: in a warm mixed run the overwhelming majority
+    of ops must take the compiled path, not the bail path."""
+    h, _ = _run("DurableMSQ", True, "optane-clwb", ops=200, nthreads=4)
+    total = h.fast.fast_ops + h.fast.bailed_ops
+    assert h.fast.fast_ops / total > 0.85, (h.fast.fast_ops, total)
+
+
+def test_second_amendment_zero_post_flush_on_fast_path():
+    """The paper's headline invariant survives compilation: OptUnlinkedQ /
+    OptLinkedQ runs stay at zero post-flush accesses on the fast path."""
+    for qname in ("OptUnlinkedQ", "OptLinkedQ"):
+        h, res = _run(qname, True, "optane-clwb", ops=120, nthreads=4)
+        assert res.stats.post_flush_accesses == 0
+
+
+def test_schedule_derived_roots_match_declared_profiles():
+    """Tentpole wiring: retry_profile() roots come from the op_schedule's
+    root CAS, and volatile-only retry bodies are detected so contended
+    profiles cannot claim flushed re-reads the schedule forbids."""
+    for qname, cls in ALL_QUEUES.items():
+        h = QueueHarness(cls, nthreads=2, area_nodes=64)
+        q = h.queue
+        scheds = q.op_schedule()
+        assert scheds is not None, f"{qname} lost its op_schedule"
+        profiles = q.retry_profile()
+        facts = q.schedule_facts()
+        for kind in ("enq", "deq"):
+            root = linearizing_root(q, scheds.of_kind(kind))
+            assert profiles[kind].root == root
+            assert facts[kind]["root"] == root
+        flushable = {k: retry_touches_persistent(q, scheds.of_kind(k))
+                     for k in ("enq", "deq")}
+        if qname in ("MSQ", "OptUnlinkedQ", "OptLinkedQ"):
+            assert not any(flushable.values()), (
+                f"{qname}: a volatile-only retry body was classified as "
+                f"able to touch flushed content: {flushable}")
+        else:
+            assert any(flushable.values())

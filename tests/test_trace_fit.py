@@ -160,17 +160,30 @@ def test_paper_s8_opt_queues_strictly_fewer_post_flush_accesses():
 
 # ------------------------------------------------------ learned profiles
 def test_checked_in_profiles_are_complete_and_measured():
-    """benchmarks/profiles/learned.json: schema-checked, all seven queues,
-    every numeric field present, provenance recorded, and the second
-    amendment invariant is *measured* (flushed_reads == 0 for opt queues,
-    so contended runs keep post_flush_accesses == 0)."""
+    """benchmarks/profiles/learned.json: schema-checked, all EIGHT queues
+    (MSQ's volatile baseline included), every numeric field present,
+    provenance recorded, and the second amendment invariant is *measured*
+    (flushed_reads == 0 for opt queues, so contended runs keep
+    post_flush_accesses == 0).  ``flushed_decay`` may be a measured
+    per-window-size shape (a list of multipliers in [0, 1], k = 1..K)."""
     profiles = load_profiles(LEARNED_PROFILES_PATH)
-    assert set(profiles) == set(DURABLE7)
+    # exactly the queue registry: no queue missing, no stale orphan entry
+    assert set(profiles) == set(ALL_QUEUES)
+    assert set(ALL_QUEUES) == set(DURABLE7) | {"MSQ"}
     for name, lp in profiles.items():
         assert set(lp.params) == {"enq", "deq"}, name
         for kind, p in lp.params.items():
             for f in PARAM_FIELDS:
-                assert np.isfinite(p[f]) and p[f] >= 0, (name, kind, f)
+                v = p[f]
+                if f == "flushed_decay" and isinstance(v, (list, tuple)):
+                    arr = np.asarray(v, dtype=float)
+                    assert len(arr) >= 2, (name, kind, "degenerate shape")
+                    assert np.isfinite(arr).all(), (name, kind)
+                    assert ((arr >= 0) & (arr <= 1)).all(), (name, kind)
+                    # a shape is a decay: monotone non-increasing in k
+                    assert (np.diff(arr) <= 1e-12).all(), (name, kind)
+                    continue
+                assert np.isfinite(v) and v >= 0, (name, kind, f)
         assert lp.source.get("traces"), f"{name}: no fit provenance"
     for name in ("OptUnlinkedQ", "OptLinkedQ"):
         for kind in ("enq", "deq"):
@@ -230,6 +243,13 @@ def test_learned_calibration_extends_to_12_and_16_threads(name):
     """Past the exact scheduler's practical reach, the learned model stays
     within 20% of *sampled* exact ground truth (12 ops/thread, one seed)
     on persist-instruction and flushed-access totals at 12 and 16 threads.
+
+    With the per-window-size ``flushed_decay`` shapes (measured per traced
+    k instead of forced through 1/(1+dk)), the sampled worst case is
+    ~16% -- the fence-heavy transforms' flushed-access totals at one
+    thread count each -- and every other cell sits at or under ~5%.  The
+    20% gate absorbs single-seed sampling noise; tighten it only with
+    multi-seed ground truth.
 
     Slow: each exact 16-thread sample costs ~15-20 s of per-primitive
     OS-thread scheduling; CI runs this suite in a non-blocking job.
