@@ -25,6 +25,7 @@ Examples::
   PYTHONPATH=src python benchmarks/run.py fit-profiles   # refit learned.json
   PYTHONPATH=src python benchmarks/run.py crash-sweep --out crash.csv
   PYTHONPATH=src python benchmarks/run.py fastpath-smoke --out fp.csv
+  PYTHONPATH=src python benchmarks/run.py fleet --instances 100000 --check 8
 
 ``repro`` comes from the pyproject / ``PYTHONPATH=src`` convention (under
 pytest the pythonpath is configured for you); there is no ``sys.path``
@@ -342,6 +343,135 @@ def fastpath_smoke_main(argv) -> None:
         sys.exit(1)
 
 
+# `run.py fleet` CSV schema -- tests/test_docs_refs.py checks that the
+# column list quoted in docs/fleet.md matches this constant.
+FLEET_CSV_COLUMNS = [
+    "queue", "model", "contention", "backend", "devices", "instances",
+    "ops_per_instance", "total_ops", "chunk", "bails", "residents",
+    "build_s", "run_s", "fleet_mops_per_s", "sim_ns_per_op",
+    "fences_per_op", "post_flush_per_op", "checked", "check_ok",
+]
+
+
+def fleet_main(argv) -> None:
+    """`run.py fleet`: queue-ops/sec across a simulated user fleet.
+
+    Runs 10k-1M independent queue instances (one per simulated
+    user/tenant, one thread each) as a single vectorized array program
+    (repro.fleet): each queue x model compiled schedule is lowered to
+    stacked event-count/effect arrays and driven by a vmapped lax.scan
+    stepper sharded across forced XLA host devices; instances hitting a
+    fast-path bail condition fall out to the real per-instance executor
+    and rejoin at the next chunk boundary.  ``--check N`` re-runs N
+    sampled instances per cell on independent ``run_batched`` harnesses
+    and requires bit-identical Stats (every counter and ``time_ns``) --
+    the fleet's correctness gate; failures exit nonzero.  One thread per
+    instance means contended counts are bit-identical to uncontended
+    ones (see docs/fleet.md), so ``--contention`` is a reporting axis.
+    """
+    ap = argparse.ArgumentParser(
+        prog="run.py fleet",
+        description=fleet_main.__doc__.splitlines()[0])
+    ap.add_argument("--instances", type=int, default=100_000,
+                    help="fleet size (default 100k; 1M is practical with "
+                         "--batch)")
+    ap.add_argument("--ops", type=int, default=96,
+                    help="plan steps per instance (default 96)")
+    ap.add_argument("--queues", default="DurableMSQ,OptUnlinkedQ,OptLinkedQ",
+                    help=f"comma-separated, from {','.join(ALL_QUEUES)}")
+    ap.add_argument("--models", default="optane-clwb",
+                    help=f"comma-separated memory models ({','.join(MODELS)})")
+    ap.add_argument("--contention", default="off",
+                    help="comma-separated: off, on (reporting axis; "
+                         "per-instance counts are bit-identical either way "
+                         "at one thread per instance)")
+    ap.add_argument("--backend", choices=["auto", "numpy", "jax"],
+                    default="numpy",
+                    help="numpy (default; fastest on host CPU), jax (the "
+                         "sharded XLA path), or auto (jax if importable)")
+    ap.add_argument("--devices", type=int, default=8,
+                    help="forced XLA host devices for the jax mesh")
+    ap.add_argument("--chunk", type=int, default=48,
+                    help="plan steps per vector chunk (bail/rejoin "
+                         "granularity)")
+    ap.add_argument("--batch", type=int, default=0,
+                    help="instances per state batch (0 = whole fleet at "
+                         "once; bound memory at 1M scale)")
+    ap.add_argument("--prefill", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--check", type=int, default=0,
+                    help="equivalence-check this many sampled instances per "
+                         "cell against independent run_batched harnesses")
+    ap.add_argument("--out", default=None, help="CSV destination")
+    args = ap.parse_args(argv)
+    from repro.fleet import (FleetConfig, check_instances,
+                             ensure_host_devices, run_fleet)
+    if args.backend != "numpy":
+        ensure_host_devices(args.devices)
+    rows, failures = [], []
+    print(f"# fleet: {args.instances} instances x {args.ops} ops "
+          f"(backend {args.backend}, chunk {args.chunk})")
+    print("name,us_per_call,derived")
+    for model in args.models.split(","):
+        for cont in args.contention.split(","):
+            for qname in args.queues.split(","):
+                cfg = FleetConfig(
+                    queue=qname, model=model, instances=args.instances,
+                    ops=args.ops, prefill=args.prefill, seed=args.seed,
+                    chunk=args.chunk, backend=args.backend,
+                    devices=args.devices, batch=args.batch, contention=cont)
+                res = run_fleet(cfg)
+                agg = res.aggregate()
+                total = res.total_ops
+                sim_ns = agg.time_ns / total
+                checked = check_ok = 0
+                if args.check:
+                    checks = check_instances(
+                        res, sample=args.check,
+                        contention=(True if cont == "on" else None))
+                    checked = len(checks)
+                    check_ok = sum(r["ok"] for r in checks)
+                    for r in checks:
+                        if not r["ok"]:
+                            failures.append(
+                                f"{qname}/{model}/{cont}: instance "
+                                f"{r['instance']} fleet Stats != run_batched "
+                                f"Stats")
+                rows.append({
+                    "queue": qname, "model": model, "contention": cont,
+                    "backend": res.backend, "devices": res.devices,
+                    "instances": args.instances,
+                    "ops_per_instance": args.ops, "total_ops": total,
+                    "chunk": args.chunk, "bails": res.bails,
+                    "residents": res.residents,
+                    "build_s": round(res.build_s, 3),
+                    "run_s": round(res.run_s, 3),
+                    "fleet_mops_per_s": round(res.ops_per_sec / 1e6, 3),
+                    "sim_ns_per_op": round(sim_ns, 2),
+                    "fences_per_op": round(agg.fences / total, 3),
+                    "post_flush_per_op": round(
+                        agg.post_flush_accesses / total, 3),
+                    "checked": checked, "check_ok": check_ok,
+                })
+                print(f"fleet/{model}/{cont}/{qname},"
+                      f"{res.run_s * 1e6 / total:.4f},"
+                      f"mops={res.ops_per_sec / 1e6:.2f};"
+                      f"sim_ns_per_op={sim_ns:.1f};"
+                      f"fences_per_op={agg.fences / total:.2f};"
+                      f"backend={res.backend};bails={res.bails};"
+                      f"checked={check_ok}/{checked}")
+    if args.out:
+        with open(args.out, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=FLEET_CSV_COLUMNS)
+            w.writeheader()
+            w.writerows(rows)
+        print(f"# wrote {len(rows)} rows to {args.out}")
+    if failures:
+        for msg in failures:
+            print(f"# FLEET CHECK FAILURE: {msg}", file=sys.stderr)
+        sys.exit(1)
+
+
 def fit_profiles_main(argv) -> None:
     """`run.py fit-profiles`: capture exact-scheduler traces and refit the
     learned contention profiles (benchmarks/profiles/learned.json)."""
@@ -400,6 +530,8 @@ def main(argv=None) -> None:
         return crash_sweep_main(argv[1:])
     if argv and argv[0] == "fastpath-smoke":
         return fastpath_smoke_main(argv[1:])
+    if argv and argv[0] == "fleet":
+        return fleet_main(argv[1:])
     args = parse_args(argv)
     threads = sorted({int(t) for t in args.threads.split(",")})
     models = args.models.split(",")

@@ -1,0 +1,321 @@
+"""JAX backend: per-instance step fn, ``lax.scan`` over the op stream,
+``jax.vmap`` over the fleet, sharded across forced host devices.
+
+The step function is a straight functional transcription of
+:mod:`repro.fleet.stepper` for a *single* instance (scalars + small 1D
+arrays); ``jax.vmap`` batches it over the instance axis and ``lax.scan``
+drives it down a chunk of the op stream.  Both lowered programs run every
+step as masked straight-line code (no ``lax.cond`` -- the fleet's whole
+premise is that each op is a handful of gathers/scatters, so executing the
+non-selected program under a False mask is cheaper than divergence).
+
+Sharding uses the CPU-mesh trick: ``XLA_FLAGS=
+--xla_force_host_platform_device_count=8`` (set by
+:func:`repro.fleet.runner.ensure_host_devices` before jax's first import)
+splits the host into 8 XLA devices; a 1D mesh over the instance axis then
+gives device parallelism without any accelerator.  The instance axis is
+padded to a device multiple; padding rows are born inactive.
+
+All arrays are int32/uint8 -- volatile addresses are offsets, counts are
+int32 deltas (converted back to int64 on the host) -- so the backend never
+needs jax x64 mode.  Bit-identity with the numpy stepper (and hence with
+``run_batched``) is asserted by ``tests/test_fleet_equivalence.py``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from ..core.nvram import (EV_COLD_DRAM, EV_COLD_NVM, EV_DRAM, EV_HIT,
+                          EV_POSTFLUSH, LINE_WORDS)
+from ..core.opsched import NULL, ST_EVERFL, ST_INVAL
+from .lowering import KIND_DEQ, KIND_ENQ, SYM
+from .state import FleetState, Template
+from .stepper import EPOCH_ADV_OPS
+
+E_NEW_P, E_NEW_V = SYM["new_p"], SYM["new_v"]
+E_TAIL_P, E_TAIL_V = SYM["tail_p"], SYM["tail_v"]
+E_HEAD_P, E_HEAD_V = SYM["head_p"], SYM["head_v"]
+E_NEXT_P, E_NEXT_V = SYM["next_p"], SYM["next_v"]
+E_PREV = SYM["prev"]
+
+# FleetState fields carried on device (leading instance axis)
+_ARRAY_FIELDS = ("cached", "finval", "everfl", "persisted", "vtouched",
+                 "ring_p", "ring_v", "free_p", "vfree",
+                 "limbo_a", "limbo_e", "limbo_k")
+_SCALAR_FIELDS = ("head", "length", "dummy_p", "dummy_v", "nfree", "cursor",
+                  "nvfree", "vcursor", "nlimbo", "epoch", "opsctr",
+                  "active", "bail_at")
+
+
+def _advance_one(jnp, dims, c):
+    """Epoch advance for one instance (no-op when ``c['_adv']`` is False:
+    the freed mask is empty and the epoch increment is masked)."""
+    adv = c.pop("_adv")
+    min_e = c["epoch"]
+    c["epoch"] = jnp.where(adv, min_e + 1, min_e)
+    j = jnp.arange(dims.lcap, dtype=jnp.int32)
+    inl = j < c["nlimbo"]
+    fr = inl & (c["limbo_e"] + 2 <= min_e) & adv
+    is_p = c["limbo_k"] == 0
+    for sel, stack, nkey, slen in ((fr & is_p, "free_p", "nfree", dims.fcap),
+                                   (fr & ~is_p, "vfree", "nvfree",
+                                    dims.vfcap)):
+        cnt = jnp.cumsum(sel.astype(jnp.int32))
+        dest = jnp.where(sel, c[nkey] + cnt - 1, slen)   # OOB -> dropped
+        c[stack] = c[stack].at[dest].set(c["limbo_a"], mode="drop")
+        c[nkey] = c[nkey] + cnt[-1]
+    keep = inl & ~fr
+    order = jnp.argsort(jnp.where(keep, 0, 1).astype(jnp.int32), stable=True)
+    for key in ("limbo_a", "limbo_e", "limbo_k"):
+        c[key] = c[key][order]
+    c["nlimbo"] = c["nlimbo"] - fr.sum().astype(jnp.int32)
+    return c
+
+
+def _apply_one(jnp, dims, prog, c, sel, oi):
+    """One lowered op on one instance's state dict, masked by ``sel``."""
+    c = dict(c)
+    m = c["active"] & sel
+    cap = dims.cap
+    length, head = c["length"], c["head"]
+    has = length > 0
+    tpos = (head + jnp.maximum(length - 1, 0)) % cap
+    tail_p = jnp.where(has, c["ring_p"][tpos], c["dummy_p"])
+    tail_v = jnp.where(has, c["ring_v"][tpos], c["dummy_v"])
+    # ---- bail detection --------------------------------------------------
+    bail = jnp.asarray(False)
+    if prog.code == KIND_DEQ:
+        bail = bail | (length == 0)
+    for g in prog.guards:
+        if g[0] == "slot_nonnull":
+            bail = bail | (c["slot_" + g[1]] == NULL)
+        else:                               # tail_persisted
+            bail = bail | (c["persisted"][tail_p // LINE_WORDS] == 0)
+    if prog.allocs_p:
+        bail = bail | ((c["nfree"] == 0) & (c["cursor"] >= dims.area_cap))
+    if prog.allocs_v:
+        bail = bail | ((c["nvfree"] == 0) & (c["vcursor"] >= dims.chunk_cap))
+    newly = m & bail
+    c["bail_at"] = jnp.where(newly, oi, c["bail_at"])
+    c["active"] = c["active"] & ~newly
+    m = m & ~newly
+    # ---- op_begin --------------------------------------------------------
+    if prog.uses_ssmem:
+        ctr = c["opsctr"] + 1
+        adv = m & (ctr >= EPOCH_ADV_OPS)
+        c["opsctr"] = jnp.where(m, jnp.where(adv, 0, ctr), c["opsctr"])
+        c["_adv"] = adv
+        c = _advance_one(jnp, dims, c)
+    # ---- env + allocations ----------------------------------------------
+    env = {}
+    if prog.code == KIND_ENQ:
+        env[E_TAIL_P], env[E_TAIL_V] = tail_p, tail_v
+    else:
+        hpos = head % cap
+        env[E_HEAD_P], env[E_HEAD_V] = c["dummy_p"], c["dummy_v"]
+        env[E_NEXT_P] = c["ring_p"][hpos]
+        env[E_NEXT_V] = c["ring_v"][hpos]
+    for attr in prog.slot_attrs:
+        env[E_PREV] = c["slot_" + attr]
+    if prog.allocs_p:
+        use = c["nfree"] > 0
+        top = c["free_p"][jnp.maximum(c["nfree"] - 1, 0)]
+        env[E_NEW_P] = jnp.where(
+            use, top, dims.area_base + c["cursor"] * LINE_WORDS)
+        c["nfree"] = jnp.where(m & use, c["nfree"] - 1, c["nfree"])
+        c["cursor"] = jnp.where(m & ~use, c["cursor"] + 1, c["cursor"])
+    if prog.allocs_v:
+        use = c["nvfree"] > 0
+        top = c["vfree"][jnp.maximum(c["nvfree"] - 1, 0)]
+        env[E_NEW_V] = jnp.where(
+            use, top, dims.chunk_base + c["vcursor"] * dims.node_words)
+        c["nvfree"] = jnp.where(m & use, c["nvfree"] - 1, c["nvfree"])
+        c["vcursor"] = jnp.where(m & ~use, c["vcursor"] + 1, c["vcursor"])
+    # ---- micro-ops on local copies --------------------------------------
+    cached, finval, everfl = c["cached"], c["finval"], c["everfl"]
+    vtouched, persisted = c["vtouched"], c["persisted"]
+    cdelta = jnp.asarray(prog.base_counts.astype(np.int32))
+    one, zero = jnp.uint8(1), jnp.uint8(0)
+    for ins in prog.micro:
+        tag, ref = ins[0], ins[1]
+        a = ref.const if ref.mode == "const" else env[ref.sym] + ref.off
+        if tag == "class_p":
+            ln = a // LINE_WORDS
+            ev = jnp.where(cached[ln] == 1, EV_HIT,
+                           jnp.where(finval[ln] == 1, EV_POSTFLUSH,
+                                     jnp.where(everfl[ln] == 1, EV_COLD_NVM,
+                                               EV_COLD_DRAM)))
+            cdelta = cdelta.at[ev].add(1)
+            cached = cached.at[ln].set(one)
+            finval = finval.at[ln].set(zero)
+        elif tag == "class_v":
+            ev = jnp.where(vtouched[a] == 1, EV_HIT, EV_DRAM)
+            cdelta = cdelta.at[ev].add(1)
+            vtouched = vtouched.at[a].set(one)
+        elif tag == "state":
+            ln = a // LINE_WORDS
+            mode = ins[2]
+            if mode == ST_INVAL:
+                cached = cached.at[ln].set(zero)
+                finval = finval.at[ln].set(one)
+                everfl = everfl.at[ln].set(one)
+            elif mode == ST_EVERFL:
+                everfl = everfl.at[ln].set(one)
+            else:                           # ST_RECACHE
+                cached = cached.at[ln].set(one)
+                finval = finval.at[ln].set(zero)
+        else:                               # "line"
+            ln = a // LINE_WORDS
+            cached = cached.at[ln].set(one)
+            finval = finval.at[ln].set(zero)
+    c["counts"] = jnp.where(m, c["counts"] + cdelta, c["counts"])
+    # ---- logical FIFO ----------------------------------------------------
+    if prog.code == KIND_ENQ:
+        pos = (head + length) % cap
+        new_p = env[E_NEW_P] if prog.allocs_p else jnp.int32(0)
+        new_v = env[E_NEW_V] if prog.allocs_v else jnp.int32(0)
+        c["ring_p"] = jnp.where(m, c["ring_p"].at[pos].set(new_p),
+                                c["ring_p"])
+        c["ring_v"] = jnp.where(m, c["ring_v"].at[pos].set(new_v),
+                                c["ring_v"])
+        c["length"] = jnp.where(m, length + 1, length)
+    else:
+        c["dummy_p"] = jnp.where(m, env[E_NEXT_P], c["dummy_p"])
+        c["dummy_v"] = jnp.where(m, env[E_NEXT_V], c["dummy_v"])
+        c["head"] = jnp.where(m, (head + 1) % cap, head)
+        c["length"] = jnp.where(m, length - 1, length)
+    # ---- aux effects on local copies ------------------------------------
+    limbo_a, limbo_e, limbo_k = c["limbo_a"], c["limbo_e"], c["limbo_k"]
+    nlimbo = c["nlimbo"]
+    touched_limbo = False
+    for ax in prog.aux:
+        t0 = ax[0]
+        if t0 == "limbo":
+            limbo_a = limbo_a.at[nlimbo].set(env[ax[1]])
+            limbo_e = limbo_e.at[nlimbo].set(c["epoch"])
+            limbo_k = limbo_k.at[nlimbo].set(
+                jnp.uint8(0 if ax[2] == "p" else 1))
+            nlimbo = nlimbo + 1
+            touched_limbo = True
+        elif t0 == "slot":
+            key = "slot_" + ax[1]
+            c[key] = jnp.where(m, env[ax[2]], c[key])
+        elif t0 == "pdiscard":
+            persisted = persisted.at[env[ax[1]] // LINE_WORDS].set(zero)
+        else:                               # padd
+            for sym in ax[1]:
+                persisted = persisted.at[env[sym] // LINE_WORDS].set(one)
+    if touched_limbo:
+        c["limbo_a"] = jnp.where(m, limbo_a, c["limbo_a"])
+        c["limbo_e"] = jnp.where(m, limbo_e, c["limbo_e"])
+        c["limbo_k"] = jnp.where(m, limbo_k, c["limbo_k"])
+        c["nlimbo"] = jnp.where(m, nlimbo, c["nlimbo"])
+    # commit the line/word-state locals
+    c["cached"] = jnp.where(m, cached, c["cached"])
+    c["finval"] = jnp.where(m, finval, c["finval"])
+    c["everfl"] = jnp.where(m, everfl, c["everfl"])
+    c["vtouched"] = jnp.where(m, vtouched, c["vtouched"])
+    c["persisted"] = jnp.where(m, persisted, c["persisted"])
+    return c
+
+
+def make_chunk_fn(jax, programs, dims):
+    """-> chunk(st, kcols, oi): vmap over instances of a lax.scan over the
+    chunk's op stream.  ``kcols`` is (N, C) uint8, ``oi`` (C,) int32 global
+    op indices (shared across instances)."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    def per_instance(c, kcol, oi):
+        def step(carry, xs):
+            k, o = xs
+            for prog in programs:
+                carry = _apply_one(jnp, dims, prog, carry, k == prog.code, o)
+            return carry, None
+        out, _ = lax.scan(step, c, (kcol, oi))
+        return out
+
+    def chunk(st, kcols, oi):
+        return jax.vmap(per_instance, in_axes=(0, 0, None))(st, kcols, oi)
+
+    return chunk
+
+
+class JaxBackend:
+    """Device-resident fleet state; same protocol as NumpyBackend."""
+    name = "jax"
+
+    def __init__(self, template: Template, state: FleetState,
+                 devices: int = 8):
+        import jax
+        import jax.numpy as jnp
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec
+        self.jax, self.jnp = jax, jnp
+        self.t = template
+        self.n = state.n
+        ndev = len(jax.devices())
+        self.npad = -(-state.n // ndev) * ndev
+        mesh = Mesh(np.array(jax.devices()), ("i",))
+        self.sharding = NamedSharding(mesh, PartitionSpec("i"))
+
+        def put(a, pad_value=None):
+            pad = self.npad - self.n
+            if pad:
+                tile = (np.repeat(a[:1], pad, axis=0) if pad_value is None
+                        else np.full((pad,) + a.shape[1:], pad_value,
+                                     dtype=a.dtype))
+                a = np.concatenate([a, tile], axis=0)
+            return jax.device_put(a, self.sharding)
+
+        st = {}
+        for name in _ARRAY_FIELDS:
+            st[name] = put(getattr(state, name))
+        for name in _SCALAR_FIELDS:
+            pad_value = False if name == "active" else None
+            st[name] = put(getattr(state, name), pad_value)
+        st["counts"] = put(state.counts.astype(np.int32))
+        for attr, arr in state.slots.items():
+            st["slot_" + attr] = put(arr)
+        self.st = st
+        self._fn = jax.jit(make_chunk_fn(jax, template.programs,
+                                         template.dims),
+                           donate_argnums=(0,))
+
+    def run_chunk(self, kinds: np.ndarray, start: int) -> None:
+        C = kinds.shape[0]
+        kc = np.zeros((self.npad, C), dtype=np.uint8)
+        kc[:self.n] = kinds.T
+        kc = self.jax.device_put(kc, self.sharding)
+        oi = self.jnp.arange(start, start + C, dtype=self.jnp.int32)
+        self.st = self._fn(self.st, kc, oi)
+
+    def poll(self):
+        bail_at = np.asarray(self.st["bail_at"])[:self.n]
+        active = np.asarray(self.st["active"])[:self.n]
+        fresh = (~active) & (bail_at >= 0)
+        return np.nonzero(fresh)[0], bail_at
+
+    def rejoin(self, i: int, row: dict) -> None:
+        st = dict(self.st)
+        for name, val in row.items():
+            if name == "slots":
+                for attr, v in val.items():
+                    st["slot_" + attr] = st["slot_" + attr].at[i].set(v)
+            elif name == "counts":
+                st["counts"] = st["counts"].at[i].set(
+                    val.astype(np.int32))
+            else:
+                st[name] = st[name].at[i].set(val)
+        st["active"] = st["active"].at[i].set(True)
+        st["bail_at"] = st["bail_at"].at[i].set(-1)
+        self.st = st
+
+    def retire_resident(self, i: int) -> None:
+        from .runner import RESIDENT
+        st = dict(self.st)
+        st["active"] = st["active"].at[i].set(False)
+        st["bail_at"] = st["bail_at"].at[i].set(RESIDENT)
+        self.st = st
+
+    def counts(self) -> np.ndarray:
+        return np.asarray(self.st["counts"])[:self.n].astype(np.int64)

@@ -1,0 +1,226 @@
+"""Lower a :class:`repro.core.opsched.CompiledOp` to a Stats-only program.
+
+The compiled effect program mutates two kinds of engine state: *values*
+(``_vis``/``_pmem``/``_vval``/store logs) and *cost state* (per-line
+cached/finval/everfl bits, per-word volatile touched bits, per-thread event
+counters).  On the steady-state fast path, control flow never reads values
+back -- environment addresses come from the executor's logical FIFO and the
+allocators, CASes always succeed, and the bail guards consult only slots,
+the persisted set and allocator cursors.  Per-instance ``Stats`` therefore
+depend *only* on the cost state, which is all-integer and tiny: that is the
+whole reason a million queue instances fit in a few arrays.
+
+``lower_op`` keeps exactly the opcodes that can change a count or feed a
+later address:
+
+* ``K_CLASS_P`` / ``K_CLASS_V`` -- the dynamic classification points
+  (hit / post-flush / cold-NVM / cold-DRAM, hit / DRAM);
+* ``K_STATE`` (flush invalidation / retaining-flush / re-cache) and the
+  line-state half of ``K_LINE`` (a full-line store caches its line);
+* guards, allocators, FIFO bindings, retire->limbo, slot stores and the
+  persisted-set bookkeeping (they steer *which* addresses later ops
+  classify);
+
+and drops every pure value store (``K_VVAL``/``K_LOGW``/``K_PMEMW``/
+``K_PENDW``/``K_DRAIN``/``K_DRAINF``/``K_NT``/``K_NTAPPLY``) and the
+contention-tracking stamps (``K_CASTAG``/``K_STAMP`` -- the fleet runs one
+thread per instance, where contended counts are bit-identical to
+uncontended ones; see ``tests/test_contention_property.py``).
+
+Addresses are lowered for ``tid == 0`` (one simulated tenant per
+instance).  Volatile addresses are stored as offsets from
+``NVRAM._VOLATILE_BASE`` so every array stays comfortably in int32.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Tuple
+
+import numpy as np
+
+from ..core.nvram import NVRAM
+from ..core.opsched import (K_CASTAG, K_CLASS_P, K_CLASS_V, K_DRAIN, K_DRAINF,
+                            K_LINE, K_LOGW, K_NT, K_NTAPPLY, K_PENDW, K_PMEMW,
+                            K_STAMP, K_STATE, K_VVAL, _SYM_INDEX,
+                            _VOLATILE_SYMS, CompiledOp, compile_schedule)
+
+_VB = NVRAM._VOLATILE_BASE
+
+# env slot indices, re-exported for the steppers
+SYM = dict(_SYM_INDEX)
+VOLATILE_SYM = frozenset(_SYM_INDEX[s] for s in _VOLATILE_SYMS)
+
+KIND_ENQ, KIND_DEQ = 0, 1
+
+
+class FleetLoweringError(ValueError):
+    """A compiled op the fleet lowering cannot prove Stats-equivalent."""
+
+
+@dataclass(frozen=True)
+class Ref:
+    """A lowered address: persistent line / volatile word, constant or
+    env-relative.  ``const`` holds an absolute persistent address or a
+    volatile offset (addr - _VOLATILE_BASE); ``sym`` indexes the op env."""
+    space: str            # "p" | "v"
+    mode: str             # "const" | "sym"
+    const: int = 0
+    sym: int = -1
+    off: int = 0
+
+
+def _lower_addr(a, space: str) -> Ref:
+    """Compiler address descriptor -> Ref (tid pinned to 0)."""
+    mode = a[0]
+    if mode == 0:
+        addr = a[1]
+        if addr >= _VB:
+            if space == "p":
+                raise FleetLoweringError(
+                    f"volatile address {addr} in persistent context")
+            return Ref("v", "const", const=addr - _VB)
+        return Ref(space, "const", const=addr)
+    if mode == 2:                       # per-tid root, tid == 0
+        return Ref(space, "const", const=a[1] + a[2])
+    sym, off = a[1], a[2]
+    sp = "v" if sym in VOLATILE_SYM else "p"
+    if sp != space:
+        raise FleetLoweringError(
+            f"sym {_SYMS[sym]} is {sp}-space but used in {space} context")
+    return Ref(sp, "sym", sym=sym, off=off)
+
+
+def _lower_val_sym(val) -> int:
+    """Aux value expressions the fleet tracks must be bare env symbols."""
+    if not (isinstance(val, tuple) and val and val[0] == "sym"):
+        raise FleetLoweringError(f"aux value {val!r} is not a bare symbol")
+    return _SYM_INDEX[val[1]]
+
+
+# opcodes the lowering drops outright: value stores and contention stamps
+_DROPPED = {K_VVAL, K_LOGW, K_PMEMW, K_PENDW, K_DRAIN, K_DRAINF, K_NT,
+            K_NTAPPLY, K_CASTAG, K_STAMP}
+
+
+@dataclass
+class FleetProgram:
+    """One (queue, kind, model) op as Stats-only vector micro-ops.
+
+    ``micro`` entries (applied in order):
+      ("class_p", Ref)         dynamic persistent classification
+      ("class_v", Ref)         dynamic volatile classification
+      ("state", Ref, mode)     K_STATE: ST_INVAL / ST_EVERFL / ST_RECACHE
+      ("line", Ref)            K_LINE line-state half: cached=1, finval=0
+
+    ``aux`` entries (applied after the FIFO update, in order):
+      ("limbo", sym, "p"|"v")  retire / retire_volatile -> limbo append
+      ("slot", attr, sym)      q.attr[tid] = env[sym] (guard-relevant only)
+      ("pdiscard", sym)        q._persisted.discard(env[sym])
+      ("padd", (sym, ...))     q._persisted.add(env[sym]) each
+    """
+    kind: str
+    code: int                                 # KIND_ENQ | KIND_DEQ
+    base_counts: np.ndarray                   # (N_EV,) int64
+    micro: Tuple[tuple, ...]
+    aux: Tuple[tuple, ...]
+    guards: Tuple[tuple, ...]                 # compiler guard_specs, verbatim
+    uses_ssmem: bool = True
+    allocs_p: bool = False
+    allocs_v: bool = False
+    n_class: int = 0
+    slot_attrs: Tuple[str, ...] = field(default=())   # guard slot attrs
+
+
+def lower_op(op: CompiledOp, guard_attrs: frozenset) -> FleetProgram:
+    """Lower one CompiledOp.  ``guard_attrs`` is the set of slot attributes
+    any guard of this queue consults -- slot stores to other attrs carry no
+    Stats information (their values feed dropped value stores only) and are
+    elided; a tuple-valued store to a *guarded* slot is an error."""
+    micro = []
+    for ins in op.prog:
+        code = ins[0]
+        if code in _DROPPED:
+            continue
+        if code == K_CLASS_P:
+            micro.append(("class_p", _lower_addr(ins[1], "p")))
+        elif code == K_CLASS_V:
+            micro.append(("class_v", _lower_addr(ins[1], "v")))
+        elif code == K_STATE:
+            micro.append(("state", _lower_addr(ins[1], "p"), ins[2]))
+        elif code == K_LINE:
+            micro.append(("line", _lower_addr(ins[1], "p")))
+        else:
+            raise FleetLoweringError(f"unknown opcode {code} in {op.kind}")
+    aux = []
+    for spec in op.aux_specs:
+        t0 = spec[0]
+        if t0 == "retire":
+            aux.append(("limbo", _lower_val_sym(spec[1]), "p"))
+        elif t0 == "retire_v":
+            aux.append(("limbo", _lower_val_sym(spec[1]), "v"))
+        elif t0 == "slot":
+            attr = spec[1]
+            if attr not in guard_attrs:
+                continue        # value-only slot (e.g. OptLinkedQ._last)
+            aux.append(("slot", attr, _lower_val_sym(spec[2])))
+        elif t0 == "pdiscard":
+            aux.append(("pdiscard", _SYM_INDEX[spec[1]]))
+        elif t0 == "padd":
+            aux.append(("padd", tuple(_SYM_INDEX[s] for s in spec[1])))
+        else:
+            raise FleetLoweringError(f"unknown aux {t0!r} in {op.kind}")
+    slot_attrs = tuple(g[1] for g in op.guard_specs if g[0] == "slot_nonnull")
+    return FleetProgram(
+        kind=op.kind,
+        code=KIND_ENQ if op.kind == "enq" else KIND_DEQ,
+        base_counts=op.base_counts.copy(),
+        micro=tuple(micro),
+        aux=tuple(aux),
+        guards=tuple(op.guard_specs),
+        uses_ssmem=op.uses_ssmem,
+        allocs_p=op.allocs_p,
+        allocs_v=op.allocs_v,
+        n_class=op.n_class,
+        slot_attrs=slot_attrs,
+    )
+
+
+@dataclass
+class FleetPrograms:
+    """Both op kinds of one queue x model, plus the layout facts the
+    steppers need (shared by the numpy and jax backends)."""
+    enq: FleetProgram
+    deq: FleetProgram
+
+    def __iter__(self):
+        yield self.enq
+        yield self.deq
+
+    @property
+    def guard_slot_attrs(self) -> Tuple[str, ...]:
+        seen = []
+        for p in self:
+            for a in p.slot_attrs:
+                if a not in seen:
+                    seen.append(a)
+        return tuple(seen)
+
+    @property
+    def needs_persisted(self) -> bool:
+        return any(g[0] == "tail_persisted" for p in self for g in p.guards) \
+            or any(ax[0] in ("pdiscard", "padd") for p in self for ax in p.aux)
+
+
+def lower_queue(queue, model) -> FleetPrograms:
+    """Compile + lower both steady-state ops of one queue instance."""
+    schedules = queue.op_schedule()
+    if schedules is None:
+        raise FleetLoweringError(
+            f"{type(queue).__name__} declares no op_schedule()")
+    ops = {k: compile_schedule(queue, schedules.of_kind(k), model)
+           for k in ("enq", "deq")}
+    guard_attrs = frozenset(
+        g[1] for op in ops.values() for g in op.guard_specs
+        if g[0] == "slot_nonnull")
+    return FleetPrograms(enq=lower_op(ops["enq"], guard_attrs),
+                         deq=lower_op(ops["deq"], guard_attrs))

@@ -8,7 +8,11 @@ Keeps `docs/*.md` and the README honest as the code moves:
   ``repro.x.y.Symbol`` / ``:meth:`repro...```) must import, and a trailing
   attribute must exist on the imported module/class;
 * every backticked repo path (``src/.../*.py``, ``tests/*.py``,
-  ``benchmarks/*.py``, ``docs/*.md``) must exist.
+  ``benchmarks/*.py``, ``docs/*.md``) must exist;
+* every `benchmarks/run.py` command line quoted in a doc names a real
+  subcommand and real flags, every backticked ``--flag`` span is a flag
+  some repo CLI actually defines, and the fleet CSV schema block in
+  docs/fleet.md matches `benchmarks.run.FLEET_CSV_COLUMNS` exactly.
 
 CI runs this as its docs step; it is also part of the tier-1 suite.
 """
@@ -30,7 +34,7 @@ PATH_RE = re.compile(r"^(?:src|tests|benchmarks|docs|examples)/[\w./\-]+$")
 def test_docs_exist():
     """The documentation set the architecture satellite promises."""
     for rel in ("docs/architecture.md", "docs/queues.md",
-                "docs/benchmarking.md", "README.md"):
+                "docs/benchmarking.md", "docs/fleet.md", "README.md"):
         assert (REPO / rel).is_file(), f"missing {rel}"
 
 
@@ -90,7 +94,7 @@ def test_readme_links_to_docs():
     """Satellite: the README must point readers at docs/."""
     text = (REPO / "README.md").read_text()
     for rel in ("docs/architecture.md", "docs/queues.md",
-                "docs/benchmarking.md"):
+                "docs/benchmarking.md", "docs/fleet.md"):
         assert rel in text, f"README does not link {rel}"
 
 
@@ -102,6 +106,95 @@ def test_docs_name_the_load_bearing_tests():
                 "tests/test_contention_calibration.py"):
         assert rel in arch, f"architecture.md does not mention {rel}"
         assert (REPO / rel).is_file(), f"{rel} named in docs but missing"
+
+
+ARGV0_RE = re.compile(r'argv\[0\] == "([\w-]+)"')
+ADDARG_RE = re.compile(r'add_argument\(\s*"(--[\w-]+)"')
+FLAG_TOKEN_RE = re.compile(r"(?<![=\w-])--[\w-]+")
+
+# Every CLI whose flags the docs may quote: the benchmark driver plus the
+# crash-sweep/repro entry point it forwards to.
+CLI_SOURCES = ("benchmarks/run.py", "src/repro/crash/__main__.py")
+
+
+def _known_cli():
+    """(subcommands, flags) actually defined by the repo's CLIs."""
+    subcommands, flags = set(), {"--help"}
+    for rel in CLI_SOURCES:
+        src = (REPO / rel).read_text()
+        subcommands.update(ARGV0_RE.findall(src))
+        flags.update(ADDARG_RE.findall(src))
+    return subcommands, flags
+
+
+def _doc_command_lines(text):
+    """Command lines invoking benchmarks/run.py, continuations joined."""
+    lines, buf = [], None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if buf is not None:
+            buf += " " + line.rstrip("\\").strip()
+            if not line.endswith("\\"):
+                lines.append(buf)
+                buf = None
+            continue
+        if "benchmarks/run.py" in line and (
+                "python" in line or line.startswith("benchmarks/")):
+            if line.endswith("\\"):
+                buf = line.rstrip("\\").strip()
+            else:
+                lines.append(line)
+    return lines
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: p.name)
+def test_doc_cli_commands_are_real(doc):
+    """Satellite: every `benchmarks/run.py` invocation a doc quotes names
+    a subcommand the driver dispatches and flags some parser defines."""
+    subcommands, flags = _known_cli()
+    text = doc.read_text()
+    for cmd in _doc_command_lines(text):
+        tail = cmd.split("benchmarks/run.py", 1)[1].split("`", 1)[0].strip()
+        tokens = tail.split()
+        if tokens and not tokens[0].startswith("-"):
+            assert tokens[0] in subcommands, (
+                f"{doc.relative_to(REPO)}: quoted command {cmd!r} uses "
+                f"unknown subcommand {tokens[0]!r} (known: "
+                f"{sorted(subcommands)})")
+        for flag in FLAG_TOKEN_RE.findall(tail):
+            assert flag in flags, (
+                f"{doc.relative_to(REPO)}: quoted command {cmd!r} uses "
+                f"unknown flag {flag!r}")
+
+
+@pytest.mark.parametrize("doc", DOC_FILES, ids=lambda p: p.name)
+def test_doc_flag_spans_are_real(doc):
+    """Every backticked span that *starts* with `--` must be a flag one of
+    the repo CLIs defines (catches renamed/retired flags in prose)."""
+    _, flags = _known_cli()
+    text = doc.read_text()
+    for span in CODE_RE.findall(text):
+        span = span.strip()
+        if not span.startswith("--"):
+            continue
+        flag = span.split()[0].split("=", 1)[0]
+        assert flag in flags, (
+            f"{doc.relative_to(REPO)}: `{span}` quotes unknown flag "
+            f"{flag!r}")
+
+
+def test_fleet_csv_schema_block_matches_code():
+    """Satellite: the fleet CSV schema block in docs/fleet.md must equal
+    `benchmarks.run.FLEET_CSV_COLUMNS` -- same names, same order."""
+    from benchmarks.run import FLEET_CSV_COLUMNS
+    text = (REPO / "docs" / "fleet.md").read_text()
+    section = text.split("## Fleet CSV schema", 1)[1].split("\n## ", 1)[0]
+    m = re.search(r"```\n(.*?)```", section, re.S)
+    assert m, "docs/fleet.md: no fenced schema block under 'Fleet CSV schema'"
+    documented = [t for t in re.split(r"[\s,]+", m.group(1)) if t]
+    assert documented == list(FLEET_CSV_COLUMNS), (
+        f"docs/fleet.md schema block {documented} != "
+        f"benchmarks.run.FLEET_CSV_COLUMNS {list(FLEET_CSV_COLUMNS)}")
 
 
 def test_queue_enumeration_single_source_of_truth():

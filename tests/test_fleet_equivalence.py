@@ -1,0 +1,144 @@
+"""Fleet executor equivalence gate (tier 1).
+
+The fleet's contract: per-instance Stats -- every event counter and the
+derived ``time_ns`` -- are **bit-identical** to running the same instance
+plan on an independent ``QueueHarness.run_batched`` harness.  These tests
+enforce it for the numpy reference backend across all 8 queues x 3 memory
+models, for the bail/rejoin protocol (drained queues forcing empty-dequeue
+bails), for the epoch-reclamation path (runs long enough to free and reuse
+retired nodes), and -- when jax is installed -- for the jax backend against
+the same gate.
+"""
+import numpy as np
+import pytest
+
+from repro.core.harness import ALL_QUEUES
+from repro.core.nvram import N_EV
+from repro.fleet import (FleetConfig, build_template, check_instances,
+                         fleet_kinds, run_fleet)
+from repro.fleet.state import export_instance, make_instance_harness
+
+MODELS = ["optane-clwb", "eadr", "cxl"]
+
+
+def _assert_all_ok(res, sample):
+    rows = check_instances(res, sample=sample)
+    bad = [r for r in rows if not r["ok"]]
+    assert not bad, (
+        f"{len(bad)}/{len(rows)} sampled instances diverged; first: "
+        f"instance {bad[0]['instance']}\n fleet {bad[0]['fleet']}\n "
+        f"ref   {bad[0]['ref']}")
+    return rows
+
+
+@pytest.mark.parametrize("model", MODELS)
+@pytest.mark.parametrize("queue", list(ALL_QUEUES))
+def test_fleet_matches_run_batched(queue, model):
+    """All 8 queues x 3 models: >= 8 sampled instances bit-identical."""
+    cfg = FleetConfig(queue=queue, model=model, instances=9, ops=80,
+                      chunk=32, backend="numpy", seed=3)
+    res = run_fleet(cfg)
+    rows = _assert_all_ok(res, sample=8)
+    assert len(rows) == 8
+    # fleet aggregate == sum of per-instance counts by construction;
+    # sanity-check the aggregate is populated and self-consistent
+    agg = res.aggregate()
+    assert agg.fences > 0 or queue == "MSQ"
+    assert res.counts.shape == (9, N_EV)
+
+
+@pytest.mark.parametrize("queue", ["MSQ", "DurableMSQ", "LinkedQ",
+                                   "NVTraverseQ", "OptUnlinkedQ"])
+def test_bail_rejoin_exact(queue):
+    """Deq-heavy unclamped plans drain queues: instances bail out of the
+    vector program, replay on real harnesses, rejoin -- still exact."""
+    rng = np.random.default_rng(5)
+    cfg = FleetConfig(queue=queue, model="cxl", instances=6, ops=60,
+                      chunk=20, backend="numpy", prefill=3, seed=2)
+    kinds = (rng.random((cfg.ops, cfg.instances)) < 0.65).astype(np.uint8)
+    res = run_fleet(cfg, kinds=kinds)
+    assert res.bails > 0, "plans were meant to force empty-dequeue bails"
+    _assert_all_ok(res, sample=6)
+
+
+def test_epoch_reclamation_exact():
+    """400 ops cross several 64-op epoch advances: retired nodes move
+    through limbo to the free stacks and are reallocated -- still exact."""
+    for queue in ("UnlinkedQ", "OptLinkedQ"):
+        cfg = FleetConfig(queue=queue, model="optane-clwb", instances=4,
+                          ops=400, chunk=64, backend="numpy", seed=7)
+        res = run_fleet(cfg)
+        assert res.bails == 0
+        _assert_all_ok(res, sample=4)
+
+
+def test_batched_instances_match_unbatched():
+    """Splitting the fleet into state batches must not change any counts."""
+    base = FleetConfig(queue="DurableMSQ", model="eadr", instances=10,
+                       ops=48, chunk=16, backend="numpy", seed=11)
+    r1 = run_fleet(base)
+    r2 = run_fleet(FleetConfig(**{**base.__dict__, "batch": 3}))
+    assert np.array_equal(r1.counts, r2.counts)
+
+
+def test_fleet_kinds_deterministic_and_clamped():
+    k1 = fleet_kinds(50, 64, seed=9, prefill=5)
+    k2 = fleet_kinds(50, 64, seed=9, prefill=5)
+    assert np.array_equal(k1, k2)
+    assert k1.shape == (64, 50)
+    # clamped: running length never goes negative
+    length = np.full(50, 5)
+    for c in range(64):
+        length += np.where(k1[c] == 1, -1, 1)
+        assert (length >= 0).all()
+
+
+def test_template_round_trip():
+    """export_instance on a fresh harness reproduces the template row."""
+    t = build_template("LinkedQ", "optane-clwb", ops=32)
+    h = make_instance_harness(ALL_QUEUES["LinkedQ"], "optane-clwb",
+                              area_nodes=t.harness.mem.area_nodes)
+    row = export_instance(h, t.dims)
+    assert row is not None
+    for key, val in t.row.items():
+        if key == "slots":
+            assert val == row["slots"]
+        elif isinstance(val, np.ndarray):
+            assert np.array_equal(val, row[key]), key
+        else:
+            assert val == row[key], key
+
+
+jax = pytest.importorskip("jax", reason="jax backend tests need jax")
+
+
+@pytest.mark.parametrize("queue", ["DurableMSQ", "UnlinkedQ", "OptLinkedQ"])
+def test_jax_backend_matches_run_batched(queue):
+    """The jax backend passes the same bit-identity gate (reduced cells;
+    the full matrix runs on the numpy reference above and the two backends
+    share the run_batched oracle)."""
+    cfg = FleetConfig(queue=queue, model="optane-clwb", instances=9, ops=64,
+                      chunk=32, backend="jax", seed=3)
+    res = run_fleet(cfg)
+    assert res.backend == "jax"
+    _assert_all_ok(res, sample=8)
+
+
+def test_jax_bail_rejoin_exact():
+    rng = np.random.default_rng(5)
+    cfg = FleetConfig(queue="LinkedQ", model="cxl", instances=6, ops=60,
+                      chunk=20, backend="jax", prefill=3, seed=2)
+    kinds = (rng.random((cfg.ops, cfg.instances)) < 0.65).astype(np.uint8)
+    res = run_fleet(cfg, kinds=kinds)
+    assert res.bails > 0
+    _assert_all_ok(res, sample=6)
+
+
+def test_jax_matches_numpy_counts():
+    """Backend cross-check: identical counts arrays, not just sampled."""
+    for queue in ("MSQ", "OptUnlinkedQ"):
+        base = dict(queue=queue, model="eadr", instances=8, ops=48,
+                    chunk=24, seed=13)
+        rn = run_fleet(FleetConfig(backend="numpy", **base))
+        rj = run_fleet(FleetConfig(backend="jax", **base))
+        assert np.array_equal(rn.counts, rj.counts)
