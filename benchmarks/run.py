@@ -234,12 +234,26 @@ def fastpath_smoke_main(argv) -> None:
       allocator seam + GC pause, isolating those two contributions;
     * ``compiled``     -- the full fast path at full scale.
 
-    Two gates, both enforced: the compiled path must be ``--min-speedup``
-    (default 10x) cheaper per op than the per-op stack at its practical
-    cap, and ``--min-speedup-same-scale`` (default 3x) cheaper than the
-    per-op stack at the identical full scale, inside ``--budget-s`` wall
-    clock.  All four us/op figures are printed and written to the CSV, so
-    neither ratio hides the other.
+    Three gates, all enforced: the compiled path must be ``--min-speedup``
+    (default 30x) cheaper per op than the per-op stack at its practical
+    cap, ``--min-speedup-same-scale`` (default 4x) cheaper than the
+    per-op stack at the identical full scale, and absolutely cheaper than
+    ``--max-us-per-op`` (default 10 us -- the columnar engine measures
+    ~4.5-8 us/op run to run on the reference container; the margin
+    absorbs CI-runner noise), inside ``--budget-s`` wall clock.  All four
+    us/op figures are printed and written to the CSV, so no ratio hides
+    another.
+
+    The cap baseline keeps the pre-compiler stack's stock allocator
+    config (4096-node areas) -- it is a historical reference point, not a
+    tunable.  The three full-scale modes share ``--area-nodes`` so the
+    same-scale ratio compares like for like.
+
+    ``--differential`` reruns the compiled workload on the legacy record
+    path (``QueueHarness(records="legacy")``) and requires every
+    per-thread Stats field to be bit-identical to the columnar run -- the
+    CI columnar-vs-legacy differential smoke, at full smoke scale rather
+    than the equivalence suite's test sizes.
     """
     ap = argparse.ArgumentParser(
         prog="run.py fastpath-smoke",
@@ -253,15 +267,29 @@ def fastpath_smoke_main(argv) -> None:
     ap.add_argument("--queues", default="DurableMSQ,OptUnlinkedQ")
     ap.add_argument("--workload", default="mixed5050")
     ap.add_argument("--model", default="optane-clwb")
-    ap.add_argument("--min-speedup", type=float, default=10.0,
+    ap.add_argument("--area-nodes", type=int, default=1024,
+                    help="designated-area size (nodes/area) for the three "
+                         "full-scale modes (default 1024: right-sized for "
+                         "this workload's ~800 allocs/thread -- the stock "
+                         "4096 spends most of an area's zeroing cost on "
+                         "nodes the smoke never allocates); the per-op@cap "
+                         "baseline keeps the pre-compiler stock 4096")
+    ap.add_argument("--min-speedup", type=float, default=30.0,
                     help="required compiled (at --ops) vs per-op (at "
-                         "--cap-ops) per-op speedup (default 10x)")
-    ap.add_argument("--min-speedup-same-scale", type=float, default=2.5,
+                         "--cap-ops) per-op speedup (default 30x; measured "
+                         "~43-75x against the stock-config cap baseline)")
+    ap.add_argument("--min-speedup-same-scale", type=float, default=4.0,
                     help="required compiled vs per-op speedup at the "
-                         "identical --ops scale (default 2.5x; measured "
-                         "~3-4x, the margin absorbs CI-runner noise)")
+                         "identical --ops scale (default 4x; measured "
+                         "~5-9x, the margin absorbs CI-runner noise)")
+    ap.add_argument("--max-us-per-op", type=float, default=10.0,
+                    help="absolute ceiling on compiled us/op (default 10; "
+                         "measured ~4.5-8 on the reference container)")
     ap.add_argument("--budget-s", type=float, default=60.0,
                     help="wall-clock budget per compiled run")
+    ap.add_argument("--differential", action="store_true",
+                    help="rerun the compiled workload with records='legacy' "
+                         "and require bit-identical per-thread Stats")
     ap.add_argument("--out", default=None, help="CSV destination")
     args = ap.parse_args(argv)
     ops_per_thread = max(1, -(-args.ops // args.threads))
@@ -270,14 +298,17 @@ def fastpath_smoke_main(argv) -> None:
     cap_total = cap_per_thread * args.threads
     modes = [
         # (label, ops/thread, compiled?, vectorized allocator seam?,
-        #  pause GC?) -- the first two reproduce the stack as it stood
-        # before the schedule compiler: every primitive and every
-        # allocator-area zeroing replayed one Python call at a time, with
-        # the collector running.
-        ("per-op@cap", cap_per_thread, False, False, False),
-        ("per-op", ops_per_thread, False, False, False),
-        ("per-op+bulk-alloc", ops_per_thread, False, True, True),
-        ("compiled", ops_per_thread, True, True, True),
+        #  pause GC?, area nodes) -- the first two reproduce the stack as
+        # it stood before the schedule compiler: every primitive and
+        # every allocator-area zeroing replayed one Python call at a
+        # time, with the collector running.  The cap baseline keeps the
+        # pre-compiler stock area size; the full-scale modes share
+        # --area-nodes.
+        ("per-op@cap", cap_per_thread, False, False, False, 4096),
+        ("per-op", ops_per_thread, False, False, False, args.area_nodes),
+        ("per-op+bulk-alloc", ops_per_thread, False, True, True,
+         args.area_nodes),
+        ("compiled", ops_per_thread, True, True, True, args.area_nodes),
     ]
     rows, failures = [], []
     print(f"# fastpath-smoke: {args.workload} x {args.threads} threads x "
@@ -285,9 +316,9 @@ def fastpath_smoke_main(argv) -> None:
     print("name,us_per_call,derived")
     for qname in args.queues.split(","):
         cell = {}
-        for label, opt, compiled, bulk, pause_gc in modes:
+        for label, opt, compiled, bulk, pause_gc, area_nodes in modes:
             h = QueueHarness(ALL_QUEUES[qname], nthreads=args.threads,
-                             model=args.model)
+                             model=args.model, area_nodes=area_nodes)
             h.nvram.enable_bulk_init = bulk
             plans, prefill = make_plans(args.workload, args.threads,
                                         opt, seed=0)
@@ -300,6 +331,9 @@ def fastpath_smoke_main(argv) -> None:
             assert res.ops_completed == n
             us = wall * 1e6 / n
             cell[label] = us
+            if compiled:
+                columnar_stats = {t: h.nvram.stats[t].snapshot()
+                                  for t in range(args.threads)}
             rows.append({
                 "queue": qname, "workload": args.workload,
                 "model": args.model, "threads": args.threads, "mode": label,
@@ -328,6 +362,50 @@ def fastpath_smoke_main(argv) -> None:
             failures.append(
                 f"{qname}: {speedup_same:.1f}x at same scale < "
                 f"{args.min_speedup_same_scale:.0f}x required")
+        if cell["compiled"] > args.max_us_per_op:
+            failures.append(
+                f"{qname}: compiled {cell['compiled']:.2f} us/op > "
+                f"{args.max_us_per_op:.1f} us ceiling")
+        if args.differential:
+            h = QueueHarness(ALL_QUEUES[qname], nthreads=args.threads,
+                             model=args.model, area_nodes=args.area_nodes,
+                             records="legacy")
+            h.nvram.enable_bulk_init = True
+            plans, prefill = make_plans(args.workload, args.threads,
+                                        ops_per_thread, seed=0)
+            for i in range(prefill):
+                h.queue.enqueue(0, ("pre", i))
+            t0 = time.perf_counter()
+            res = h.run_batched(plans, compiled=True, pause_gc=True)
+            wall = time.perf_counter() - t0
+            assert res.ops_completed == total
+            mismatches = [
+                (t, f)
+                for t in range(args.threads)
+                for f in columnar_stats[t].__dict__
+                if getattr(h.nvram.stats[t], f) != getattr(
+                    columnar_stats[t], f)
+            ]
+            rows.append({
+                "queue": qname, "workload": args.workload,
+                "model": args.model, "threads": args.threads,
+                "mode": "compiled-legacy", "ops": total,
+                "wall_s": round(wall, 3),
+                "us_per_op": round(wall * 1e6 / total, 3),
+                "fast_ops": h.fast.fast_ops if h.fast else 0,
+                "bailed_ops": h.fast.bailed_ops if h.fast else 0,
+                "speedup_vs_cap": "", "speedup_same_scale": "",
+            })
+            print(f"fastpath/{qname}/differential,"
+                  f"{wall * 1e6 / total:.3f},"
+                  f"legacy_stats={'MISMATCH' if mismatches else 'identical'}")
+            if mismatches:
+                t, f = mismatches[0]
+                failures.append(
+                    f"{qname}: legacy records diverge from columnar on "
+                    f"{len(mismatches)} Stats fields (first: thread {t} "
+                    f"{f}: legacy={getattr(h.nvram.stats[t], f)} "
+                    f"columnar={getattr(columnar_stats[t], f)})")
         if wall_compiled > args.budget_s:
             failures.append(f"{qname}: compiled run took {wall_compiled}s "
                             f"(> {args.budget_s}s budget)")

@@ -35,6 +35,7 @@ from .contention import ContentionModel
 from .memmodel import MemoryModel
 from .nvram import NVRAM, Stats
 from .opsched import FastPathExecutor
+from .records import EventsView, OpRecord, OpsView, RecordStore
 from .scheduler import ClockScheduler, Scheduler
 from .ssmem import SSMem
 from .queue_base import QueueAlgorithm
@@ -54,18 +55,15 @@ ALL_QUEUES: Dict[str, Type[QueueAlgorithm]] = {
 DURABLE_QUEUES = {k: v for k, v in ALL_QUEUES.items() if k != "MSQ"}
 
 
-@dataclass
-class OpRecord:
-    tid: int
-    kind: str            # 'enq' | 'deq'
-    item: Any = None     # for enq: item; for deq: returned item (or None)
-    completed: bool = False
+# OpRecord lives in repro.core.records (the columnar store materializes
+# them on demand); importing it here keeps the historical
+# ``repro.core.harness.OpRecord`` import path working.
 
 
 @dataclass
 class RunResult:
     crashed: bool
-    ops: List[OpRecord]
+    ops: List[OpRecord]          # list (legacy mode) or live OpsView
     events: List[tuple]          # serialized volatile-linearization events
     stats: Stats
     ops_completed: int
@@ -86,24 +84,102 @@ class QueueHarness:
     (:class:`repro.core.nvram.NVRAM`, default) or the sequential reference
     (:class:`repro.core.nvram_ref.ReferenceNVRAM`) used as a differential
     oracle.
+
+    ``records`` selects the op/event bookkeeping: ``"columnar"`` (default)
+    routes everything through a :class:`repro.core.records.RecordStore`
+    (``self.ops`` / ``self.events`` become live views over its columns;
+    compiled fast-path ops stage three scalars each and materialize in
+    vector bursts); ``"legacy"`` keeps the original plain Python lists of
+    :class:`~repro.core.records.OpRecord` / event tuples as the
+    differential reference (``tests/test_columnar_equivalence.py`` pins
+    the two bit-identical).
     """
 
     def __init__(self, queue_cls: Type[QueueAlgorithm], nthreads: int,
                  area_nodes: int = 4096,
                  model: Union[str, MemoryModel, None] = None,
-                 nvram_cls: Type = NVRAM):
+                 nvram_cls: Type = NVRAM, records: str = "columnar"):
         self.queue_cls = queue_cls
         self.nthreads = nthreads
         self.nvram = nvram_cls(nthreads, model=model)
         self.mem = SSMem(self.nvram, nthreads, area_nodes=area_nodes)
-        self.events: List[tuple] = []
+        if records == "columnar":
+            self._rstore: Optional[RecordStore] = RecordStore(nthreads)
+            self._ops = OpsView(self._rstore)
+            self._events = EventsView(self._rstore)
+        elif records == "legacy":
+            self._rstore = None
+            self._ops: List[OpRecord] = []
+            self._events: List[tuple] = []
+        else:
+            raise ValueError(
+                f"records must be 'columnar' or 'legacy', got {records!r}")
+        self.records = records
         self.queue = queue_cls(self.nvram, self.mem, nthreads,
-                               on_event=self.events.append)
-        self.ops: List[OpRecord] = []
+                               on_event=self._events.append)
         self.contention: Optional[ContentionModel] = None   # last run_batched
         self.fast: Optional[FastPathExecutor] = None        # last run_batched
         self.last_scheduler: Optional[Scheduler] = None     # last run_scheduled
         self._trace = None            # active repro.trace recorder, if any
+
+    # ------------------------------------------------------------ record state
+    @property
+    def ops(self):
+        """Op records: a plain list (legacy mode) or a live
+        :class:`repro.core.records.OpsView` over the columnar store."""
+        return self._ops
+
+    @ops.setter
+    def ops(self, value) -> None:
+        if self._rstore is not None:
+            self._rstore.reset_ops(value)
+        else:
+            self._ops = value
+
+    @property
+    def events(self):
+        """Serialized events: a plain list (legacy mode) or a live
+        :class:`repro.core.records.EventsView` over the columnar store."""
+        return self._events
+
+    @events.setter
+    def events(self, value) -> None:
+        if self._rstore is not None:
+            rs = self._rstore
+            rs.clear_events()
+            for ev in value:
+                rs.append_event(ev)
+        else:
+            self._events = value
+
+    def _completed_count(self) -> int:
+        if self._rstore is not None:
+            return self._rstore.completed_count()
+        return sum(1 for r in self._ops if r.completed)
+
+    def record_snapshot(self):
+        """Cursor snapshot of the op/event history, paired with
+        :meth:`NVRAM.snapshot` at crash-sweep boundaries: ``(n_ops,
+        n_events)`` in both record modes (the columnar store's cursors ARE
+        its snapshot; see :meth:`repro.core.records.RecordStore.snapshot`)."""
+        if self._rstore is not None:
+            return self._rstore.snapshot()
+        return (len(self._ops), len(self._events))
+
+    def record_restore(self, snap) -> None:
+        """Truncate the op/event history back to a :meth:`record_snapshot`
+        (records only shrink: a snapshot cannot resurrect rows dropped by a
+        later restore)."""
+        if self._rstore is not None:
+            self._rstore.restore(snap)
+        else:
+            n_ops, n_events = snap
+            if n_ops > len(self._ops) or n_events > len(self._events):
+                raise ValueError(
+                    f"record_restore past live history: {snap!r} vs "
+                    f"({len(self._ops)}, {len(self._events)})")
+            del self._ops[n_ops:]
+            del self._events[n_events:]
 
     # ------------------------------------------------------------- workloads
     def make_worker(self, tid: int, plan: List[Tuple[str, Any]]):
@@ -150,7 +226,7 @@ class QueueHarness:
             crashed = sched.run(workers)
         finally:
             self._trace_end(trace)
-        done = sum(1 for r in self.ops if r.completed)
+        done = self._completed_count()
         return RunResult(crashed=crashed, ops=self.ops, events=self.events,
                          stats=self.nvram.total_stats(), ops_completed=done,
                          sim_time_ns=self.nvram.sim_time_ns())
@@ -165,7 +241,7 @@ class QueueHarness:
             w(0)
         finally:
             self._trace_end(trace)
-        done = sum(1 for r in self.ops if r.completed)
+        done = self._completed_count()
         return RunResult(crashed=False, ops=self.ops, events=self.events,
                          stats=self.nvram.total_stats(), ops_completed=done,
                          sim_time_ns=self.nvram.sim_time_ns())
@@ -201,14 +277,9 @@ class QueueHarness:
             contention = ContentionModel()
         elif contention is False:
             contention = None
-        op_lists: List[List] = []
         op_kinds: List[List[str]] = []
         op_items: List[List] = []
-        for t, plan in enumerate(plans):
-            thunks = []
-            for kind, item in plan:
-                thunks.append(self._make_op(t, kind, item))
-            op_lists.append(thunks)
+        for plan in plans:
             op_kinds.append([kind for kind, _ in plan])
             op_items.append([item for _, item in plan])
         if contention is not None:
@@ -221,11 +292,30 @@ class QueueHarness:
         if compiled and trace is None and isinstance(self.nvram, NVRAM):
             fast = self._make_fast_executor()
         self.fast = fast
+        if fast is not None and self._rstore is not None:
+            # bind the columnar store's staging lists into the compiled
+            # fns; the ClockScheduler then dispatches them directly
+            fast.attach_store(self._rstore)
+        # columnar dispatch replays every steady-state op compiled and only
+        # touches a thunk on bail, so building one closure per planned op
+        # up front would dominate the fast path; hand the scheduler the
+        # factory instead.  The predicate mirrors ClockScheduler.run's
+        # dispatch guard exactly.
+        columnar = (fast is not None and fast.rstore is not None
+                    and contention is None and fast.timed
+                    and not self.nvram.contention_tracking)
+        if columnar:
+            op_lists = None
+        else:
+            op_lists = [[self._make_op(t, kind, item)
+                         for kind, item in plan]
+                        for t, plan in enumerate(plans)]
         sched = ClockScheduler(self.nvram, contention=contention, fast=fast,
                                pause_gc=pause_gc)
         self._trace_begin(trace, len(plans), None, "batched")
         try:
-            sched.run(op_lists, op_kinds=op_kinds, op_items=op_items)
+            sched.run(op_lists, op_kinds=op_kinds, op_items=op_items,
+                      make_op=self._make_op)
         finally:
             if fast is not None:
                 fast.flush_counts()   # land deferred compiled-op charges
@@ -233,7 +323,7 @@ class QueueHarness:
             # don't leave later (uncontended) runs on this engine paying
             # for the per-primitive epoch/CAS-tag stamping
             self.nvram.contention_tracking = False
-        done = sum(1 for r in self.ops if r.completed)
+        done = self._completed_count()
         return RunResult(crashed=False, ops=self.ops, events=self.events,
                          stats=self.nvram.total_stats(), ops_completed=done,
                          sim_time_ns=self.nvram.sim_time_ns())
@@ -243,23 +333,42 @@ class QueueHarness:
         or None when the queue declares no op_schedule()."""
         if self.queue.op_schedule() is None:
             return None
-
-        def record(tid: int, kind: str, item: Any) -> None:
-            self.ops.append(OpRecord(tid=tid, kind=kind, item=item,
-                                     completed=True))
+        rs = self._rstore
+        if rs is not None:
+            def record(tid: int, kind: str, item: Any) -> None:
+                rs.add_completed_op(tid, kind, item)
+        else:
+            def record(tid: int, kind: str, item: Any) -> None:
+                self._ops.append(OpRecord(tid=tid, kind=kind, item=item,
+                                          completed=True))
         return FastPathExecutor(self.queue, self.nvram, record=record)
 
     def _make_op(self, tid: int, kind: str, item: Any):
-        def op():
-            if self._trace is not None:
-                self._trace.begin_op(tid, kind)
-            rec = OpRecord(tid=tid, kind=kind, item=item)
-            self.ops.append(rec)
-            if kind == "enq":
+        rs = self._rstore
+        if rs is None:
+            def op():
+                if self._trace is not None:
+                    self._trace.begin_op(tid, kind)
+                rec = OpRecord(tid=tid, kind=kind, item=item)
+                self._ops.append(rec)
+                if kind == "enq":
+                    self.queue.enqueue(tid, item)
+                else:
+                    rec.item = self.queue.dequeue(tid)
+                rec.completed = True
+        elif kind == "enq":
+            def op():
+                if self._trace is not None:
+                    self._trace.begin_op(tid, kind)
+                i = rs.begin_op(tid, "enq", item)
                 self.queue.enqueue(tid, item)
-            else:
-                rec.item = self.queue.dequeue(tid)
-            rec.completed = True
+                rs.complete_op(i)
+        else:
+            def op():
+                if self._trace is not None:
+                    self._trace.begin_op(tid, kind)
+                i = rs.begin_op(tid, "deq", None)
+                rs.complete_op(i, self.queue.dequeue(tid))
         return op
 
     # --------------------------------------------------------------- recovery

@@ -1,4 +1,4 @@
-"""Simulated byte-addressable NVRAM -- batched, array-backed cost engine.
+"""Simulated byte-addressable NVRAM -- batched, columnar cost engine.
 
 This is the substrate for the faithful reproduction of
 "Durable Queues: The Second Amendment" (Sela & Petrank, SPAA'21).
@@ -26,10 +26,16 @@ Engine representation (this file is the fast path; the original dict engine
 survives as :class:`repro.core.nvram_ref.ReferenceNVRAM`, the oracle the
 differential tests compare against):
 
-* flat numpy object arrays hold the coherent view and the persistent image
-  (persistent and volatile address spaces are each dense);
-* per-line state (cached / flush-invalidated / ever-flushed) lives in flat
-  ``uint8`` arrays indexed by line number;
+* flat Python lists hold the coherent view and the persistent image
+  (persistent and volatile address spaces are each dense; scalar list
+  indexing beats numpy object arrays by ~2x per access, which matters on
+  the compiled fast path);
+* per-line flush state is ONE packed ``_lstate`` bytearray -- bit 0 cached,
+  bit 1 flush-invalidated, bit 2 ever-flushed -- so an access classifies
+  and transitions with two byte-table lookups (``TOUCH_CLASS`` /
+  ``TOUCH_NEXT``) instead of three array reads and two writes, and bulk
+  transitions (crash wipe, allocator-area init) are single
+  ``bytes.translate`` passes;
 * per-line *dirty prefixes* (the unapplied store logs that give Assumption-1
   crash semantics) are kept per line and only touched by stores, fences and
   crashes -- never by loads;
@@ -40,6 +46,13 @@ differential tests compare against):
   model's latency vector, so multi-thread throughput is
   ``ops / max(thread_clock)`` -- reproducing the paper's Fig. 2 *orderings*
   without real NVRAM hardware.
+
+Every mutable container above is **identity-stable**: growth, restore and
+crash mutate the existing list/bytearray/dict in place instead of rebinding
+the attribute.  The compiled fast path (``repro.core.opsched``) binds these
+containers into generated functions as defaults, and the columnar record
+store batches whole bursts of ops into one ``charge_counts`` pass -- both
+depend on the bindings staying live across snapshot/restore/crash.
 
 Latency constants (ns) follow published Optane DC characterization
 [van Renen et al., DaMoN'19; Yang et al., FAST'20].
@@ -64,6 +77,28 @@ NS = float
 (EV_READ, EV_WRITE, EV_CAS, EV_FLUSH, EV_FENCE, EV_FENCE_LINE, EV_MOVNTI,
  EV_HIT, EV_DRAM, EV_COLD_DRAM, EV_COLD_NVM, EV_POSTFLUSH) = range(12)
 N_EV = 12
+
+# ------------------------------------------------- packed line-state bits
+# One byte per line in NVRAM._lstate.  Reachable values are
+# {0, 1, 4, 5, 6}: cached and flush-invalidated are mutually exclusive,
+# and a line can only be invalidated by a flush (which also sets everfl).
+LS_CACHED, LS_FINVAL, LS_EVERFL = 1, 2, 4
+
+# Byte tables: packed state -> accounting outcome / post-access state for
+# a fetching access (read/write/CAS RFO).  Shared with the codegen backend
+# in repro.core.opsched, which inlines the same two lookups per line step.
+TOUCH_CLASS = [
+    EV_HIT if s & LS_CACHED else
+    EV_POSTFLUSH if s & LS_FINVAL else
+    EV_COLD_NVM if s & LS_EVERFL else
+    EV_COLD_DRAM
+    for s in range(256)]
+TOUCH_NEXT = [s if s & LS_CACHED else (s & LS_EVERFL) | LS_CACHED
+              for s in range(256)]
+
+# bytes.translate tables for bulk line-state transitions
+_T_EVERFL_ONLY = bytes(s & LS_EVERFL for s in range(256))      # crash wipe
+_T_RECACHE = bytes((s & LS_EVERFL) | LS_CACHED for s in range(256))
 
 # -------------------------------------------------- trace primitive codes
 # Consumed by the opt-in trace tap (repro.trace.recorder.TraceRecorder).
@@ -128,41 +163,44 @@ class EngineSnapshot:
     The event buffer and counter matrix are deliberately excluded: Stats
     are monotonic instruments of work *performed*, and restoring memory
     state must not rewind or perturb them (the crash-sweep tests assert a
-    snapshot/restore round-trip leaves Stats bit-identical).
+    snapshot/restore round-trip leaves Stats bit-identical).  Op-record
+    cursors live one layer up, in :class:`repro.core.records.RecordStore`
+    (snapshotted alongside this by the crash capture seam).
 
     ``volatile=False`` captures a crash-sufficient snapshot only (the
-    persistent image, store logs, pending-persist sets and line history):
-    restoring one is only meaningful when immediately followed by
-    :meth:`NVRAM.crash`, which discards volatile state anyway.  The crash
-    sweep takes one such snapshot per scheduler step, so the smaller
-    footprint matters.
+    persistent image, store logs, pending-persist sets and line history --
+    ``lstate`` is masked down to the ever-flushed bit): restoring one is
+    only meaningful when immediately followed by :meth:`NVRAM.crash`,
+    which discards volatile state anyway.  The crash sweep takes one such
+    snapshot per scheduler step, so the smaller footprint matters.
     """
 
     __slots__ = ("nthreads", "brk", "vbrk", "regions", "pmem", "log",
-                 "log_start", "pending", "everfl", "crashed", "has_volatile",
-                 "vis", "cached", "finval", "vval", "vtouched")
+                 "log_start", "pending", "lstate", "crashed", "has_volatile",
+                 "vis", "vval", "vtouched")
 
     def __init__(self, nv: "NVRAM", volatile: bool = True):
         self.nthreads = nv.nthreads
         self.brk = nv._brk
         self.vbrk = nv._vbrk
         self.regions = tuple(nv.regions)
-        self.pmem = nv._pmem[:nv._brk].copy()
+        self.pmem = nv._pmem[:nv._brk]          # list slice == copy
         self.log = {ln: list(entries) for ln, entries in nv._log.items()
                     if entries}
-        self.log_start = dict(nv._log_start)
-        self.pending = {t: list(pl) for t, pl in nv._pending.items()}
         nl = -(-nv._brk // LINE_WORDS)
-        self.everfl = nv._everfl[:nl].copy()
+        self.log_start = nv._log_start[:nl]
+        self.pending = {t: list(pl) for t, pl in nv._pending.items()}
         self.crashed = nv.crashed
         self.has_volatile = volatile
         if volatile:
-            self.vis = nv._vis[:nv._brk].copy()
-            self.cached = nv._cached[:nl].copy()
-            self.finval = nv._finval[:nl].copy()
+            self.lstate = bytes(nv._lstate[:nl])
+            self.vis = nv._vis[:nv._brk]
             vused = nv._vbrk - NVRAM._VOLATILE_BASE
-            self.vval = nv._vval[:vused].copy()
-            self.vtouched = nv._vtouched[:vused].copy()
+            self.vval = nv._vval[:vused]
+            self.vtouched = bytes(nv._vtouched[:vused])
+        else:
+            # crash-sufficient: only the ever-flushed history matters
+            self.lstate = bytes(nv._lstate[:nl]).translate(_T_EVERFL_ONLY)
 
 
 @dataclass
@@ -191,7 +229,7 @@ class Stats:
 
 
 class NVRAM:
-    """Array-backed two-level (cache + persistent) memory simulator."""
+    """Two-level (cache + persistent) memory simulator, columnar state."""
 
     _VOLATILE_BASE = 1 << 40   # volatile addresses live far above
 
@@ -203,24 +241,26 @@ class NVRAM:
         self.model = get_memory_model(model)
         self._ns_vec = _latency_vector(self.model)
         # --- persistent space (dense, addr is the index) ------------------
+        # All containers below are identity-stable: grown/cleared in place,
+        # never rebound (compiled fast-path functions hold them as bound
+        # defaults across snapshot/restore/crash).
         cap = 1024
         self._pcap = cap
-        self._pmem = np.empty(cap, dtype=object)    # persistent image
-        self._vis = np.empty(cap, dtype=object)     # coherent (cached) view
-        nl = cap // LINE_WORDS
-        self._cached = np.zeros(nl, dtype=np.uint8)
-        self._finval = np.zeros(nl, dtype=np.uint8)   # flush-invalidated
-        self._everfl = np.zeros(nl, dtype=np.uint8)   # ever flushed
+        self._pmem: List[Any] = [None] * cap        # persistent image
+        self._vis: List[Any] = [None] * cap         # coherent (cached) view
+        # packed per-line flush state (LS_CACHED|LS_FINVAL|LS_EVERFL bits)
+        self._lstate = bytearray(cap // LINE_WORDS)
         # per-line dirty prefix: unapplied stores (crash Assumption 1)
         self._log: Dict[int, List[Tuple[int, Any]]] = {}
-        self._log_start: Dict[int, int] = {}
+        # absolute log position already persisted, indexed by line
+        self._log_start: List[int] = [0] * (cap // LINE_WORDS)
         # pending persists per thread: ('flush', line, upto) | ('nt', addr, v)
         self._pending: Dict[int, List[Tuple]] = {t: [] for t in range(nthreads)}
         # --- volatile space (dense above _VOLATILE_BASE) ------------------
         vcap = 1024
         self._vcap = vcap
-        self._vval = np.empty(vcap, dtype=object)
-        self._vtouched = np.zeros(vcap, dtype=bool)
+        self._vval: List[Any] = [None] * vcap
+        self._vtouched = bytearray(vcap)
         # --- address-space management (address 0 is reserved as NULL) -----
         self._brk = LINE_WORDS
         self._vbrk = self._VOLATILE_BASE
@@ -280,12 +320,12 @@ class NVRAM:
         """TS_* classification of `addr`'s line, pre-access (tap only)."""
         if addr >= self._VOLATILE_BASE:
             return TS_VOLATILE
-        line = addr // LINE_WORDS
-        if self._cached[line]:
+        s = self._lstate[addr // LINE_WORDS]
+        if s & LS_CACHED:
             return TS_CACHED
-        if self._finval[line]:
+        if s & LS_FINVAL:
             return TS_INVALIDATED
-        if self._everfl[line]:
+        if s & LS_EVERFL:
             return TS_COLD_NVM
         return TS_COLD_DRAM
 
@@ -294,30 +334,20 @@ class NVRAM:
         cap = self._pcap
         while cap < need:
             cap *= 2
-        pmem = np.empty(cap, dtype=object)
-        pmem[:self._pcap] = self._pmem
-        vis = np.empty(cap, dtype=object)
-        vis[:self._pcap] = self._vis
-        nl, onl = cap // LINE_WORDS, self._pcap // LINE_WORDS
-        cached = np.zeros(nl, dtype=np.uint8)
-        cached[:onl] = self._cached
-        finval = np.zeros(nl, dtype=np.uint8)
-        finval[:onl] = self._finval
-        everfl = np.zeros(nl, dtype=np.uint8)
-        everfl[:onl] = self._everfl
-        self._pmem, self._vis = pmem, vis
-        self._cached, self._finval, self._everfl = cached, finval, everfl
+        add = cap - self._pcap
+        self._pmem.extend([None] * add)
+        self._vis.extend([None] * add)
+        self._lstate.extend(bytes(add // LINE_WORDS))
+        self._log_start.extend([0] * (add // LINE_WORDS))
         self._pcap = cap
 
     def _grow_v(self, need: int) -> None:
         cap = self._vcap
         while cap < need:
             cap *= 2
-        vval = np.empty(cap, dtype=object)
-        vval[:self._vcap] = self._vval
-        vtouched = np.zeros(cap, dtype=bool)
-        vtouched[:self._vcap] = self._vtouched
-        self._vval, self._vtouched = vval, vtouched
+        add = cap - self._vcap
+        self._vval.extend([None] * add)
+        self._vtouched.extend(bytes(add))
         self._vcap = cap
 
     def alloc_region(self, nwords: int, name: str = "region",
@@ -349,18 +379,9 @@ class NVRAM:
         """Account for bringing `line` into cache (persistent space)."""
         if self.contention_tracking:
             self._line_epoch[line] = self.epoch
-        if self._cached[line]:
-            self._ebuf.append(tid * N_EV + EV_HIT)
-            return
-        if self._finval[line]:
-            # the paper's penalty: reading back explicitly flushed content
-            self._ebuf.append(tid * N_EV + EV_POSTFLUSH)
-        elif self._everfl[line]:
-            self._ebuf.append(tid * N_EV + EV_COLD_NVM)
-        else:
-            self._ebuf.append(tid * N_EV + EV_COLD_DRAM)
-        self._cached[line] = 1
-        self._finval[line] = 0
+        s = self._lstate[line]
+        self._ebuf.append(tid * N_EV + TOUCH_CLASS[s])
+        self._lstate[line] = TOUCH_NEXT[s]
 
     # ------------------------------------------------------------ primitives
     def read(self, addr: int) -> Any:
@@ -375,7 +396,7 @@ class NVRAM:
                 self._ebuf.append(tid * N_EV + EV_HIT)
             else:
                 self._ebuf.append(tid * N_EV + EV_DRAM)
-                self._vtouched[i] = True
+                self._vtouched[i] = 1
             return self._vval[i]
         self._touch(addr // LINE_WORDS, tid)
         return self._vis[addr]
@@ -392,7 +413,7 @@ class NVRAM:
                 self._ebuf.append(tid * N_EV + EV_HIT)
             else:
                 self._ebuf.append(tid * N_EV + EV_DRAM)
-                self._vtouched[i] = True
+                self._vtouched[i] = 1
             self._vval[i] = value
             return
         line = addr // LINE_WORDS
@@ -422,11 +443,10 @@ class NVRAM:
             i = base_addr - self._VOLATILE_BASE
             for k, v in enumerate(values):
                 self._vval[i + k] = v
-                self._vtouched[i + k] = True
+                self._vtouched[i + k] = 1
             return
         line = base_addr // LINE_WORDS
-        self._cached[line] = 1
-        self._finval[line] = 0
+        self._lstate[line] = (self._lstate[line] & LS_EVERFL) | LS_CACHED
         if self.model.persist_on_store:
             for k, v in enumerate(values):
                 self._vis[base_addr + k] = v
@@ -457,7 +477,7 @@ class NVRAM:
                 self._ebuf.append(tid * N_EV + EV_HIT)
             else:
                 self._ebuf.append(tid * N_EV + EV_DRAM)
-                self._vtouched[i] = True
+                self._vtouched[i] = 1
             ok = self._vval[i] == expected
             if ok:
                 self._vval[i] = new
@@ -485,12 +505,12 @@ class NVRAM:
         self._ebuf.append(tid * N_EV + EV_FLUSH)
         assert addr < self._VOLATILE_BASE, "flushing volatile memory"
         line = addr // LINE_WORDS
-        upto_abs = self._log_start.get(line, 0) + len(self._log.get(line, ()))
+        upto_abs = self._log_start[line] + len(self._log.get(line, ()))
         self._pending[tid].append(("flush", line, upto_abs))
         if self.model.flush_invalidates:
-            self._cached[line] = 0
-            self._finval[line] = 1
-        self._everfl[line] = 1
+            self._lstate[line] = LS_FINVAL | LS_EVERFL
+        else:
+            self._lstate[line] |= LS_EVERFL
 
     def movnti(self, addr: int, value: Any) -> None:
         """Non-temporal store: straight to the memory write queue; does not
@@ -535,7 +555,7 @@ class NVRAM:
         if ent[0] == "flush":
             _, line, upto_abs = ent
             log = self._log.get(line, [])
-            start = self._log_start.get(line, 0)
+            start = self._log_start[line]
             count = upto_abs - start
             if count <= 0:
                 return          # already applied by a later/earlier fence
@@ -569,7 +589,8 @@ class NVRAM:
         (the allocators zero or fully initialize before use).  Cost
         accounting is untouched: Stats remain whatever the engine has
         accumulated, because restore models *state transplantation*, not
-        un-executing work.
+        un-executing work.  Every container is refilled in place (the
+        compiled fast path holds them as bound defaults).
         """
         if snap.nthreads != self.nthreads:
             raise ValueError(
@@ -584,30 +605,31 @@ class NVRAM:
         self._vbrk = snap.vbrk
         self.regions = list(snap.regions)
         self._pmem[:snap.brk] = snap.pmem
-        nl = len(snap.everfl)
-        self._everfl[:] = 0
-        self._everfl[:nl] = snap.everfl
-        self._log = {ln: list(entries) for ln, entries in snap.log.items()}
-        self._log_start = dict(snap.log_start)
-        self._pending = {t: list(pl) for t, pl in snap.pending.items()}
+        nl = len(snap.log_start)
+        ls = self._log_start
+        ls[:] = [0] * len(ls)
+        ls[:nl] = snap.log_start
+        self._log.clear()
+        for ln, entries in snap.log.items():
+            self._log[ln] = list(entries)
+        for t, pl in snap.pending.items():
+            self._pending[t][:] = pl
         self.crashed = snap.crashed
+        st = self._lstate
+        st[:] = bytes(len(st))
+        st[:nl] = snap.lstate          # full bits, or everfl-only (crash-
+        vt = self._vtouched            # sufficient snapshot)
         if snap.has_volatile:
             self._vis[:snap.brk] = snap.vis
-            self._cached[:] = 0
-            self._cached[:nl] = snap.cached
-            self._finval[:] = 0
-            self._finval[:nl] = snap.finval
             self._vval[:vused] = snap.vval
-            self._vtouched[:] = False
-            self._vtouched[:vused] = snap.vtouched
+            vt[:] = bytes(len(vt))
+            vt[:vused] = snap.vtouched
         else:
             # crash-only snapshot: give the volatile level a post-crash-like
             # default (coherent view = persistent image, cold caches) so a
             # restore is well-defined even before crash() wipes it for real
             self._vis[:snap.brk] = snap.pmem
-            self._cached[:] = 0
-            self._finval[:] = 0
-            self._vtouched[:] = False
+            vt[:] = bytes(len(vt))
         # contention bookkeeping is a per-run measurement aid, not memory
         # state: clear it rather than time-travel it
         self._line_epoch.clear()
@@ -696,15 +718,15 @@ class NVRAM:
             raise ValueError(mode)
         # volatile state is gone: the coherent view collapses onto the
         # persistent image, DRAM space and all cache metadata are wiped
+        # (in place: the compiled fast path holds these containers)
         for plist in self._pending.values():
             plist.clear()
         self._log.clear()
-        self._log_start.clear()
-        self._vis = self._pmem.copy()
-        self._cached[:] = 0
-        self._finval[:] = 0
-        self._vval = np.empty(self._vcap, dtype=object)
-        self._vtouched[:] = False
+        self._log_start[:] = [0] * len(self._log_start)
+        self._vis[:] = self._pmem
+        self._lstate[:] = self._lstate.translate(_T_EVERFL_ONLY)
+        self._vval[:] = [None] * len(self._vval)
+        self._vtouched[:] = bytes(len(self._vtouched))
 
     # ------------------------------------------------------ recovery access
     def pread(self, addr: int) -> Any:
@@ -725,6 +747,22 @@ class NVRAM:
     def reset_after_recovery(self) -> None:
         """Recovery is complete: resume normal (cached) operation."""
         self.crashed = False
+
+    # --------------------------------------------------------- state export
+    def line_state_arrays(self, nlines: int) -> Tuple[np.ndarray, np.ndarray,
+                                                      np.ndarray]:
+        """Unpack the first `nlines` of ``_lstate`` into (cached, finval,
+        everfl) ``uint8`` arrays -- the fleet state exporter's layout
+        (:mod:`repro.fleet.state` tiles these across instances)."""
+        s = np.frombuffer(bytes(self._lstate[:nlines]), dtype=np.uint8)
+        return ((s & LS_CACHED).astype(np.uint8),
+                ((s & LS_FINVAL) >> 1).astype(np.uint8),
+                ((s & LS_EVERFL) >> 2).astype(np.uint8))
+
+    def vtouched_array(self, nwords: int) -> np.ndarray:
+        """First `nwords` of the volatile touched map as a ``uint8`` copy."""
+        return np.frombuffer(bytes(self._vtouched[:nwords]),
+                             dtype=np.uint8).copy()
 
     # ---------------------------------------------------- contention seam
     # The contention layer (repro.core.contention) lives ABOVE this cost
@@ -767,7 +805,10 @@ class NVRAM:
     # event-buffer appends.  Charging goes straight into the counter
     # matrix -- the same destination the bincount reduction feeds -- so
     # compiled and per-primitive execution produce identical counts and
-    # identical (dot-product) thread clocks.
+    # identical (dot-product) thread clocks.  The columnar record store
+    # (repro.core.records.RecordStore) batches a whole burst of compiled
+    # ops into a handful of charge_counts calls (one per distinct
+    # (outcome-key, tid, kind) triple).
     def charge_counts(self, tid: int, vec: np.ndarray) -> None:
         """Add one compiled op's (N_EV,) event-count vector to `tid`."""
         self._counts[tid] += vec
@@ -794,13 +835,14 @@ class NVRAM:
         c = self._counts[tid]
         c[EV_WRITE] += nlines          # one full-line store per line
         c[EV_HIT] += nlines
-        self._vis[lo:hi] = 0
-        self._pmem[lo:hi] = 0
+        zeros = [0] * (hi - lo)
+        self._vis[lo:hi] = zeros
+        self._pmem[lo:hi] = zeros
+        seg = slice(line0, line0 + nlines)
         if self.model.persist_on_store:
             # eADR: stores persist on visibility; pflush is elided and the
             # fence drains nothing
-            self._cached[line0:line0 + nlines] = 1
-            self._finval[line0:line0 + nlines] = 0
+            self._lstate[seg] = self._lstate[seg].translate(_T_RECACHE)
             c[EV_FENCE] += 1
             return
         # flush-based platforms: every line is flushed once, then one
@@ -809,12 +851,9 @@ class NVRAM:
         c[EV_FENCE] += 1
         c[EV_FENCE_LINE] += nlines
         if self.model.flush_invalidates:
-            self._cached[line0:line0 + nlines] = 0
-            self._finval[line0:line0 + nlines] = 1
+            self._lstate[seg] = bytes([LS_FINVAL | LS_EVERFL]) * nlines
         else:
-            self._cached[line0:line0 + nlines] = 1
-            self._finval[line0:line0 + nlines] = 0
-        self._everfl[line0:line0 + nlines] = 1
+            self._lstate[seg] = bytes([LS_CACHED | LS_EVERFL]) * nlines
         # the LINE_WORDS zero-stores per line were logged and drained by
         # the fence: logs end empty with the start cursor advanced (past
         # any pre-existing unapplied entries too -- the zeros overwrote
@@ -823,8 +862,7 @@ class NVRAM:
         log = self._log
         for ln in range(line0, line0 + nlines):
             pre = log.get(ln)
-            n = LINE_WORDS + (len(pre) if pre else 0)
-            ls[ln] = ls.get(ln, 0) + n
+            ls[ln] += LINE_WORDS + (len(pre) if pre else 0)
             if pre:
                 pre.clear()
 

@@ -47,15 +47,18 @@ for all 8 queues x 3 memory models x contention off/on/learned, and
 """
 from __future__ import annotations
 
+import heapq
 from collections import deque
 from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from .nvram import (EV_CAS, EV_COLD_DRAM, EV_COLD_NVM, EV_DRAM, EV_FENCE,
-                    EV_FENCE_LINE, EV_FLUSH, EV_HIT, EV_MOVNTI,
-                    EV_POSTFLUSH, EV_READ, EV_WRITE, LINE_WORDS, N_EV, NVRAM)
+from .nvram import (EV_CAS, EV_DRAM, EV_FENCE, EV_FENCE_LINE, EV_FLUSH,
+                    EV_HIT, EV_MOVNTI, EV_POSTFLUSH, EV_READ, EV_WRITE,
+                    LINE_WORDS, LS_CACHED, LS_EVERFL, LS_FINVAL, N_EV,
+                    NVRAM, TOUCH_CLASS, TOUCH_NEXT)
+from .records import MAX_STAGED_NCLASS, MAX_STAGED_THREADS, META_KEY_SHIFT
 
 NULL = 0
 
@@ -644,7 +647,12 @@ def _addr_src(a) -> str:
 def _line_src(a) -> str:
     if a[0] == 0:
         return str(a[1] // LINE_WORDS)
-    return f"({_addr_src(a)}) // {LINE_WORDS}"
+    s = _addr_src(a)
+    # bare names need no parens -- keeps the rendering canonical so the
+    # CSE pass unifies this with the K_LINE/K_LOGW spellings
+    if s.isidentifier():
+        return f"{s} // {LINE_WORDS}"
+    return f"({s}) // {LINE_WORDS}"
 
 
 def _val_src(v: Val) -> str:
@@ -667,37 +675,218 @@ def _val_src(v: Val) -> str:
 _VB = NVRAM._VOLATILE_BASE
 
 
+def _emit_prog(emit, op: CompiledOp, tracking: bool) -> None:
+    """Emit the effect-program body shared by both codegen variants.
+
+    Line-state transitions go through the engine's packed ``_lstate``
+    byte array: dynamic touches read one byte and apply the
+    ``TOUCH_CLASS``/``TOUCH_NEXT`` tables (bound as ``_CT``/``_NS``),
+    static transitions write the packed constant directly.  ``tracking``
+    emits the contention-epoch taps (legacy variant only; the columnar
+    variant is dispatched exclusively with tracking off).
+
+    Address, line-number and volatile-index expressions are pure within
+    one op body (they only read ``tid``/``item`` and the node locals
+    fixed up front), so repeats are hoisted into ``_c<n>`` locals --
+    common-subexpression elimination at the source level.  Value
+    expressions stay inline: they may read mutable queue state."""
+    cse: dict = {}
+
+    def ref(expr: str) -> str:
+        """Hoist a pure expression into a local, once per op body."""
+        if expr.isidentifier() or expr.lstrip("-").isdigit():
+            return expr
+        v = cse.get(expr)
+        if v is None:
+            v = f"_c{len(cse)}"
+            emit(f"    {v} = {expr}")
+            cse[expr] = v
+        return v
+
+    def vals_ref(vals: List[str]) -> str:
+        """One shared list object per distinct line-literal (the writers
+        only ever copy out of it, never mutate it)."""
+        return ref(f"[{', '.join(vals)}]")
+
+    def line_of(a: str) -> str:
+        """Line number of an already-rendered address expression."""
+        if a.lstrip("-").isdigit():
+            return str(int(a) // LINE_WORDS)
+        return ref(f"{a} // {LINE_WORDS}")
+
+    prog = op.prog
+    for pc, ins in enumerate(prog):
+        code = ins[0]
+        if code == K_CLASS_P:
+            ln = ref(_line_src(ins[1]))
+            if tracking:
+                emit("    if tk:")
+                emit(f"        le[{ln}] = ep")
+            emit(f"    key = key << 4 | _CT[(_s := lstate[{ln}])]")
+            emit(f"    lstate[{ln}] = _NS[_s]")
+        elif code == K_CLASS_V:
+            # branchless: untouched -> EV_DRAM (8), touched -> EV_HIT (7)
+            vi = ref(f"{_addr_src(ins[1])} - {_VB}")
+            emit(f"    key = key << 4 | ({EV_DRAM} - vtouched[{vi}])")
+            emit(f"    vtouched[{vi}] = 1")
+        elif code == K_STATE:
+            mode = ins[2]
+            ln = ref(_line_src(ins[1]))
+            if mode == ST_INVAL:
+                emit(f"    lstate[{ln}] = {LS_FINVAL | LS_EVERFL}")
+            elif mode == ST_EVERFL:
+                emit(f"    lstate[{ln}] |= {LS_EVERFL}")
+            else:
+                # ST_RECACHE provably follows this op's own ST_INVAL on
+                # the same line, so the packed state is a constant
+                emit(f"    lstate[{ln}] = {LS_CACHED | LS_EVERFL}")
+        elif code == K_VVAL:
+            vi = ref(f"{_addr_src(ins[1])} - {_VB}")
+            emit(f"    vval[{vi}] = {_val_src(ins[3])}")
+        elif code == K_LOGW:
+            a = ref(_addr_src(ins[1]))
+            ln = line_of(a)
+            emit(f"    _v = {_val_src(ins[3])}")
+            emit(f"    vis[{a}] = _v")
+            emit(f"    _lg = log.get({ln})")
+            emit("    if _lg is None:")
+            emit(f"        log[{ln}] = [({a}, _v)]")
+            emit("    else:")
+            emit(f"        _lg.append(({a}, _v))")
+        elif code == K_PMEMW:
+            a = ref(_addr_src(ins[1]))
+            emit(f"    _v = {_val_src(ins[3])}")
+            emit(f"    vis[{a}] = _v")
+            emit(f"    pmem[{a}] = _v")
+        elif code == K_LINE:
+            vals = [repr(x) for x in ins[2]]
+            if ins[3] is not None:
+                vals[ins[3]] = "item"
+            a = ref(_addr_src(ins[1]))
+            ln = line_of(a)
+            vl = vals_ref(vals)
+            emit(f"    vis[{a}:{a} + {LINE_WORDS}] = {vl}")
+            if ins[4]:              # eADR: visible => durable
+                emit(f"    pmem[{a}:{a} + {LINE_WORDS}] = {vl}")
+            elif not ins[5]:        # materialize unless drain-fused
+                emit(f"    _lg = log.get({ln})")
+                emit(f"    _ents = list(zip(range({a}, {a} + "
+                     f"{LINE_WORDS}), {vl}))")
+                emit("    if _lg is None:")
+                emit(f"        log[{ln}] = _ents")
+                emit("    else:")
+                emit("        _lg.extend(_ents)")
+            # dead-store elimination: skip the cached-bit write when the
+            # very next instruction overwrites this same line's state with
+            # a constant (ST_INVAL/ST_RECACHE); nothing reads it between
+            nxt = prog[pc + 1] if pc + 1 < len(prog) else None
+            if not (nxt is not None and nxt[0] == K_STATE
+                    and nxt[2] in (ST_INVAL, ST_RECACHE)
+                    and nxt[1] == ins[1]):
+                emit(f"    lstate[{ln}] = lstate[{ln}] & {LS_EVERFL} | "
+                     f"{LS_CACHED}")
+        elif code == K_PENDW:
+            emit(f"    vis[{ref(_addr_src(ins[1]))}] = {_val_src(ins[3])}")
+        elif code == K_DRAIN:
+            ln = ref(_line_src(ins[1]))
+            emit(f"    _lg = log.get({ln})")
+            emit("    if _lg:")
+            emit("        for _wa, _wv in _lg:")
+            emit("            pmem[_wa] = _wv")
+            emit(f"        ls[{ln}] += len(_lg)")
+            emit("        _lg.clear()")
+        elif code == K_DRAINF:
+            ln = ref(_line_src(ins[1]))
+            emit(f"    _lg = log.get({ln})")
+            emit("    if _lg:")
+            emit("        for _wa, _wv in _lg:")
+            emit("            pmem[_wa] = _wv")
+            emit("        _n0 = len(_lg)")
+            emit("        _lg.clear()")
+            emit("    else:")
+            emit("        _n0 = 0")
+            for ent in ins[2]:
+                if ent[0] == "w":
+                    emit(f"    pmem[{ref(_addr_src(ent[1]))}] = "
+                         f"{_val_src(ent[3])}")
+                else:
+                    vals = [repr(x) for x in ent[2]]
+                    if ent[3] is not None:
+                        vals[ent[3]] = "item"
+                    a = ref(_addr_src(ent[1]))
+                    emit(f"    pmem[{a}:{a} + {LINE_WORDS}] = "
+                         f"{vals_ref(vals)}")
+            emit(f"    ls[{ln}] += _n0 + {ins[3]}")
+        elif code == K_NT:
+            emit(f"    vis[{ref(_addr_src(ins[1]))}] = {_val_src(ins[3])}")
+        elif code == K_NTAPPLY:
+            emit(f"    pmem[{ref(_addr_src(ins[1]))}] = {_val_src(ins[3])}")
+        elif code == K_CASTAG:
+            if tracking:
+                # inside `if tk:` -- must not hoist into the taken path
+                emit("    if tk:")
+                emit(f"        _a = {_addr_src(ins[1])}")
+                emit("        cw[_a] = cw.get(_a, 0) + 1")
+                if ins[2]:
+                    emit(f"        le[_a // {LINE_WORDS}] = ep")
+        else:   # K_STAMP
+            if tracking:
+                emit("    if tk:")
+                emit(f"        le[{_line_src(ins[1])}] = ep")
+
+
+def _emit_aux(emit, op: CompiledOp) -> None:
+    for ax in op.aux_specs:
+        t0 = ax[0]
+        if t0 == "retire":
+            # inlined SSMem.retire: limbo-append under the current epoch
+            emit(f"    mem._limbo[tid].append(({_val_src(ax[1])}, "
+                 "mem._epoch, 'p'))")
+        elif t0 == "retire_v":
+            emit(f"    mem._limbo[tid].append(({_val_src(ax[1])}, "
+                 "mem._epoch, 'v'))")
+        elif t0 == "slot":
+            emit(f"    q.{ax[1]}[tid] = {_val_src(ax[2])}")
+        elif t0 == "pdiscard":
+            emit(f"    q._persisted.discard({ax[1]})")
+        else:   # padd
+            for s in ax[1]:
+                emit(f"    q._persisted.add({s})")
+
+
 def generate_fast_fn(queue, op: CompiledOp) -> Callable:
     """Translate one CompiledOp into a specialized fast-op function
-    ``fn(ex, tid, item) -> bool`` via source generation."""
+    ``fn(ex, tid, item) -> time-delta | None`` via source generation
+    (the legacy-record variant: per-op ``ex.record`` callback + deferred
+    per-(tid, key) charge dict)."""
     w: List[str] = []
     emit = w.append
     kind = op.kind
     emit("def _fast_op(ex, tid, item):")
     emit("    nv = ex.nv")
     emit("    if nv.crashed or nv._pending[tid]:")
-    emit("        return False")
+    emit("        return None")
     emit("    fifo = ex.fifo")
     emit("    q = ex.q")
     if kind == "deq":
         emit("    if not fifo:")
-        emit("        return False")
+        emit("        return None")
     else:
         emit("    _t = fifo[-1] if fifo else ex.dummy")
     for g in op.guard_specs:
         if g[0] == "slot_nonnull":
             emit(f"    prev = q.{g[1]}[tid]")
             emit("    if prev == 0:")
-            emit("        return False")
+            emit("        return None")
         else:   # tail_persisted
             emit("    if _t[0] not in q._persisted:")
-            emit("        return False")
+            emit("        return None")
     if op.uses_ssmem:
         emit("    mem = q.mem")
     if op.allocs_p:
         emit("    if not mem._free[tid] and (not mem._areas[tid]")
         emit("            or mem._cursor[tid] >= mem.area_nodes):")
-        emit("        return False")
+        emit("        return None")
     if op.uses_ssmem:
         emit("    mem.op_begin(tid)")
     if kind == "enq":
@@ -720,9 +909,7 @@ def generate_fast_fn(queue, op: CompiledOp) -> Callable:
     # hoist exactly the engine structures the program touches
     codes = {ins[0] for ins in op.prog}
     if codes & {K_CLASS_P, K_STATE, K_LINE}:
-        emit("    cached = nv._cached")
-        emit("    finval = nv._finval")
-        emit("    everfl = nv._everfl")
+        emit("    lstate = nv._lstate")
     if codes & {K_CLASS_V}:
         emit("    vtouched = nv._vtouched")
     if codes & {K_VVAL}:
@@ -747,127 +934,7 @@ def generate_fast_fn(queue, op: CompiledOp) -> Callable:
         if K_CASTAG in codes:
             emit("        cw = nv._cas_words")
     emit("    key = 0")
-    for ins in op.prog:
-        code = ins[0]
-        if code == K_CLASS_P:
-            emit(f"    _ln = {_line_src(ins[1])}")
-            emit("    if tk:")
-            emit("        le[_ln] = ep")
-            emit("    if cached[_ln]:")
-            emit(f"        key = key << 4 | {EV_HIT}")
-            emit("    elif finval[_ln]:")
-            emit(f"        key = key << 4 | {EV_POSTFLUSH}")
-            emit("        cached[_ln] = 1")
-            emit("        finval[_ln] = 0")
-            emit("    elif everfl[_ln]:")
-            emit(f"        key = key << 4 | {EV_COLD_NVM}")
-            emit("        cached[_ln] = 1")
-            emit("    else:")
-            emit(f"        key = key << 4 | {EV_COLD_DRAM}")
-            emit("        cached[_ln] = 1")
-        elif code == K_CLASS_V:
-            emit(f"    _i = {_addr_src(ins[1])} - {_VB}")
-            emit("    if vtouched[_i]:")
-            emit(f"        key = key << 4 | {EV_HIT}")
-            emit("    else:")
-            emit(f"        key = key << 4 | {EV_DRAM}")
-            emit("        vtouched[_i] = True")
-        elif code == K_STATE:
-            mode = ins[2]
-            if mode == ST_INVAL:
-                emit(f"    _ln = {_line_src(ins[1])}")
-                emit("    cached[_ln] = 0")
-                emit("    finval[_ln] = 1")
-                emit("    everfl[_ln] = 1")
-            elif mode == ST_EVERFL:
-                emit(f"    everfl[{_line_src(ins[1])}] = 1")
-            else:
-                emit(f"    _ln = {_line_src(ins[1])}")
-                emit("    cached[_ln] = 1")
-                emit("    finval[_ln] = 0")
-        elif code == K_VVAL:
-            emit(f"    vval[{_addr_src(ins[1])} - {_VB}] = "
-                 f"{_val_src(ins[3])}")
-        elif code == K_LOGW:
-            emit(f"    _a = {_addr_src(ins[1])}")
-            emit(f"    _v = {_val_src(ins[3])}")
-            emit("    vis[_a] = _v")
-            emit(f"    _ln = _a // {LINE_WORDS}")
-            emit("    _lg = log.get(_ln)")
-            emit("    if _lg is None:")
-            emit("        log[_ln] = [(_a, _v)]")
-            emit("    else:")
-            emit("        _lg.append((_a, _v))")
-        elif code == K_PMEMW:
-            emit(f"    _a = {_addr_src(ins[1])}")
-            emit(f"    _v = {_val_src(ins[3])}")
-            emit("    vis[_a] = _v")
-            emit("    pmem[_a] = _v")
-        elif code == K_LINE:
-            vals = [repr(x) for x in ins[2]]
-            if ins[3] is not None:
-                vals[ins[3]] = "item"
-            emit(f"    _a = {_addr_src(ins[1])}")
-            emit(f"    _vals = [{', '.join(vals)}]")
-            emit(f"    vis[_a:_a + {LINE_WORDS}] = _vals")
-            emit(f"    _ln = _a // {LINE_WORDS}")
-            if ins[4]:              # eADR: visible => durable
-                emit(f"    pmem[_a:_a + {LINE_WORDS}] = _vals")
-            elif not ins[5]:        # materialize unless drain-fused
-                emit("    _lg = log.get(_ln)")
-                emit(f"    _ents = list(zip(range(_a, _a + {LINE_WORDS}),"
-                     " _vals))")
-                emit("    if _lg is None:")
-                emit("        log[_ln] = _ents")
-                emit("    else:")
-                emit("        _lg.extend(_ents)")
-            emit("    cached[_ln] = 1")
-            emit("    finval[_ln] = 0")
-        elif code == K_PENDW:
-            emit(f"    vis[{_addr_src(ins[1])}] = {_val_src(ins[3])}")
-        elif code == K_DRAIN:
-            emit(f"    _ln = {_line_src(ins[1])}")
-            emit("    _lg = log.get(_ln)")
-            emit("    if _lg:")
-            emit("        for _wa, _wv in _lg:")
-            emit("            pmem[_wa] = _wv")
-            emit("        ls[_ln] = ls.get(_ln, 0) + len(_lg)")
-            emit("        _lg.clear()")
-        elif code == K_DRAINF:
-            emit(f"    _ln = {_line_src(ins[1])}")
-            emit("    _lg = log.get(_ln)")
-            emit("    if _lg:")
-            emit("        for _wa, _wv in _lg:")
-            emit("            pmem[_wa] = _wv")
-            emit("        _n0 = len(_lg)")
-            emit("        _lg.clear()")
-            emit("    else:")
-            emit("        _n0 = 0")
-            for ent in ins[2]:
-                if ent[0] == "w":
-                    emit(f"    pmem[{_addr_src(ent[1])}] = "
-                         f"{_val_src(ent[3])}")
-                else:
-                    vals = [repr(x) for x in ent[2]]
-                    if ent[3] is not None:
-                        vals[ent[3]] = "item"
-                    emit(f"    _a = {_addr_src(ent[1])}")
-                    emit(f"    pmem[_a:_a + {LINE_WORDS}] = "
-                         f"[{', '.join(vals)}]")
-            emit(f"    ls[_ln] = ls.get(_ln, 0) + _n0 + {ins[3]}")
-        elif code == K_NT:
-            emit(f"    vis[{_addr_src(ins[1])}] = {_val_src(ins[3])}")
-        elif code == K_NTAPPLY:
-            emit(f"    pmem[{_addr_src(ins[1])}] = {_val_src(ins[3])}")
-        elif code == K_CASTAG:
-            emit("    if tk:")
-            emit(f"        _a = {_addr_src(ins[1])}")
-            emit("        cw[_a] = cw.get(_a, 0) + 1")
-            if ins[2]:
-                emit(f"        le[_a // {LINE_WORDS}] = ep")
-        else:   # K_STAMP
-            emit("    if tk:")
-            emit(f"        le[{_line_src(ins[1])}] = ep")
+    _emit_prog(emit, op, tracking=True)
     # defer the count charge (flushed in bulk by the executor) and return
     # the op's exact clock advance -- see CompiledOp.time_for_key
     emit("    _k = (tid, key)")
@@ -882,32 +949,272 @@ def generate_fast_fn(queue, op: CompiledOp) -> Callable:
         emit(f"    fifo.append(({np_src}, {nv_src}, item, idx))")
     else:
         emit("    ex.dummy = fifo.popleft()")
-    for ax in op.aux_specs:
-        t0 = ax[0]
-        if t0 == "retire":
-            emit(f"    mem.retire(tid, {_val_src(ax[1])})")
-        elif t0 == "retire_v":
-            emit(f"    mem.retire_volatile(tid, {_val_src(ax[1])})")
-        elif t0 == "slot":
-            emit(f"    q.{ax[1]}[tid] = {_val_src(ax[2])}")
-        elif t0 == "pdiscard":
-            emit(f"    q._persisted.discard({ax[1]})")
-        else:   # padd
-            for s in ax[1]:
-                emit(f"    q._persisted.add({s})")
+    _emit_aux(emit, op)
     res = "item" if kind == "enq" else "result"
     if op.event_kind is not None:
         emit(f"    q.on_event(({op.event_kind!r}, {res}))")
     emit(f"    ex.record(tid, {kind!r}, {res})")
     emit("    ex.fast_ops += 1")
     emit("    return _t")
-    src = "\n".join(w).replace("return False", "return None")
+    src = "\n".join(w)
     g = {"_op": op, "_vc": op._veccache, "_dc": op._deferred,
-         "_tc": op._tcache}
+         "_tc": op._tcache, "_CT": TOUCH_CLASS, "_NS": TOUCH_NEXT}
     exec(compile(src, f"<opsched:{type(queue).__name__}.{kind}>", "exec"), g)
     fn = g["_fast_op"]
     fn.__source__ = src
     return fn
+
+
+def generate_columnar_fn(queue, op: CompiledOp, nvram: NVRAM, fifo: deque,
+                         dbox: list) -> Callable:
+    """Translate one CompiledOp into the columnar-record fast-op variant
+    ``fn(tid, item, t_start) -> post-op clock | None``.
+
+    The per-op tail is three plain-list appends into the attached
+    :class:`repro.core.records.RecordStore` staging buffers (one packed
+    ``key << META_KEY_SHIFT | tid << 1 | kind`` word, the op's item, the
+    post-op clock); the whole burst is materialized and charged in one
+    vector pass at :meth:`~repro.core.records.RecordStore.sync`.  Every
+    engine container the body touches is bound as a keyword-only default
+    (the engine's identity-stability contract makes that safe across
+    crash/restore); ``sm``/``si``/``st`` start as ``None`` placeholders
+    and are rebound by ``FastPathExecutor.attach_store``.  Only generated
+    when the outcome key fits the staging word (``n_class <=
+    MAX_STAGED_NCLASS``, ``nthreads <= MAX_STAGED_THREADS``); dispatched
+    by :class:`repro.core.scheduler.ClockScheduler` only with no
+    contention model and tracking off, so the epoch/CAS taps compile to
+    nothing."""
+    w: List[str] = []
+    emit = w.append
+    kind = op.kind
+    codes = {ins[0] for ins in op.prog}
+    params = [("nv", "_NV"), ("pending", "_PENDING"), ("fifo", "_FIFO"),
+              ("dbox", "_DBOX"), ("q", "_Q")]
+    if op.uses_ssmem:
+        params.append(("mem", "_MEM"))
+    if op.allocs_v:
+        params.append(("valloc", "_VALLOC"))
+    if codes & {K_CLASS_P, K_STATE, K_LINE}:
+        params.append(("lstate", "_LSTATE"))
+    if K_CLASS_V in codes:
+        params.append(("vtouched", "_VTOUCHED"))
+    if K_VVAL in codes:
+        params.append(("vval", "_VVAL"))
+    if codes & {K_LOGW, K_PMEMW, K_LINE, K_NT, K_PENDW}:
+        params.append(("vis", "_VIS"))
+    if codes & {K_PMEMW, K_DRAIN, K_DRAINF, K_NTAPPLY} or \
+            any(ins[0] == K_LINE and ins[4] for ins in op.prog):
+        params.append(("pmem", "_PMEM"))
+    if codes & {K_LOGW, K_DRAIN, K_DRAINF} or \
+            any(ins[0] == K_LINE and not ins[4] for ins in op.prog):
+        params.append(("log", "_LOG"))
+    if codes & {K_DRAIN, K_DRAINF}:
+        params.append(("ls", "_LS"))
+    if K_CLASS_P in codes:
+        params += [("_CT", "_TCT"), ("_NS", "_TNS")]
+    params += [("_tc", "_tc"), ("_op", "_op"),
+               ("sm", "None"), ("si", "None"), ("st", "None")]
+    # plain positional defaults, not keyword-only: CPython resolves them
+    # from the code object's defaults tuple with no per-call dict lookups
+    # (measurably cheaper at this call rate); attach_store rebinds the
+    # trailing sm/si/st slots through fn.__defaults__
+    sig = ", ".join(f"{n}={d}" for n, d in params)
+    emit(f"def _fast_op(tid, item, t_start, {sig}):")
+    emit("    if nv.crashed or pending[tid]:")
+    emit("        return None")
+    if kind == "deq":
+        emit("    if not fifo:")
+        emit("        return None")
+    else:
+        emit("    _t = fifo[-1] if fifo else dbox[0]")
+    for g in op.guard_specs:
+        if g[0] == "slot_nonnull":
+            emit(f"    prev = q.{g[1]}[tid]")
+            emit("    if prev == 0:")
+            emit("        return None")
+        else:   # tail_persisted
+            emit("    if _t[0] not in q._persisted:")
+            emit("        return None")
+    if op.allocs_p:
+        # _mf is the per-thread free list OBJECT (never rebound by ssmem,
+        # only popped/appended), so reading it before op_begin is safe:
+        # an epoch advance inside op_begin refills this same list
+        emit("    _mf = mem._free[tid]")
+        emit("    if not _mf and (not mem._areas[tid]")
+        emit("            or mem._cursor[tid] >= mem.area_nodes):")
+        emit("        return None")
+    if op.uses_ssmem:
+        # inlined SSMem.op_begin: announce under the CURRENT epoch, then
+        # bump the shared op counter; the 64th op resets it and runs the
+        # (rare) epoch advance.  check-then-increment here is the same
+        # automaton as op_begin's increment-then-check -- state 63 maps
+        # to a reset + advance either way
+        emit("    mem._announced[tid] = mem._epoch")
+        emit("    if mem._ops_since_adv >= 63:")
+        emit("        mem._ops_since_adv = 0")
+        emit("        mem._try_advance()")
+        emit("    else:")
+        emit("        mem._ops_since_adv += 1")
+    if kind == "enq":
+        emit("    tail_p = _t[0]")
+        emit("    tail_v = _t[1]")
+        emit("    idx = (_t[3] or 0) + 1")
+    else:
+        emit("    _d = dbox[0]")
+        emit("    _n = fifo[0]")
+        emit("    head_p = _d[0]")
+        emit("    head_v = _d[1]")
+        emit("    next_p = _n[0]")
+        emit("    next_v = _n[1]")
+        emit("    idx = _n[3]")
+        emit("    result = _n[2]")
+    if op.allocs_p:
+        # inlined SSMem.alloc fast paths.  The pop must be decided AFTER
+        # op_begin: its epoch advance can refill _mf, and the real alloc
+        # would see that refill.  The bump branch never needs _new_area --
+        # the guard above proved area space exists when _mf was empty, and
+        # the advance only ever grows _mf
+        emit("    if _mf:")
+        emit("        new_p = _mf.pop()")
+        emit("    else:")
+        emit("        _cu = mem._cursor[tid]")
+        emit(f"        new_p = mem._areas[tid][-1] + _cu * {LINE_WORDS}")
+        emit("        mem._cursor[tid] = _cu + 1")
+    if op.allocs_v:
+        # inlined VolatileAlloc.alloc fast path (free-list pop); the
+        # chunk-refill slow path stays an out-of-line call
+        emit("    _vf = valloc._free[tid]")
+        emit("    if _vf:")
+        emit("        new_v = _vf.pop()")
+        emit("    else:")
+        emit("        new_v = valloc.alloc(tid)")
+    emit("    key = 0")
+    _emit_prog(emit, op, tracking=False)
+    emit("    _t2 = _tc.get(key)")
+    emit("    if _t2 is None:")
+    emit("        _t2 = _op.time_for_key(key, nv._ns_vec)")
+    if kind == "enq":
+        np_src = "new_p" if op.allocs_p else "0"
+        nv_src = "new_v" if op.allocs_v else "None"
+        emit(f"    fifo.append(({np_src}, {nv_src}, item, idx))")
+    else:
+        emit("    dbox[0] = fifo.popleft()")
+    _emit_aux(emit, op)
+    emit("    _te = t_start + _t2")
+    kbit = 0 if kind == "enq" else 1
+    emit(f"    sm.append(key << {META_KEY_SHIFT} | tid << 1 | {kbit})")
+    emit("    si.append(item)" if kind == "enq" else "    si.append(result)")
+    emit("    st.append(_te)")
+    emit("    return _te")
+    src = "\n".join(w)
+    g = {"_op": op, "_tc": op._tcache, "_TCT": TOUCH_CLASS,
+         "_TNS": TOUCH_NEXT, "_NV": nvram, "_PENDING": nvram._pending,
+         "_FIFO": fifo, "_DBOX": dbox, "_Q": queue,
+         "_MEM": getattr(queue, "mem", None),
+         "_VALLOC": getattr(queue, "valloc", None),
+         "_LSTATE": nvram._lstate,
+         "_VTOUCHED": nvram._vtouched, "_VVAL": nvram._vval,
+         "_VIS": nvram._vis, "_PMEM": nvram._pmem, "_LOG": nvram._log,
+         "_LS": nvram._log_start}
+    exec(compile(src, f"<opsched-col:{type(queue).__name__}.{kind}>",
+                 "exec"), g)
+    fn = g["_fast_op"]
+    fn.__source__ = src
+    fn.__params__ = params      # (name, global-name) pairs, in order
+    return fn
+
+
+def generate_columnar_runner(cfns: dict, queue) -> Callable:
+    """Merge the two columnar fast-op bodies into ONE generated function
+    that owns the whole clock-heap loop.
+
+    The per-op call frames (scheduler -> fast-op) are the last fixed cost
+    once the bodies themselves are lean, so the runner splices the
+    generated enq/deq sources inline -- each body's early ``return None``
+    bails become breaks out of a one-shot ``while True`` block, landing in
+    a shared bail arm that defers to the scheduler-provided ``bail``
+    callback (staged-burst sync + real thunk + clock stitch).  Bit
+    identity is untouched: the spliced text IS the fast-op bodies, only
+    the calling convention changed.  ``sm``/``si``/``st`` stay the last
+    three positional defaults so ``FastPathExecutor.attach_store`` rebinds
+    the runner exactly like the fns it was spliced from.
+    """
+    fenq, fdeq = cfns["enq"], cfns["deq"]
+    # merged bound-parameter spec: enq's engine params, deq-only extras,
+    # the per-op caches disambiguated (_tc/_op -> _tcd/_opd for deq),
+    # staging buffers last
+    env: dict = {}
+    params: List[Tuple[str, str]] = []
+    seen = set()
+    renames_deq = {"_tc": "_tcd", "_op": "_opd"}
+    for fn, renames in ((fenq, {}), (fdeq, renames_deq)):
+        vals = dict(zip([n for n, _ in fn.__params__], fn.__defaults__))
+        for name, gname in fn.__params__:
+            if name in ("sm", "si", "st"):
+                continue
+            tgt = renames.get(name, name)
+            if tgt in seen:
+                continue
+            seen.add(tgt)
+            g_tgt = "_G" + tgt
+            params.append((tgt, g_tgt))
+            env[g_tgt] = vals[name]
+    params += [("sm", "None"), ("si", "None"), ("st", "None")]
+
+    def splice(fn, renames) -> List[str]:
+        out = []
+        for line in fn.__source__.splitlines()[1:]:
+            stripped = line.strip()
+            pad = " " * (len(line) - len(line.lstrip())) + " " * 12
+            for old, new in renames.items():
+                line = line.replace(f"{old}.", f"{new}.")
+            if stripped == "return None":
+                out.append(pad + "_te = None")
+                out.append(pad + "break")
+            elif stripped == "return _te":
+                out.append(pad + "break")
+            else:
+                out.append(" " * 12 + line)
+        return out
+
+    sig = ", ".join(f"{n}={d}" for n, d in params)
+    w: List[str] = []
+    emit = w.append
+    emit(f"def _runner(heap, cursors, op_kinds, op_items, lens, bail, "
+         f"heappop=_HPOP, heappush=_HPUSH, {sig}):")
+    emit("    ops_run = 0")
+    emit("    while heap:")
+    emit("        t_start, tid = heappop(heap)")
+    emit("        _i = cursors[tid]")
+    emit("        if op_kinds[tid][_i] == 'enq':")
+    emit("            item = op_items[tid][_i]")
+    emit("            _te = None")
+    emit("            while True:")
+    w.extend(splice(fenq, {}))
+    emit("                break")
+    emit("            if _te is None:")
+    emit("                _te = bail(tid, _i, t_start, 'enq')")
+    emit("        else:")
+    emit("            item = op_items[tid][_i]")
+    emit("            _te = None")
+    emit("            while True:")
+    w.extend(splice(fdeq, renames_deq))
+    emit("                break")
+    emit("            if _te is None:")
+    emit("                _te = bail(tid, _i, t_start, 'deq')")
+    emit("        cursors[tid] = _i + 1")
+    emit("        ops_run += 1")
+    emit("        if _i + 1 < lens[tid]:")
+    emit("            heappush(heap, (_te, tid))")
+    emit("    return ops_run")
+    src = "\n".join(w)
+    env["_HPOP"] = heapq.heappop
+    env["_HPUSH"] = heapq.heappush
+    exec(compile(src, f"<opsched-runner:{type(queue).__name__}>", "exec"),
+         env)
+    runner = env["_runner"]
+    runner.__source__ = src
+    return runner
 
 
 # --------------------------------------------------------------------------
@@ -944,16 +1251,32 @@ class FastPathExecutor:
         self.backend = backend
         cache = queue.__dict__.setdefault("_compiled_schedules", {})
         key = nvram.model.name
-        if key not in cache:
+        ent = cache.get(key)
+        # columnar fns bind this engine's containers as keyword defaults,
+        # so a cache entry is only valid against the engine it was
+        # generated for; regenerate on an engine swap
+        if ent is None or ent[3] is not nvram:
             ops = {k: compile_schedule(queue, schedules.of_kind(k),
                                        nvram.model)
                    for k in ("enq", "deq")}
             fns = {k: generate_fast_fn(queue, op) for k, op in ops.items()}
-            cache[key] = (ops, fns)
-        self.ops, self._fns = cache[key]
+            fifo: deque = deque()
+            dbox: list = [None]
+            cfns = None
+            crunner = None
+            if (nvram.nthreads <= MAX_STAGED_THREADS
+                    and all(o.n_class <= MAX_STAGED_NCLASS
+                            for o in ops.values())):
+                cfns = {k: generate_columnar_fn(queue, op, nvram, fifo,
+                                                dbox)
+                        for k, op in ops.items()}
+                crunner = generate_columnar_runner(cfns, queue)
+            ent = (ops, fns, cfns, nvram, fifo, dbox, crunner)
+            cache[key] = ent
+        (self.ops, self._fns, self.cfns, _, self.fifo, self._dbox,
+         self.crunner) = ent
         self.env: List[Any] = [NULL] * len(_SYMS)
-        self.fifo: deque = deque()
-        self.dummy: Optional[tuple] = None
+        self.rstore = None        # columnar RecordStore (attach_store)
         self.fast_ops = 0         # compiled replays
         self.bailed_ops = 0       # fell back to real execution
         # incremental clocks are exact (hence heap-order identical to the
@@ -966,6 +1289,43 @@ class FastPathExecutor:
         else:
             self.try_op_timed = self._interp_timed
         self._bootstrap()
+
+    # the logical dummy node lives in a one-slot box shared with the
+    # columnar fns (bound as their ``dbox`` default)
+    @property
+    def dummy(self) -> Optional[tuple]:
+        return self._dbox[0]
+
+    @dummy.setter
+    def dummy(self, rec: Optional[tuple]) -> None:
+        self._dbox[0] = rec
+
+    def attach_store(self, store) -> bool:
+        """Wire a :class:`repro.core.records.RecordStore` into this run:
+        rebind the columnar fns' staging-list defaults and hand the store
+        the engine + compiled ops it charges staged bursts against.
+        Returns False (store not attached) when columnar dispatch is
+        unavailable -- non-codegen backend, inexact latencies, or an
+        outcome key that does not fit the staging word."""
+        self.rstore = None
+        if (store is None or self.cfns is None
+                or self.backend != "codegen" or not self.timed):
+            return False
+        fns = list(self.cfns.values())
+        if self.crunner is not None:
+            fns.append(self.crunner)
+        for fn in fns:
+            # sm/si/st are the last three positional defaults by
+            # construction (generate_columnar_fn and the merged runner
+            # both append them last)
+            fn.__defaults__ = fn.__defaults__[:-3] + (
+                store._sm, store._si, store._st)
+        store.attach_engine(
+            self.nv, (self.ops["enq"], self.ops["deq"]),
+            (self.ops["enq"].event_kind, self.ops["deq"].event_kind),
+            executor=self)
+        self.rstore = store
+        return True
 
     def _codegen_op(self, tid: int, kind: str, item: Any) -> bool:
         """Codegen backend, eager mode (used under a contention model):
@@ -1001,7 +1361,8 @@ class FastPathExecutor:
 
     def flush_counts(self) -> None:
         """Apply all deferred compiled-op charges to the engine counters
-        through the charge seam (a handful of vector adds per run)."""
+        through the charge seam (a handful of vector adds per run), and
+        materialize any staged columnar burst."""
         charge = self.nv.charge_counts
         for op in self.ops.values():
             dc = op._deferred
@@ -1010,6 +1371,8 @@ class FastPathExecutor:
                     vec = op.counts_for_key(key)
                     charge(tid, vec if n == 1 else vec * n)
                 dc.clear()
+        if self.rstore is not None:
+            self.rstore.flush()
 
     # ------------------------------------------------------------ logical view
     def _read_record(self, addr: int) -> tuple:
@@ -1105,7 +1468,7 @@ class FastPathExecutor:
 
         # ---- effect program ------------------------------------------
         vis, pmem = nv._vis, nv._pmem
-        cached, finval, everfl = nv._cached, nv._finval, nv._everfl
+        lstate = nv._lstate
         vval, vtouched = nv._vval, nv._vtouched
         log, log_start = nv._log, nv._log_start
         tracking = nv.contention_tracking
@@ -1127,24 +1490,16 @@ class FastPathExecutor:
                 ln = ad // LINE_WORDS
                 if tracking:
                     line_epoch[ln] = epoch
-                if cached[ln]:
-                    dyn.append(EV_HIT)
-                else:
-                    if finval[ln]:
-                        dyn.append(EV_POSTFLUSH)
-                    elif everfl[ln]:
-                        dyn.append(EV_COLD_NVM)
-                    else:
-                        dyn.append(EV_COLD_DRAM)
-                    cached[ln] = 1
-                    finval[ln] = 0
+                s = lstate[ln]
+                dyn.append(TOUCH_CLASS[s])
+                lstate[ln] = TOUCH_NEXT[s]
             elif code == K_CLASS_V:
                 i = ad - VB
                 if vtouched[i]:
                     dyn.append(EV_HIT)
                 else:
                     dyn.append(EV_DRAM)
-                    vtouched[i] = True
+                    vtouched[i] = 1
             elif code == K_LOGW:
                 v = ins[2](env, item, idx, tid)
                 vis[ad] = v
@@ -1164,14 +1519,11 @@ class FastPathExecutor:
                 ln = ad // LINE_WORDS
                 mode = ins[2]
                 if mode == ST_INVAL:
-                    cached[ln] = 0
-                    finval[ln] = 1
-                    everfl[ln] = 1
+                    lstate[ln] = LS_FINVAL | LS_EVERFL
                 elif mode == ST_EVERFL:
-                    everfl[ln] = 1
+                    lstate[ln] |= LS_EVERFL
                 else:
-                    cached[ln] = 1
-                    finval[ln] = 0
+                    lstate[ln] = (lstate[ln] & LS_EVERFL) | LS_CACHED
             elif code == K_LINE:
                 vals = list(ins[2])
                 if ins[3] is not None:
@@ -1188,8 +1540,7 @@ class FastPathExecutor:
                         log[ln] = ents
                     else:
                         lg.extend(ents)
-                cached[ln] = 1
-                finval[ln] = 0
+                lstate[ln] = (lstate[ln] & LS_EVERFL) | LS_CACHED
             elif code == K_PENDW:
                 # fused-drain write: coherent view now, persistent image
                 # at the covering fence's K_DRAINF
@@ -1200,7 +1551,7 @@ class FastPathExecutor:
                 if lg:
                     for (wa, wv) in lg:
                         pmem[wa] = wv
-                    log_start[ln] = log_start.get(ln, 0) + len(lg)
+                    log_start[ln] += len(lg)
                     lg.clear()
             elif code == K_DRAINF:
                 ln = ad // LINE_WORDS
@@ -1228,7 +1579,7 @@ class FastPathExecutor:
                         if ent[3] is not None:
                             vals[ent[3]] = item
                         pmem[a2:a2 + LINE_WORDS] = vals
-                log_start[ln] = log_start.get(ln, 0) + n0 + ins[3]
+                log_start[ln] += n0 + ins[3]
             elif code == K_NT:
                 vis[ad] = ins[2](env, item, idx, tid)
             elif code == K_NTAPPLY:

@@ -202,14 +202,22 @@ class ClockScheduler:
         self.pause_gc = pause_gc       # False: seed-era GC behavior
         self.ops_run = 0
 
-    def run(self, op_lists: List[List[Callable[[], None]]],
+    def run(self, op_lists: Optional[List[List[Callable[[], None]]]],
             op_kinds: Optional[List[List[str]]] = None,
-            op_items: Optional[List[List]] = None) -> bool:
+            op_items: Optional[List[List]] = None,
+            make_op: Optional[Callable] = None) -> bool:
         """op_lists[t] is thread t's sequence of zero-argument op thunks;
         op_kinds[t][i] (required when a contention model or fast executor
         is attached) names thunk i's kind ('enq'/'deq') so retries charge
         the right profile; op_items[t][i] is the enqueued item (fast path
         only).  Returns False (this scheduler never injects crashes).
+
+        ``op_lists`` may be None when columnar dispatch will engage (fast
+        executor with an attached record store, no contention model,
+        tracking off): compiled replays never touch the thunks, so the
+        caller skips building ops-count closures up front and instead
+        passes ``make_op(t, kind, item) -> thunk``, called only on the
+        rare bails.
 
         With a :class:`repro.core.opsched.FastPathExecutor` attached, each
         op is first offered to the compiled schedule replay; ops outside
@@ -234,12 +242,47 @@ class ClockScheduler:
         if gc_was_enabled:
             gc.disable()
         try:
-            cursors = [0] * len(op_lists)
+            seed_src = op_lists if op_lists is not None else op_kinds
+            cursors = [0] * len(seed_src)
             heap = [(nv.thread_time_ns(t), t) for t, ops in
-                    enumerate(op_lists) if ops]
+                    enumerate(seed_src) if ops]
             heapq.heapify(heap)
             heappush, heappop = heapq.heappush, heapq.heappop
             timed = (fast is not None and cm is None and fast.timed)
+            if (timed and fast.rstore is not None
+                    and not nv.contention_tracking):
+                # columnar dispatch: call the per-kind staged fns directly
+                # (they append to the record store's staging lists; charges
+                # and record materialization happen in vector bursts at
+                # sync points).  A None return is a bail: materialize the
+                # staged burst so the engine clock read after the real
+                # thunk is exact, then run the real thunk and stitch its
+                # clocks into the store's per-thread chain.
+                rs = fast.rstore
+                lens = [len(ks) for ks in op_kinds]
+
+                def bail(t, i, t_start, kind):
+                    # outside the compiled steady state: materialize the
+                    # staged burst so the engine clock read after the real
+                    # thunk is exact, run the real thunk, stitch its
+                    # clocks into the store's per-thread chain
+                    rs.sync()
+                    nv.set_tid(t)
+                    if op_lists is not None:
+                        op_lists[t][i]()
+                    else:
+                        make_op(t, kind, op_items[t][i])()
+                    fast.after_real_op(t, kind)
+                    t_end = nv.thread_time_ns(t)
+                    rs.note_real_clocks(t, t_start, t_end)
+                    return t_end
+
+                self.ops_run += fast.crunner(
+                    heap, cursors, op_kinds, op_items, lens, bail)
+                return False
+            if op_lists is None:
+                raise ValueError("op_lists omitted but columnar dispatch "
+                                 "is unavailable on this run")
             while heap:
                 t_start, t = heappop(heap)
                 i = cursors[t]

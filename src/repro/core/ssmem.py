@@ -99,17 +99,26 @@ class SSMem:
         min_e = min(self._announced.values())
         if min_e >= self._epoch:
             self._epoch += 1
-        for t in range(self.nthreads):
-            keep = []
-            for (addr, ep, kind) in self._limbo[t]:
-                if ep + 2 <= min_e:
-                    if kind == "p":
-                        self._free[t].append(addr)
-                    else:
-                        self._valloc.free(t, addr)
+        # limbo entries carry the epoch current at retire time, so each
+        # per-thread list is sorted by epoch and the reclaimable entries
+        # (ep + 2 <= min_e) form a prefix: scan it, free in list order
+        # (same order the full rebuild produced), drop it in place.  The
+        # common case -- nothing reclaimable yet -- is one comparison per
+        # thread instead of rebuilding every keep-list.
+        cut = min_e - 2
+        for t, lst in self._limbo.items():
+            if not lst or lst[0][1] > cut:
+                continue
+            free_t = self._free[t]
+            i, n = 0, len(lst)
+            while i < n and lst[i][1] <= cut:
+                addr, _, kind = lst[i]
+                if kind == "p":
+                    free_t.append(addr)
                 else:
-                    keep.append((addr, ep, kind))
-            self._limbo[t] = keep
+                    self._valloc.free(t, addr)
+                i += 1
+            del lst[:i]
 
     # ------------------------------------------------------------ alloc/free
     def alloc(self, tid: int) -> int:

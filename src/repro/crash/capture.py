@@ -44,6 +44,10 @@ class Boundary:
     events_len: int                # linearization events so far
     completed: Tuple[bool, ...]    # per existing op: returned before crash?
     items: Tuple[Any, ...]         # per existing op: item (deq result if done)
+    #: record-history cursors (QueueHarness.record_snapshot) taken at the
+    #: same quiescent instant as `snap` -- restoring both rewinds the engine
+    #: AND the op/event history to this boundary together
+    rec_snap: Any = None
 
 
 @dataclass
@@ -104,7 +108,8 @@ def capture_run(harness: QueueHarness, plans: List[list], seed: int = 0,
             ops_len=len(harness.ops),
             events_len=len(harness.events),
             completed=tuple(r.completed for r in harness.ops),
-            items=tuple(r.item for r in harness.ops)))
+            items=tuple(r.item for r in harness.ops),
+            rec_snap=harness.record_snapshot()))
 
     res = harness.run_scheduled([list(p) for p in plans], seed=seed,
                                 policy=policy, snapshot_hook=hook)

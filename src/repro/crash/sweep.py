@@ -59,14 +59,19 @@ class ChoiceSpace:
     ``combos`` counts what the subset mode enumerates: every subset of the
     pending flush entries x every per-(thread, line) NT-store prefix --
     the *persist decisions*, where durability bugs hide -- crossed with
-    the two implicit-eviction corners (no unapplied store survives / every
-    line's full log survives).  The interior per-line eviction prefixes
-    form a product too large to enumerate and are sampled by the 'random'
-    mode instead.
+    the implicit-eviction axis.  By default that axis contributes only its
+    two corners (no unapplied store survives / every line's full log
+    survives): the interior per-line eviction prefixes form a product that
+    is too large to enumerate across a whole sweep and is sampled by the
+    'random' mode instead.  With ``exhaustive_log=True`` the axis is the
+    full per-line prefix product -- every line independently persists any
+    prefix of its unapplied stores -- which small cells (few threads, tiny
+    designated areas) can afford to exhaust completely.
     """
     flush_entries: List[Tuple[int, int]]          # (tid, pending index)
     nt_groups: Dict[Tuple[int, int], int]         # (tid, line) -> #NT stores
     log_lines: Dict[int, int]                     # line -> #unapplied stores
+    exhaustive_log: bool = False
     combos: int = 1
 
     def __post_init__(self):
@@ -74,11 +79,16 @@ class ChoiceSpace:
         for c in self.nt_groups.values():
             n *= c + 1
         if self.log_lines:
-            n *= 2
+            if self.exhaustive_log:
+                for c in self.log_lines.values():
+                    n *= c + 1
+            else:
+                n *= 2
         self.combos = n
 
 
-def choice_space(boundary: Boundary) -> ChoiceSpace:
+def choice_space(boundary: Boundary,
+                 exhaustive_log: bool = False) -> ChoiceSpace:
     """Enumerate the crash-outcome axes recorded in a boundary snapshot."""
     snap = boundary.snap
     flush_entries: List[Tuple[int, int]] = []
@@ -91,23 +101,40 @@ def choice_space(boundary: Boundary) -> ChoiceSpace:
                 key = (t, ent[1] // LINE_WORDS)
                 nt_groups[key] = nt_groups.get(key, 0) + 1
     log_lines = {line: len(log) for line, log in snap.log.items() if log}
-    return ChoiceSpace(flush_entries, nt_groups, log_lines)
+    return ChoiceSpace(flush_entries, nt_groups, log_lines, exhaustive_log)
+
+
+def _log_choices(space: ChoiceSpace) -> List[tuple]:
+    """The implicit-eviction axis: per-line applied-store prefixes.
+
+    Corners mode yields the empty and the full prefix; exhaustive mode
+    yields the whole product (every line independently keeps 0..n of its
+    unapplied stores, in store order -- Assumption 1 eviction atomicity).
+    ``k == 0`` entries are dropped: an absent line already means 'nothing
+    survives', so keeping them would double-count outcomes.
+    """
+    if not space.log_lines:
+        return [()]
+    lines = sorted(space.log_lines)
+    if not space.exhaustive_log:
+        return [(), tuple((ln, space.log_lines[ln]) for ln in lines)]
+    return [tuple((ln, k) for ln, k in zip(lines, ks) if k)
+            for ks in itertools.product(
+                *[range(space.log_lines[ln] + 1) for ln in lines])]
 
 
 def enumerate_choices(space: ChoiceSpace) -> Iterator[CrashChoices]:
     """All crash outcomes of `space` (see :class:`ChoiceSpace` for what
     'all' means), as CrashChoices for mode='subset'."""
     nt_keys = sorted(space.nt_groups)
-    log_corners = [()]
-    if space.log_lines:
-        log_corners.append(tuple(sorted(space.log_lines.items())))
+    log_choices = _log_choices(space)
     for bits in itertools.product((False, True),
                                   repeat=len(space.flush_entries)):
         survivors = frozenset(e for e, keep in zip(space.flush_entries, bits)
                               if keep)
         for nt_ks in itertools.product(
                 *[range(space.nt_groups[k] + 1) for k in nt_keys]):
-            for log_prefix in log_corners:
+            for log_prefix in log_choices:
                 yield CrashChoices(
                     flush_survivors=survivors,
                     nt_prefix=tuple(zip(nt_keys, nt_ks)),
@@ -157,10 +184,15 @@ def _check_point(harness: QueueHarness, capture: Capture, step: int,
     b = capture.boundaries[step]
     nv = harness.nvram
     nv.restore(b.snap)
-    # the checker reads the Capture's frozen history, not the live lists;
-    # truncate them so ~thousands of recoveries don't accumulate dead
-    # crash-marker/drain events (the queue's on_event stays bound to the
-    # same list object, so clearing in place is safe)
+    # the checker reads the Capture's frozen history, not the live record
+    # state; truncate it so ~thousands of recoveries don't accumulate dead
+    # crash-marker/drain events.  Clearing is the cursor restore's
+    # degenerate case (record_restore((0, 0))): record cursors only shrink,
+    # and the sweep walks steps forward, so rewinding to b.rec_snap after an
+    # earlier step already truncated below it would be invalid.  Both record
+    # modes clear in place -- the columnar store resets its cursors, the
+    # legacy lists empty without rebinding (the queue's on_event stays bound
+    # to the same ops/events objects either way).
     del harness.events[:]
     del harness.ops[:]
     p0, w0 = nv.pread_count, nv.pwrite_count
@@ -180,7 +212,7 @@ def sweep_queue(name: str, nthreads: int = 3, per_thread: int = 6,
                 model: str = "optane-clwb", area_nodes: int = 64,
                 modes: Tuple[str, ...] = DEFAULT_MODES, subset: bool = True,
                 subset_cap: int = 64, steps: Optional[range] = None,
-                log=None) -> SweepResult:
+                exhaustive_log: bool = False, log=None) -> SweepResult:
     """Sweep every crash point of the standard workload for one queue.
 
     ``subset_cap`` bounds the per-boundary exhaustive enumeration: when a
@@ -188,7 +220,11 @@ def sweep_queue(name: str, nthreads: int = 3, per_thread: int = 6,
     with hundreds of pending flushes) the subset row records
     ``subset_combos=0`` and the boundary is still covered by the three
     sampled modes.  ``steps`` restricts the crash points (default: all of
-    ``1..total_steps``).
+    ``1..total_steps``).  ``exhaustive_log=True`` widens the subset mode's
+    implicit-eviction axis from the two corners to every interior per-line
+    store-prefix (see :class:`ChoiceSpace`); affordable only on small
+    cells -- pair it with a tiny workload and ``area_nodes`` small enough
+    that mid-area-zeroing boundaries fit under ``subset_cap``.
     """
     if name not in DURABLE_QUEUES:
         raise ValueError(f"unknown durable queue {name!r} "
@@ -229,7 +265,7 @@ def sweep_queue(name: str, nthreads: int = 3, per_thread: int = 6,
 
     for step in sweep_steps:
         b = capture.boundaries[step]
-        space = choice_space(b)
+        space = choice_space(b, exhaustive_log=exhaustive_log)
         for mode in modes:
             row = base_row(step, space)
             ok, why, recovered, pr, pw, us = _check_point(

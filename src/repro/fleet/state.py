@@ -231,11 +231,13 @@ def export_instance(h: QueueHarness, dims: FleetDims) -> Optional[dict]:
         return None
     nv._drain()
     row: dict = {}
-    row["cached"] = _pad_u8(nv._cached[:dims.nl], dims.nl)
-    row["finval"] = _pad_u8(nv._finval[:dims.nl], dims.nl)
-    row["everfl"] = _pad_u8(nv._everfl[:dims.nl], dims.nl)
-    vt = nv._vtouched[:dims.nvw]
-    row["vtouched"] = _pad_u8(vt.astype(np.uint8), dims.nvw)
+    # the engine packs line state into one byte array; the fleet lowering
+    # keeps separate planes, so unpack through the export seam
+    cached, finval, everfl = nv.line_state_arrays(dims.nl)
+    row["cached"] = _pad_u8(cached, dims.nl)
+    row["finval"] = _pad_u8(finval, dims.nl)
+    row["everfl"] = _pad_u8(everfl, dims.nl)
+    row["vtouched"] = _pad_u8(nv.vtouched_array(dims.nvw), dims.nvw)
     pers = np.zeros(dims.nl if dims.needs_persisted else 1, dtype=np.uint8)
     if dims.needs_persisted:
         for addr in getattr(q, "_persisted", ()):

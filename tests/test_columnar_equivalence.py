@@ -1,0 +1,165 @@
+"""The columnar op-record engine's equivalence gate.
+
+``QueueHarness`` now keeps op records and linearization events in a
+columnar :class:`repro.core.records.RecordStore` (numpy columns +
+cursors) instead of per-op Python objects; the compiled fast path stages
+whole bursts and charges the engine in one vector pass.  The acceptance
+criterion mirrors the fast path's own gate: **bit identity**.  For all 8
+queues x 3 memory models x contention off/on/learned, a columnar-record
+run must produce exactly the per-thread Stats (every counter AND the
+float ``time_ns``), the same op records, the same linearization events
+and the same final queue contents as the legacy list-of-``OpRecord``
+path (``records="legacy"``), which survives precisely as this suite's
+differential reference.
+
+The second half pins the crash seam: record cursors snapshot/restore
+with memory state (``QueueHarness.record_snapshot`` /
+``record_restore``), including round-trips through non-zero cursors.
+"""
+import pytest
+
+from repro.core import ALL_QUEUES, MEMORY_MODELS, QueueHarness
+from repro.core.records import RecordStore
+from benchmarks.workloads import make_plans, resolve_contention
+
+QUEUES8 = sorted(ALL_QUEUES)
+
+
+def _run(qname, records, model, contention="off", workload="mixed5050",
+         nthreads=3, ops=40, area_nodes=256, seed=0, compiled=None):
+    h = QueueHarness(ALL_QUEUES[qname], nthreads=nthreads,
+                     area_nodes=area_nodes, model=model, records=records)
+    plans, wl_prefill = make_plans(workload, nthreads, ops, seed=seed)
+    for i in range(wl_prefill):
+        h.queue.enqueue(0, ("pre", i))
+    _, cmodel = resolve_contention(contention, qname)
+    res = h.run_batched(plans, contention=cmodel, compiled=compiled)
+    return h, res
+
+
+def assert_bit_identical(qname, model, contention, **kw):
+    h_leg, r_leg = _run(qname, "legacy", model, contention, **kw)
+    h_col, r_col = _run(qname, "columnar", model, contention, **kw)
+    s_leg, s_col = h_leg.nvram.stats, h_col.nvram.stats
+    for t in s_leg:
+        assert s_leg[t] == s_col[t], (
+            f"{qname}/{model}/{contention}: thread {t} Stats diverge\n"
+            f"  legacy:   {s_leg[t]}\n  columnar: {s_col[t]}")
+    assert list(r_col.ops) == list(r_leg.ops)
+    assert list(r_col.events) == list(r_leg.events)
+    assert r_col.ops_completed == r_leg.ops_completed
+    assert r_col.sim_time_ns == r_leg.sim_time_ns
+    assert h_col.queue.drain(0) == h_leg.queue.drain(0)
+    return h_col
+
+
+@pytest.mark.parametrize("model", sorted(MEMORY_MODELS))
+@pytest.mark.parametrize("qname", QUEUES8)
+def test_columnar_bit_identical_all_models(qname, model):
+    """The core gate: 8 queues x 3 models, mixed workload, contention off."""
+    h = assert_bit_identical(qname, model, "off")
+    assert h._rstore is not None, "columnar mode lost its store"
+    assert h.fast is not None and h.fast.fast_ops > 0, \
+        "fast path never engaged -- the staged-burst path went untested"
+
+
+@pytest.mark.parametrize("contention", ["on", "learned"])
+@pytest.mark.parametrize("qname", QUEUES8)
+def test_columnar_bit_identical_contended(qname, contention):
+    """Contended runs fall back to the generic scheduler loop (the staged
+    dispatch is uncontended-only); records flow through the eager direct
+    path and must still match legacy bit for bit."""
+    assert_bit_identical(qname, "optane-clwb", contention)
+
+
+@pytest.mark.parametrize("qname", ["DurableMSQ", "OptUnlinkedQ", "LinkedQ"])
+def test_columnar_bit_identical_uncompiled(qname):
+    """compiled=False exercises the per-op direct-row path end to end."""
+    assert_bit_identical(qname, "optane-clwb", "off", compiled=False)
+
+
+@pytest.mark.parametrize("qname", ["DurableMSQ", "NVTraverseQ"])
+def test_columnar_matches_legacy_on_exact_scheduler(qname):
+    """The exact per-primitive scheduler (crash harness) writes records
+    through begin_op/complete_op; both record modes must agree there too,
+    including incomplete ops cut off by a crash."""
+    def scheduled(records, crash_at):
+        h = QueueHarness(ALL_QUEUES[qname], nthreads=3, area_nodes=64,
+                         model="optane-clwb", records=records)
+        plans = [[("enq", (t, i)) for i in range(4)] + [("deq", None)]
+                 for t in range(3)]
+        h.run_scheduled(plans, seed=5, crash_at=crash_at)
+        return h
+    for crash_at in (None, 37):
+        h_leg = scheduled("legacy", crash_at)
+        h_col = scheduled("columnar", crash_at)
+        assert list(h_col.ops) == list(h_leg.ops), f"crash_at={crash_at}"
+        assert list(h_col.events) == list(h_leg.events)
+        for t in h_leg.nvram.stats:
+            assert h_col.nvram.stats[t] == h_leg.nvram.stats[t]
+
+
+# --------------------------------------------------- snapshot/restore seam
+
+def test_record_snapshot_restore_roundtrip_nonzero_cursors():
+    """Cursors snapshot with memory state and restore rewinds the record
+    history exactly -- through non-zero cursors, not just the empty store."""
+    h, _ = _run("DurableMSQ", "columnar", "optane-clwb", nthreads=2, ops=20)
+    snap = h.record_snapshot()
+    n_ops, n_events = snap
+    assert n_ops > 0 and n_events > 0, "seam test needs non-zero cursors"
+    ops_before = list(h.ops)
+    events_before = list(h.events)
+    plans, _ = make_plans("mixed5050", 2, 10, seed=3)
+    h.run_batched(plans)
+    assert len(h.ops) > n_ops and len(h.events) > n_events
+    h.record_restore(snap)
+    assert h.record_snapshot() == snap
+    assert list(h.ops) == ops_before
+    assert list(h.events) == events_before
+
+
+def test_record_snapshot_restore_roundtrip_legacy_mode():
+    """The seam is mode-agnostic: legacy lists truncate the same way."""
+    h, _ = _run("DurableMSQ", "legacy", "optane-clwb", nthreads=2, ops=20)
+    snap = h.record_snapshot()
+    assert snap[0] > 0 and snap[1] > 0
+    ops_before, events_before = list(h.ops), list(h.events)
+    plans, _ = make_plans("mixed5050", 2, 10, seed=3)
+    h.run_batched(plans)
+    h.record_restore(snap)
+    assert list(h.ops) == ops_before and list(h.events) == events_before
+    with pytest.raises(ValueError):
+        h.record_restore((snap[0] + 10 ** 6, snap[1]))
+
+
+def test_store_restore_recomputes_thread_chains():
+    """After a cursor restore, per-thread seq numbers and the start-clock
+    chain continue from the surviving rows, not from stale carries."""
+    rs = RecordStore(nthreads=2)
+    for i in range(6):
+        rs.begin_op(i % 2, "enq", item=i, completed=True)
+    snap = rs.snapshot()
+    assert snap == (6, 0)
+    for i in range(4):
+        rs.begin_op(0, "deq", item=None, completed=True)
+    rs.restore(snap)
+    assert rs.snapshot() == snap
+    # thread 0 had rows 0,2,4 -> seqs 0,1,2; the next row continues at 3
+    i = rs.begin_op(0, "enq", item=99, completed=True)
+    assert rs.seq[i] == 3
+    assert [r.item for r in rs.op_records()] == [0, 1, 2, 3, 4, 5, 99]
+
+
+def test_capture_boundaries_carry_record_cursors():
+    """The crash sweep's Boundary pairs each EngineSnapshot with the
+    record cursors taken at the same quiescent instant."""
+    from repro.crash.capture import capture_run
+    from repro.crash.sweep import standard_plans
+    h = QueueHarness(ALL_QUEUES["DurableMSQ"], nthreads=2, area_nodes=64,
+                     model="optane-clwb")
+    cap = capture_run(h, standard_plans(2, 3), seed=1)
+    assert cap.boundaries, "capture produced no boundaries"
+    for b in cap.boundaries:
+        assert b.rec_snap == (b.ops_len, b.events_len)
+    assert cap.boundaries[-1].rec_snap[0] == len(cap.ops)

@@ -10,7 +10,8 @@ durable queues: **15%** for the hand-fit ``retry_profile()`` constants
 (``--contention learned``, fit by ``repro.trace.fit`` -- see
 ``python benchmarks/run.py fit-profiles``).  The 12/16-thread extension
 of the learned envelope lives in the slow-marked part of
-``tests/test_trace_fit.py``.
+``tests/test_trace_fit.py`` (16%, with multi-seed exact ground truth
+for the fence-heavy worst cells).
 
 The exact scheduler is the ground truth because its retries are real: a
 thread that loses the link CAS re-reads the tail, takes the helping path,

@@ -230,6 +230,106 @@ def test_subset_mode_enumerates_pending_outcomes():
     assert len(outcomes) >= 3
 
 
+def test_subset_mode_exhausts_interior_eviction_prefixes():
+    """``exhaustive_log`` widens the implicit-eviction axis from its two
+    corners to every per-line store prefix: interior outcomes -- a strict
+    prefix of one line surviving alongside another line's full log -- are
+    reachable only there, and dropping ``k == 0`` entries keeps the
+    enumeration duplicate-free."""
+    nv = NVRAM(1)
+    a = nv.alloc_region(16, "r")
+    nv.write(a, "x1")
+    nv.flush(a)             # pending flush covering the first store
+    nv.write(a + 1, "x2")   # second store on the same line, behind the flush
+    nv.write(a + 8, "y1")   # second line, never flushed
+    snap = nv.snapshot(volatile=False)
+
+    class FakeBoundary:
+        pass
+
+    fb = FakeBoundary()
+    fb.snap = snap
+    corners = choice_space(fb)
+    full = choice_space(fb, exhaustive_log=True)
+    # 2 flush-subsets x (2+1) prefixes of line a x (1+1) prefixes of line a+8
+    assert corners.combos == 4
+    assert full.combos == 12
+    choices = list(enumerate_choices(full))
+    assert len(choices) == full.combos
+    assert len({(c.flush_survivors, c.nt_prefix, c.log_prefix)
+                for c in choices}) == full.combos, "duplicate outcomes"
+
+    outcomes = set()
+    for ch in choices:
+        nv.restore(snap)
+        nv.crash(mode="subset", choices=ch)
+        outcomes.add((nv.pread(a), nv.pread(a + 1), nv.pread(a + 8)))
+    # the corner outcomes are still covered...
+    for mode in ("min", "max"):
+        nv.restore(snap)
+        nv.crash(mode=mode)
+        assert (nv.pread(a), nv.pread(a + 1), nv.pread(a + 8)) in outcomes
+    # ...and the interior prefixes appear: one line's strict prefix
+    # combined with the other line's survival, unreachable from corners
+    assert (None, None, "y1") in outcomes
+    assert ("x1", None, "y1") in outcomes
+
+
+def _exhaustive_cell_sweeps(per_thread, subset_cap):
+    """The satellite cell: DurableMSQ x optane-clwb, 2 threads, 2-node
+    designated areas -- small enough that EVERY boundary's outcome space,
+    including mid-area-zeroing ones (several pending zero-flushes plus
+    8-word line logs), fits under the cap.  Returns (corners, exhaustive)
+    sweep results over the identical capture."""
+    kw = dict(nthreads=2, per_thread=per_thread, seed=1, area_nodes=2,
+              subset_cap=subset_cap)
+    return (sweep_queue("DurableMSQ", **kw),
+            sweep_queue("DurableMSQ", exhaustive_log=True, **kw))
+
+
+def _assert_exhaustive_cell(r_corner, r_ex):
+    assert not r_corner.failures, r_corner.failures[0]
+    assert not r_ex.failures, r_ex.failures[0]
+    cov_c, cov_e = r_corner.coverage(), r_ex.coverage()
+    # truly exhaustive: no boundary's subset space overflowed the cap
+    assert cov_e["subset_skipped"] == 0
+    assert cov_e["subset_enumerated"] == r_ex.total_steps
+    # the interior prefixes are a strict superset of the corner outcomes
+    assert cov_e["crashes_checked"] > cov_c["crashes_checked"]
+    sub_e = {r["crash_step"]: r for r in r_ex.rows if r["mode"] == "subset"}
+    sub_c = {r["crash_step"]: r for r in r_corner.rows
+             if r["mode"] == "subset"}
+    assert all(sub_e[s]["subset_combos"] >= sub_c[s]["subset_combos"]
+               for s in sub_e)
+    # at least one boundary with a multi-entry line log was widened beyond
+    # its two eviction corners...
+    assert any(r["log_words"] >= 2
+               and r["subset_combos"] > sub_c[s]["subset_combos"]
+               for s, r in sub_e.items())
+    # ...and the mid-area-zeroing boundaries (>= 2 pending zero-flushes
+    # from one thread's area init) were exhausted, not skipped
+    mid_zero = [r for r in sub_e.values() if r["pending_flush"] >= 2]
+    assert mid_zero, "no mid-area-zeroing boundary in the capture?"
+    assert all(r["subset_combos"] > 0 for r in mid_zero)
+
+
+def test_sweep_exhaustive_interior_prefixes_reduced():
+    """Tier-1 cell: every boundary of a tiny DurableMSQ run, with the full
+    per-line eviction-prefix product and all mid-area-zeroing boundaries
+    enumerated (~6.5k crash images in under a second)."""
+    _assert_exhaustive_cell(*_exhaustive_cell_sweeps(per_thread=2,
+                                                     subset_cap=2048))
+
+
+@pytest.mark.slow
+def test_sweep_exhaustive_interior_prefixes_full_cell():
+    """The full satellite cell (per_thread=4: ~29k crash images, ~5s):
+    exhaustive interior eviction prefixes and mid-area-zeroing boundaries
+    for DurableMSQ x optane-clwb."""
+    _assert_exhaustive_cell(*_exhaustive_cell_sweeps(per_thread=4,
+                                                     subset_cap=32768))
+
+
 def test_restore_rewinds_address_space():
     """Regions allocated after a snapshot are forgotten by restore, so
     repeated recoveries cannot leak address space across crash points."""

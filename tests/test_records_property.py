@@ -1,0 +1,200 @@
+"""Property tests for the columnar record store (repro.core.records).
+
+Three families of invariants, each run both as a seeded-random sweep
+(always on; no optional deps) and as a hypothesis property when the
+optional dev dependency is installed (CI):
+
+  R1. capacity: columns auto-grow by doubling and growth PRESERVES
+      contents -- every row written before a grow reads back identically
+      after it; per-thread seq numbers stay contiguous across grows;
+  R2. exhaustion is loud: with an explicit ``max_records`` bound the
+      store raises :class:`RecordCapacityError` instead of dropping
+      rows, and the rows already stored survive the failed append --
+      never a silent truncation of the history the linearizability
+      checker reads;
+  R3. interleaving: arbitrary interleaves of staged-burst charges
+      (``run_batched``), direct rows, reads (which force a staging
+      sync), cursor snapshots and restores leave the columnar history
+      bit-identical to the legacy list path driven by the same sequence.
+"""
+import random
+
+import pytest
+
+from repro.core import ALL_QUEUES, QueueHarness
+from repro.core.records import (OpRecord, RecordCapacityError, RecordStore)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    _HAS_HYPOTHESIS = True
+except ImportError:
+    _HAS_HYPOTHESIS = False
+
+
+# ------------------------------------------------------------ R1: auto-grow
+
+def _fill_and_check_grow(n_rows, nthreads, op_capacity):
+    rs = RecordStore(nthreads=nthreads, op_capacity=op_capacity,
+                     event_capacity=op_capacity)
+    expect = []
+    for i in range(n_rows):
+        tid = i % nthreads
+        kind = "enq" if i % 3 else "deq"
+        rs.begin_op(tid, kind, item=("it", i), completed=bool(i % 2))
+        rs.append_event(("ev", i))
+        expect.append(OpRecord(tid=tid, kind=kind, item=("it", i),
+                               completed=bool(i % 2)))
+    assert len(rs.tid) >= n_rows > op_capacity, "growth never triggered"
+    assert rs.op_records() == expect
+    assert rs.event_tuples() == [("ev", i) for i in range(n_rows)]
+    # per-thread seqs must be 0..k-1 in row order despite the grows
+    seen = [0] * nthreads
+    for i in range(n_rows):
+        t = int(rs.tid[i])
+        assert int(rs.seq[i]) == seen[t]
+        seen[t] += 1
+
+
+def test_auto_grow_preserves_contents_seeded():
+    rng = random.Random(11)
+    for _ in range(8):
+        _fill_and_check_grow(n_rows=rng.randint(10, 400),
+                             nthreads=rng.randint(1, 8),
+                             op_capacity=rng.choice([1, 2, 3, 8]))
+
+
+# --------------------------------------------------------- R2: loud overflow
+
+def _check_overflow(max_records, extra):
+    rs = RecordStore(nthreads=2, op_capacity=1, event_capacity=1,
+                     max_records=max_records)
+    for i in range(max_records):
+        rs.begin_op(i % 2, "enq", item=i, completed=True)
+        rs.append_event(("enq", i))
+    before_ops = rs.op_records()
+    before_evs = rs.event_tuples()
+    for _ in range(extra):
+        with pytest.raises(RecordCapacityError):
+            rs.begin_op(0, "enq", item="overflow")
+        with pytest.raises(RecordCapacityError):
+            rs.append_event(("enq", "overflow"))
+    # the failed appends changed nothing: no truncation, no partial rows
+    assert rs.op_records() == before_ops
+    assert rs.event_tuples() == before_evs
+    assert rs.snapshot() == (max_records, max_records)
+
+
+def test_capacity_exhaustion_is_explicit_seeded():
+    rng = random.Random(23)
+    for _ in range(6):
+        _check_overflow(max_records=rng.randint(1, 64),
+                        extra=rng.randint(1, 3))
+
+
+def test_staged_burst_overflow_is_explicit():
+    """Exhaustion must be loud on the staged (compiled fast) path too:
+    the burst fails before any row is scattered, so the history keeps
+    exactly the rows that fit -- nothing silently dropped mid-burst."""
+    h = QueueHarness(ALL_QUEUES["DurableMSQ"], nthreads=2,
+                     model="optane-clwb")
+    rs = h._rstore
+    rs.max_records = 10
+    plans = [[("enq", (t, i)) for i in range(20)] for t in range(2)]
+    with pytest.raises(RecordCapacityError):
+        h.run_batched(plans)
+        len(h.ops)   # force the staged burst to materialize
+    assert rs.n_ops <= 10
+
+
+# -------------------------------------------------------- R3: interleaving
+
+_QNAME = "DurableMSQ"
+
+
+def _interleave_trial(steps, nthreads=2):
+    """Drive a columnar and a legacy harness through the same random
+    sequence of bursts / direct rows / reads / snapshot / restore and
+    assert the record state never diverges."""
+    pair = [QueueHarness(ALL_QUEUES[_QNAME], nthreads=nthreads,
+                         model="optane-clwb", records=mode)
+            for mode in ("columnar", "legacy")]
+    snaps = []
+    counter = [0]
+
+    def burst(rng_seed):
+        rng = random.Random(rng_seed)
+        plans = []
+        for t in range(nthreads):
+            plan = []
+            for _ in range(rng.randint(1, 5)):
+                if rng.random() < 0.5:
+                    plan.append(("enq", ("b", counter[0])))
+                    counter[0] += 1
+                else:
+                    plan.append(("deq", None))
+            plans.append(plan)
+        for h in pair:
+            h.run_batched([list(p) for p in plans])
+
+    def direct(rng_seed):
+        rng = random.Random(rng_seed)
+        item = ("d", counter[0])
+        counter[0] += 1
+        tid = rng.randrange(nthreads)
+        for h in pair:
+            h.ops.append(OpRecord(tid=tid, kind="enq", item=item,
+                                  completed=True))
+            h.events.append(("enq", item))
+
+    def snap(_):
+        snaps.append(pair[0].record_snapshot())
+        assert pair[1].record_snapshot() == snaps[-1]
+
+    def restore(rng_seed):
+        if not snaps:
+            return
+        rng = random.Random(rng_seed)
+        k = rng.randrange(len(snaps))
+        s = snaps[k]
+        del snaps[k + 1:]     # later snapshots die with the rewind
+        for h in pair:
+            h.record_restore(s)
+
+    actions = [burst, burst, direct, snap, restore]
+    for i, pick in enumerate(steps):
+        actions[pick % len(actions)](i * 7919)
+        h_col, h_leg = pair
+        assert list(h_col.ops) == list(h_leg.ops), f"step {i}"
+        assert list(h_col.events) == list(h_leg.events), f"step {i}"
+        assert h_col._completed_count() == h_leg._completed_count()
+
+
+def test_interleaved_burst_snapshot_restore_seeded():
+    rng = random.Random(7)
+    for _ in range(4):
+        _interleave_trial([rng.randrange(100) for _ in
+                           range(rng.randint(4, 12))])
+
+
+if _HAS_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(n_rows=st.integers(2, 300), nthreads=st.integers(1, 8),
+           cap=st.sampled_from([1, 2, 3, 8]))
+    def test_auto_grow_preserves_contents_property(n_rows, nthreads, cap):
+        if n_rows <= cap:
+            n_rows = cap + 1
+        _fill_and_check_grow(n_rows, nthreads, cap)
+
+    @settings(max_examples=20, deadline=None)
+    @given(max_records=st.integers(1, 64), extra=st.integers(1, 3))
+    def test_capacity_exhaustion_is_explicit_property(max_records, extra):
+        _check_overflow(max_records, extra)
+
+    @settings(max_examples=10, deadline=None)
+    @given(steps=st.lists(st.integers(0, 99), min_size=3, max_size=12))
+    def test_interleaved_burst_snapshot_restore_property(steps):
+        _interleave_trial(steps)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed (optional dev dep)")
+    def test_records_property_sweep():
+        pass

@@ -17,8 +17,8 @@ Four property groups:
   amendment queues strictly below their baselines, at zero), and the
   checked-in `benchmarks/profiles/learned.json` is complete, measured
   (no hand constants), and calibrates the batched model within 10% of
-  exact at 2-8 threads -- extended to 12/16 threads (20%, sampled ground
-  truth) in the slow-marked test.
+  exact at 2-8 threads -- extended to 12/16 threads (16%, multi-seed
+  ground truth for the worst cells) in the slow-marked test.
 """
 import json
 
@@ -237,30 +237,45 @@ def _counts(name, nthreads, engine, ops, contention=None, seed=1):
     return d.flushes + d.fences, d.post_flush_accesses
 
 
+#: the fence-heavy transforms are the calibration's worst cells (their
+#: flushed-access totals carry the most scheduling variance), so their
+#: ground truth is averaged over several exact seeds; the other queues'
+#: single-seed errors sit at or under ~4%, seed-to-seed spread included.
+FENCE_HEAVY_WORST = {"IzraelevitzQ", "NVTraverseQ"}
+GROUND_TRUTH_SEEDS = (1, 2, 3)
+
+
 @pytest.mark.slow
 @pytest.mark.parametrize("name", DURABLE7)
 def test_learned_calibration_extends_to_12_and_16_threads(name):
     """Past the exact scheduler's practical reach, the learned model stays
-    within 20% of *sampled* exact ground truth (12 ops/thread, one seed)
-    on persist-instruction and flushed-access totals at 12 and 16 threads.
+    within 16% of exact ground truth (12 ops/thread) on persist-instruction
+    and flushed-access totals at 12 and 16 threads.
 
-    With the per-window-size ``flushed_decay`` shapes (measured per traced
-    k instead of forced through 1/(1+dk)), the sampled worst case is
-    ~16% -- the fence-heavy transforms' flushed-access totals at one
-    thread count each -- and every other cell sits at or under ~5%.  The
-    20% gate absorbs single-seed sampling noise; tighten it only with
-    multi-seed ground truth.
+    Ground truth is *multi-seed* where it matters: the fence-heavy
+    transforms (IzraelevitzQ, NVTraverseQ) -- whose flushed-access totals
+    are the envelope's worst cells -- are averaged over three exact seeds,
+    which pins their model error at ~14-15% (vs up to ~17% against any
+    single seed).  Every other queue's cells sit at or under ~6% with
+    negligible seed spread, so one seed suffices there.  Both engines are
+    deterministic, so 16% is a real gate, not a noise margin; the prior
+    20% bound only existed to absorb single-seed sampling of the worst
+    cells.
 
     Slow: each exact 16-thread sample costs ~15-20 s of per-primitive
     OS-thread scheduling; CI runs this suite in a non-blocking job.
     """
-    TOL, PF_FLOOR, OPS = 0.20, 30, 12
+    TOL, PF_FLOOR, OPS = 0.16, 30, 12
+    seeds = GROUND_TRUTH_SEEDS if name in FENCE_HEAVY_WORST else (1,)
     for nthreads in (12, 16):
-        persist_e, pf_e = _counts(name, nthreads, "exact", OPS)
+        exact = [_counts(name, nthreads, "exact", OPS, seed=s)
+                 for s in seeds]
+        persist_e = sum(p for p, _ in exact) / len(exact)
+        pf_e = sum(f for _, f in exact) / len(exact)
         persist_b, pf_b = _counts(name, nthreads, "batched", OPS, "learned")
         assert abs(persist_b - persist_e) <= TOL * max(persist_e, 1), (
             f"{name} t{nthreads}: persist batched={persist_b} "
-            f"exact={persist_e} (> {TOL:.0%} off)")
+            f"exact={persist_e:.1f} over seeds {seeds} (> {TOL:.0%} off)")
         assert abs(pf_b - pf_e) <= TOL * max(pf_e, PF_FLOOR), (
             f"{name} t{nthreads}: flushed accesses batched={pf_b} "
-            f"exact={pf_e} (> {TOL:.0%} off)")
+            f"exact={pf_e:.1f} over seeds {seeds} (> {TOL:.0%} off)")
