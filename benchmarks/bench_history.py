@@ -1,0 +1,270 @@
+"""Perf-trajectory gate: fold run manifests into BENCH_<pr>.json, compare.
+
+Every ``benchmarks/run.py`` subcommand writes a run manifest
+(``repro.obs.manifest``) whose flat ``headline`` dict holds the cells
+worth tracking across PRs (``fastpath/<q>/compiled_us_per_op``,
+``fleet/<model>/<cont>/<q>/wall_us_per_op``,
+``crash-sweep/recoveries_per_s``, ...).  This tool maintains the
+committed trajectory under ``benchmarks/history/``:
+
+``fold``
+    merge one or more manifests' headline cells into a snapshot::
+
+        python benchmarks/bench_history.py fold --pr 8 \\
+            --out benchmarks/history/BENCH_8.json fp.manifest.json ...
+
+``compare``
+    gate fresh manifests against a baseline snapshot: **fail** (exit 1)
+    on a >25% per-op regression in any shared cell, **warn** on >10%
+    (thresholds via ``--fail-pct`` / ``--warn-pct``; ``--baseline auto``
+    picks the newest ``BENCH_*.json``).  Direction-aware: ``*_us_per_op``
+    cells regress upward, ``*_per_s`` / ``*_speedup*`` cells regress
+    downward.  Cells present on only one side are reported but never
+    gate -- a retired queue or a new metric must not break CI.
+
+CI runs ``compare`` in the fastpath-smoke and fleet-smoke jobs (the
+baseline-relative replacement for hand-pinned thresholds); a PR that
+intentionally shifts performance re-folds and commits a new snapshot.
+Wall-clock cells measured on different hosts drift -- compare prints an
+env note when baseline and current hostnames differ.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.obs.manifest import (ManifestError, collect_env, collect_git,
+                                load_manifest)
+
+SNAPSHOT_SCHEMA = "repro.obs.bench-history/v1"
+HISTORY_DIR = os.path.join(os.path.dirname(__file__), "history")
+
+# Cells where bigger is better (everything else regresses upward).
+_HIGHER_BETTER_SUFFIXES = ("_per_s", "_mops", "speedup", "_speedup_vs_cap",
+                           "_speedup_same_scale")
+
+
+def is_higher_better(key: str) -> bool:
+    tail = key.rsplit("/", 1)[-1]
+    return any(tail.endswith(s) or s in tail
+               for s in _HIGHER_BETTER_SUFFIXES)
+
+
+def regression_pct(key: str, base: float, cur: float) -> float:
+    """Signed regression percentage for a cell: positive = worse.
+
+    Lower-is-better cells (``*_us_per_op``): (cur - base) / base.
+    Higher-is-better cells (``*_per_s``, speedups): (base - cur) / base.
+    """
+    if base == 0:
+        return 0.0
+    if is_higher_better(key):
+        return (base - cur) / abs(base) * 100.0
+    return (cur - base) / abs(base) * 100.0
+
+
+def validate_snapshot(snap) -> dict:
+    problems = []
+    if not isinstance(snap, dict):
+        raise ManifestError("snapshot must be a dict")
+    if snap.get("schema") != SNAPSHOT_SCHEMA:
+        problems.append(f"schema must be {SNAPSHOT_SCHEMA!r}, "
+                        f"got {snap.get('schema')!r}")
+    if not isinstance(snap.get("pr"), int):
+        problems.append("pr must be an int")
+    cells = snap.get("cells")
+    if not isinstance(cells, dict) or any(
+            not isinstance(k, str) or isinstance(v, bool)
+            or not isinstance(v, (int, float)) for k, v in (cells or {}).items()):
+        problems.append("cells must be a dict of str -> number")
+    if problems:
+        raise ManifestError("invalid snapshot: " + "; ".join(problems))
+    return snap
+
+
+def load_snapshot(path: str) -> dict:
+    with open(path) as fh:
+        snap = json.load(fh)
+    try:
+        return validate_snapshot(snap)
+    except ManifestError as e:
+        raise ManifestError(f"{path}: {e}") from None
+
+
+def latest_snapshot_path(history_dir: str = HISTORY_DIR) -> Optional[str]:
+    """Newest committed BENCH_<pr>.json by PR number, or None."""
+    best, best_pr = None, -1
+    for path in glob.glob(os.path.join(history_dir, "BENCH_*.json")):
+        stem = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        try:
+            pr = int(stem)
+        except ValueError:
+            continue
+        if pr > best_pr:
+            best, best_pr = path, pr
+    return best
+
+
+def fold(manifest_paths: List[str], pr: int,
+         note: str = "") -> Tuple[dict, List[str]]:
+    """Merge manifests' headline cells into one snapshot.  Later manifests
+    win on duplicate keys; returns (snapshot, duplicate-key warnings)."""
+    cells: Dict[str, float] = {}
+    sources, warnings = [], []
+    for path in manifest_paths:
+        man = load_manifest(path)
+        for key, val in man["headline"].items():
+            if key in cells and cells[key] != val:
+                warnings.append(
+                    f"duplicate cell {key!r}: {cells[key]} -> {val} "
+                    f"(from {os.path.basename(path)})")
+            cells[key] = float(val)
+        sources.append({"path": os.path.basename(path),
+                        "subcommand": man["subcommand"],
+                        "created_unix": man["created_unix"]})
+    snap = {
+        "schema": SNAPSHOT_SCHEMA,
+        "pr": pr,
+        "created_unix": time.time(),
+        "git": collect_git(),
+        "env": collect_env(),
+        "note": note,
+        "sources": sources,
+        "cells": dict(sorted(cells.items())),
+    }
+    return validate_snapshot(snap), warnings
+
+
+def compare(baseline: dict, manifest_paths: List[str],
+            fail_pct: float = 25.0, warn_pct: float = 10.0) -> dict:
+    """Compare fresh manifests' headline cells against a baseline snapshot.
+
+    Returns {"rows": [...], "fails": n, "warns": n, "only_base": [...],
+    "only_current": [...]}; each row is (status, key, base, cur, pct)."""
+    current: Dict[str, float] = {}
+    for path in manifest_paths:
+        for key, val in load_manifest(path)["headline"].items():
+            current[key] = float(val)
+    base_cells = baseline["cells"]
+    rows, fails, warns = [], 0, 0
+    for key in sorted(set(current) & set(base_cells)):
+        pct = regression_pct(key, base_cells[key], current[key])
+        if pct > fail_pct:
+            status, fails = "FAIL", fails + 1
+        elif pct > warn_pct:
+            status, warns = "WARN", warns + 1
+        else:
+            status = "ok"
+        rows.append((status, key, base_cells[key], current[key], pct))
+    return {
+        "rows": rows, "fails": fails, "warns": warns,
+        "only_base": sorted(set(base_cells) - set(current)),
+        "only_current": sorted(set(current) - set(base_cells)),
+    }
+
+
+def fold_main(argv) -> int:
+    ap = argparse.ArgumentParser(
+        prog="bench_history.py fold",
+        description="Fold run manifests into a BENCH_<pr>.json snapshot.")
+    ap.add_argument("manifests", nargs="+", help="*.manifest.json inputs")
+    ap.add_argument("--pr", type=int, required=True,
+                    help="PR number the snapshot captures")
+    ap.add_argument("--out", default=None,
+                    help="snapshot path (default: "
+                         "benchmarks/history/BENCH_<pr>.json)")
+    ap.add_argument("--note", default="",
+                    help="free-form provenance note stored in the snapshot")
+    args = ap.parse_args(argv)
+    out = args.out or os.path.join(HISTORY_DIR, f"BENCH_{args.pr}.json")
+    snap, warnings = fold(args.manifests, args.pr, note=args.note)
+    for w in warnings:
+        print(f"# fold warning: {w}", file=sys.stderr)
+    os.makedirs(os.path.dirname(os.path.abspath(out)), exist_ok=True)
+    with open(out, "w") as fh:
+        json.dump(snap, fh, indent=2)
+        fh.write("\n")
+    print(f"# wrote {len(snap['cells'])} cells from "
+          f"{len(args.manifests)} manifest(s) to {out}")
+    return 0
+
+
+def compare_main(argv) -> int:
+    ap = argparse.ArgumentParser(
+        prog="bench_history.py compare",
+        description="Gate fresh manifests against a BENCH_<pr>.json "
+                    "baseline (fail >25%% per-op regression, warn >10%%).")
+    ap.add_argument("manifests", nargs="+", help="*.manifest.json inputs")
+    ap.add_argument("--baseline", default="auto",
+                    help="baseline snapshot path, or 'auto' for the newest "
+                         "benchmarks/history/BENCH_*.json")
+    ap.add_argument("--fail-pct", type=float, default=25.0,
+                    help="regression %% that fails the gate (default 25)")
+    ap.add_argument("--warn-pct", type=float, default=10.0,
+                    help="regression %% that warns (default 10)")
+    args = ap.parse_args(argv)
+    path = args.baseline
+    if path == "auto":
+        path = latest_snapshot_path()
+        if path is None:
+            print("# no BENCH_*.json under benchmarks/history/ -- "
+                  "nothing to compare against", file=sys.stderr)
+            return 0
+    baseline = load_snapshot(path)
+    res = compare(baseline, args.manifests,
+                  fail_pct=args.fail_pct, warn_pct=args.warn_pct)
+    print(f"# baseline {os.path.basename(path)} (PR {baseline['pr']}, "
+          f"sha {str(baseline['git'].get('sha'))[:9]})")
+    cur_host = collect_env()["hostname"]
+    base_host = baseline.get("env", {}).get("hostname")
+    if base_host and base_host != cur_host:
+        print(f"# note: baseline measured on {base_host!r}, this run on "
+              f"{cur_host!r} -- absolute wall-clock cells may drift")
+    for status, key, base, cur, pct in res["rows"]:
+        print(f"{status:<4} {key}  base={base:.4g} cur={cur:.4g} "
+              f"({pct:+.1f}%)")
+    for key in res["only_base"]:
+        print(f"gone {key}  (in baseline only; not gated)")
+    for key in res["only_current"]:
+        print(f"new  {key}  (no baseline; not gated)")
+    print(f"# {len(res['rows'])} cells compared: {res['fails']} fail, "
+          f"{res['warns']} warn "
+          f"(fail >{args.fail_pct:g}%, warn >{args.warn_pct:g}%)")
+    return 1 if res["fails"] else 0
+
+
+def show_main(argv) -> int:
+    ap = argparse.ArgumentParser(
+        prog="bench_history.py show",
+        description="Print a snapshot's cells (default: the newest).")
+    ap.add_argument("snapshot", nargs="?", default=None)
+    args = ap.parse_args(argv)
+    path = args.snapshot or latest_snapshot_path()
+    if path is None:
+        print("# no BENCH_*.json under benchmarks/history/", file=sys.stderr)
+        return 2
+    snap = load_snapshot(path)
+    print(f"# {os.path.basename(path)}: PR {snap['pr']}, "
+          f"sha {str(snap['git'].get('sha'))[:9]}, "
+          f"{len(snap['cells'])} cells")
+    for key, val in snap["cells"].items():
+        print(f"{key} = {val:.4g}")
+    return 0
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else list(argv)
+    cmds = {"fold": fold_main, "compare": compare_main, "show": show_main}
+    if not argv or argv[0] not in cmds:
+        print(__doc__.strip(), file=sys.stderr)
+        return 2
+    return cmds[argv[0]](argv[1:])
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,7 +13,9 @@
       dry-run artifacts (benchmarks/dryrun_results.jsonl if present)
 
 Prints ``name,us_per_call,derived`` CSV lines per the harness contract, and
-(with ``--out``) writes the full row set to a CSV file (the CI artifact).
+(with ``--out``) writes the full row set to a CSV file (the CI artifact)
+plus a versioned run manifest (git sha, config, env, phase timings,
+headline metrics -- see docs/observability.md) alongside it.
 
 Examples::
 
@@ -26,6 +28,7 @@ Examples::
   PYTHONPATH=src python benchmarks/run.py crash-sweep --out crash.csv
   PYTHONPATH=src python benchmarks/run.py fastpath-smoke --out fp.csv
   PYTHONPATH=src python benchmarks/run.py fleet --instances 100000 --check 8
+  PYTHONPATH=src python benchmarks/run.py profile --out profile.csv
 
 ``repro`` comes from the pyproject / ``PYTHONPATH=src`` convention (under
 pytest the pythonpath is configured for you); there is no ``sys.path``
@@ -40,6 +43,8 @@ import sys
 import time
 
 from repro.core import ALL_QUEUES, DURABLE_QUEUES, NVRAM, ONLL, QueueHarness
+from repro.obs import (Heartbeat, PhaseProfiler, build_manifest,
+                       manifest_path_for, write_manifest)
 
 try:        # package import (pytest / `python -m benchmarks.run`)
     from benchmarks.workloads import (contention_label, make_plans,
@@ -53,6 +58,48 @@ except ModuleNotFoundError:   # script mode: sibling module on sys.path[0]
 DURABLE = list(DURABLE_QUEUES)
 WORKLOADS = ["mixed5050", "pairs", "producers", "consumers", "prodcons"]
 MODELS = ["optane-clwb", "eadr", "cxl"]
+
+
+def _emit_manifest(subcommand: str, args, rows, headline,
+                   phases=None, wall_s=None, extra=None):
+    """Write the versioned run manifest for a subcommand.
+
+    The path follows the ``--out`` CSV convention (``x.csv`` ->
+    ``x.manifest.json`` in the same directory); ``--manifest`` overrides
+    it (and works without a CSV).  No-op when neither is given."""
+    path = getattr(args, "manifest", None)
+    if not path and getattr(args, "out", None):
+        path = manifest_path_for(args.out)
+    if not path:
+        return None
+    man = build_manifest(subcommand=subcommand, config=vars(args),
+                         metrics=rows, headline=headline, phases=phases,
+                         wall_s=wall_s, extra=extra)
+    path = write_manifest(man, path)
+    print(f"# wrote manifest {path}")
+    return path
+
+
+def _trace_attribution(trace_out):
+    """Fold every captured trace's paper-§8 post-flush attribution into a
+    manifest section: which sites re-read flushed content, how often."""
+    import glob
+
+    from repro.trace import load_trace
+    from repro.trace.analyze import post_flush_per_op, post_flush_sites
+    out = {}
+    for path in sorted(glob.glob(os.path.join(trace_out, "*.trace.npz"))):
+        tr = load_trace(path)
+        name = os.path.basename(path)[:-len(".trace.npz")]
+        out[name] = {
+            "post_flush_per_op": {k: round(v, 4) for k, v in
+                                  post_flush_per_op(tr).items()},
+            "sites": [{"op_kind": s.op_kind, "region": s.region,
+                       "prim": s.prim, "count": s.count,
+                       "per_op": round(s.per_op, 4)}
+                      for s in post_flush_sites(tr)[:16]],
+        }
+    return out or None
 
 
 def _trace_path(trace_out, *parts) -> str:
@@ -200,6 +247,9 @@ def parse_args(argv=None) -> argparse.Namespace:
                          "records real interleavings")
     ap.add_argument("--out", default=None,
                     help="write all B1/B2 rows to this CSV file")
+    ap.add_argument("--manifest", default=None,
+                    help="run-manifest destination (default: alongside "
+                         "--out as <stem>.manifest.json)")
     ap.add_argument("--sections", default="b1,b2,b3,b4")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny CI run: 30 ops/thread, threads 1,4")
@@ -291,11 +341,16 @@ def fastpath_smoke_main(argv) -> None:
                     help="rerun the compiled workload with records='legacy' "
                          "and require bit-identical per-thread Stats")
     ap.add_argument("--out", default=None, help="CSV destination")
+    ap.add_argument("--manifest", default=None,
+                    help="run-manifest destination (default: alongside "
+                         "--out as <stem>.manifest.json)")
     args = ap.parse_args(argv)
     ops_per_thread = max(1, -(-args.ops // args.threads))
     total = ops_per_thread * args.threads
     cap_per_thread = max(1, -(-args.cap_ops // args.threads))
     cap_total = cap_per_thread * args.threads
+    t_run0 = time.perf_counter()
+    headline = {}
     modes = [
         # (label, ops/thread, compiled?, vectorized allocator seam?,
         #  pause GC?, area nodes) -- the first two reproduce the stack as
@@ -324,6 +379,7 @@ def fastpath_smoke_main(argv) -> None:
                                         opt, seed=0)
             for i in range(prefill):
                 h.queue.enqueue(0, ("pre", i))
+            base_stats = h.nvram.total_stats()
             t0 = time.perf_counter()
             res = h.run_batched(plans, compiled=compiled, pause_gc=pause_gc)
             wall = time.perf_counter() - t0
@@ -331,6 +387,7 @@ def fastpath_smoke_main(argv) -> None:
             assert res.ops_completed == n
             us = wall * 1e6 / n
             cell[label] = us
+            d = h.nvram.total_stats().minus(base_stats)
             if compiled:
                 columnar_stats = {t: h.nvram.stats[t].snapshot()
                                   for t in range(args.threads)}
@@ -339,6 +396,7 @@ def fastpath_smoke_main(argv) -> None:
                 "model": args.model, "threads": args.threads, "mode": label,
                 "ops": n, "wall_s": round(wall, 3),
                 "us_per_op": round(us, 3),
+                "post_flush_per_op": round(d.post_flush_accesses / n, 3),
                 "fast_ops": h.fast.fast_ops if h.fast else 0,
                 "bailed_ops": h.fast.bailed_ops if h.fast else 0,
                 "speedup_vs_cap": "", "speedup_same_scale": "",
@@ -347,6 +405,11 @@ def fastpath_smoke_main(argv) -> None:
         speedup_same = cell["per-op"] / cell["compiled"]
         rows[-1]["speedup_vs_cap"] = round(speedup_cap, 2)
         rows[-1]["speedup_same_scale"] = round(speedup_same, 2)
+        headline[f"fastpath/{qname}/compiled_us_per_op"] = \
+            round(cell["compiled"], 4)
+        headline[f"fastpath/{qname}/speedup_vs_cap"] = round(speedup_cap, 2)
+        headline[f"fastpath/{qname}/speedup_same_scale"] = \
+            round(speedup_same, 2)
         print(f"fastpath/{qname}/compiled,{cell['compiled']:.3f},"
               f"perop_cap_us={cell['per-op@cap']:.1f};"
               f"perop_us={cell['per-op']:.1f};"
@@ -375,10 +438,12 @@ def fastpath_smoke_main(argv) -> None:
                                         ops_per_thread, seed=0)
             for i in range(prefill):
                 h.queue.enqueue(0, ("pre", i))
+            base_stats = h.nvram.total_stats()
             t0 = time.perf_counter()
             res = h.run_batched(plans, compiled=True, pause_gc=True)
             wall = time.perf_counter() - t0
             assert res.ops_completed == total
+            d = h.nvram.total_stats().minus(base_stats)
             mismatches = [
                 (t, f)
                 for t in range(args.threads)
@@ -392,6 +457,8 @@ def fastpath_smoke_main(argv) -> None:
                 "mode": "compiled-legacy", "ops": total,
                 "wall_s": round(wall, 3),
                 "us_per_op": round(wall * 1e6 / total, 3),
+                "post_flush_per_op": round(
+                    d.post_flush_accesses / total, 3),
                 "fast_ops": h.fast.fast_ops if h.fast else 0,
                 "bailed_ops": h.fast.bailed_ops if h.fast else 0,
                 "speedup_vs_cap": "", "speedup_same_scale": "",
@@ -415,6 +482,8 @@ def fastpath_smoke_main(argv) -> None:
             w.writeheader()
             w.writerows(rows)
         print(f"# wrote {len(rows)} rows to {args.out}")
+    _emit_manifest("fastpath-smoke", args, rows, headline,
+                   wall_s=time.perf_counter() - t_run0)
     if failures:
         for msg in failures:
             print(f"# FASTPATH SMOKE FAILURE: {msg}", file=sys.stderr)
@@ -480,13 +549,24 @@ def fleet_main(argv) -> None:
     ap.add_argument("--check", type=int, default=0,
                     help="equivalence-check this many sampled instances per "
                          "cell against independent run_batched harnesses")
+    ap.add_argument("--heartbeat", type=float, default=5.0,
+                    help="seconds between fleet progress lines on stderr "
+                         "(chunks done, bails, rejoins, residents, us/op "
+                         "so far)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress the stderr heartbeat (tests/CI logs)")
     ap.add_argument("--out", default=None, help="CSV destination")
+    ap.add_argument("--manifest", default=None,
+                    help="run-manifest destination (default: alongside "
+                         "--out as <stem>.manifest.json)")
     args = ap.parse_args(argv)
     from repro.fleet import (FleetConfig, check_instances,
                              ensure_host_devices, run_fleet)
     if args.backend != "numpy":
         ensure_host_devices(args.devices)
     rows, failures = [], []
+    headline = {}
+    t_run0 = time.perf_counter()
     print(f"# fleet: {args.instances} instances x {args.ops} ops "
           f"(backend {args.backend}, chunk {args.chunk})")
     print("name,us_per_call,derived")
@@ -498,7 +578,10 @@ def fleet_main(argv) -> None:
                     ops=args.ops, prefill=args.prefill, seed=args.seed,
                     chunk=args.chunk, backend=args.backend,
                     devices=args.devices, batch=args.batch, contention=cont)
-                res = run_fleet(cfg)
+                hb = None if args.quiet else Heartbeat(
+                    interval_s=args.heartbeat,
+                    label=f"fleet {model}/{cont}/{qname}")
+                res = run_fleet(cfg, heartbeat=hb)
                 agg = res.aggregate()
                 total = res.total_ops
                 sim_ns = agg.time_ns / total
@@ -538,12 +621,16 @@ def fleet_main(argv) -> None:
                       f"fences_per_op={agg.fences / total:.2f};"
                       f"backend={res.backend};bails={res.bails};"
                       f"checked={check_ok}/{checked}")
+                headline[f"fleet/{model}/{cont}/{qname}/wall_us_per_op"] = \
+                    round(res.run_s * 1e6 / total, 4)
     if args.out:
         with open(args.out, "w", newline="") as f:
             w = csv.DictWriter(f, fieldnames=FLEET_CSV_COLUMNS)
             w.writeheader()
             w.writerows(rows)
         print(f"# wrote {len(rows)} rows to {args.out}")
+    _emit_manifest("fleet", args, rows, headline,
+                   wall_s=time.perf_counter() - t_run0)
     if failures:
         for msg in failures:
             print(f"# FLEET CHECK FAILURE: {msg}", file=sys.stderr)
@@ -600,6 +687,197 @@ def crash_sweep_main(argv) -> None:
         sys.exit(rc)
 
 
+# Execution phases the `profile` subcommand reports for run_batched cells
+# (see repro.obs.profiler); CSV columns replace '-' with '_'.
+EXEC_PHASES = ("heap-loop", "interpreted-body", "record-charging",
+               "bookkeeping", "bail-real-op")
+FLEET_PHASES = ("lowering", "chunk-step", "poll", "bail-replay",
+                "resident-replay")
+CRASH_PHASES = ("capture", "restore", "recover", "check")
+
+
+def _phase_cols(per, names):
+    """{phase -> value} -> ordered (column, value) pairs for CSV rows."""
+    return [(ph.replace("-", "_") + "_us", round(per.get(ph, 0.0), 4))
+            for ph in names]
+
+
+def profile_main(argv) -> None:
+    """`run.py profile`: per-phase µs/op attribution across the layers.
+
+    For every queue x model cell, runs the standard workload under an
+    attached :class:`repro.obs.PhaseProfiler` and prints where each
+    microsecond goes: ``heap-loop`` (dispatch + cursor bookkeeping),
+    ``interpreted-body`` (the compiled per-op fns -- the interpreted
+    Python the vectorized-burst roadmap item targets), ``record-charging``
+    (the columnar store's staged-burst sync passes), ``bookkeeping``
+    (setup/teardown) and ``bail-real-op`` (real per-primitive fallbacks).
+    The phase sum is within 10% of wall time by construction (gap-free
+    scoped timers); a coverage outside [0.9, 1.1] prints a warning.
+
+    ``--sections fleet`` and ``--sections crash`` add the fleet runner
+    (lowering / chunk-step / poll / bail-replay / resident-replay) and
+    crash-sweep recovery (capture / restore / recover / check) phase
+    breakdowns.  Each cell does a small warmup run first so codegen and
+    cache fills are not attributed to the measured phases.
+    """
+    ap = argparse.ArgumentParser(
+        prog="run.py profile",
+        description=profile_main.__doc__.splitlines()[0])
+    ap.add_argument("--queues", default=",".join(ALL_QUEUES),
+                    help="comma-separated (default: all 8 queues)")
+    ap.add_argument("--models", default="optane-clwb",
+                    help=f"comma-separated memory models ({','.join(MODELS)})")
+    ap.add_argument("--threads", type=int, default=4)
+    ap.add_argument("--ops", type=int, default=2000, help="ops per thread")
+    ap.add_argument("--workload", default="mixed5050")
+    ap.add_argument("--area-nodes", type=int, default=1024)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sections", default="exec",
+                    help="comma-separated: exec (run_batched phases), "
+                         "fleet (fleet-runner phases), crash (crash-sweep "
+                         "recovery phases)")
+    ap.add_argument("--fleet-instances", type=int, default=2000)
+    ap.add_argument("--fleet-ops", type=int, default=48)
+    ap.add_argument("--crash-ops", type=int, default=2,
+                    help="enqueues per thread for the crash-profile cell")
+    ap.add_argument("--out", default=None, help="CSV destination")
+    ap.add_argument("--manifest", default=None,
+                    help="run-manifest destination (default: alongside "
+                         "--out as <stem>.manifest.json)")
+    args = ap.parse_args(argv)
+    sections = set(args.sections.split(","))
+    unknown = sections - {"exec", "fleet", "crash"}
+    if unknown:
+        ap.error(f"unknown --sections {sorted(unknown)}")
+    queues = args.queues.split(",")
+    models = args.models.split(",")
+    rows, headline = [], {}
+    all_phases = PhaseProfiler()
+    t_run0 = time.perf_counter()
+    print(f"# profile: per-phase us/op ({args.workload} x {args.threads} "
+          f"threads x {args.ops} ops/thread; sections "
+          f"{','.join(sorted(sections))})")
+    print("name,us_per_call,derived")
+    if "exec" in sections:
+        for model in models:
+            for qname in queues:
+                # warmup: executor codegen + numpy caches, outside timing
+                hw = QueueHarness(ALL_QUEUES[qname], nthreads=args.threads,
+                                  model=model, area_nodes=args.area_nodes)
+                wplans, wprefill = make_plans(args.workload, args.threads,
+                                              8, seed=args.seed)
+                for i in range(wprefill):
+                    hw.queue.enqueue(0, ("pre", i))
+                hw.run_batched(wplans)
+                h = QueueHarness(ALL_QUEUES[qname], nthreads=args.threads,
+                                 model=model, area_nodes=args.area_nodes)
+                plans, prefill = make_plans(args.workload, args.threads,
+                                            args.ops, seed=args.seed)
+                for i in range(prefill):
+                    h.queue.enqueue(0, ("pre", i))
+                prof = PhaseProfiler()
+                t0 = time.perf_counter()
+                res = h.run_batched(plans, profile=prof)
+                wall = time.perf_counter() - t0
+                n = res.ops_completed
+                per = prof.us_per_op(n)
+                cov = prof.coverage(wall)
+                us = wall * 1e6 / max(n, 1)
+                row = {"section": "exec", "queue": qname, "model": model,
+                       "threads": args.threads, "ops": n,
+                       "wall_s": round(wall, 4), "us_per_op": round(us, 4),
+                       "coverage": round(cov, 4),
+                       "fast_ops": h.fast.fast_ops if h.fast else 0,
+                       "bailed_ops": h.fast.bailed_ops if h.fast else 0}
+                row.update(_phase_cols(per, EXEC_PHASES))
+                rows.append(row)
+                derived = ";".join(
+                    f"{c}={v}" for c, v in _phase_cols(per, EXEC_PHASES))
+                print(f"profile/{model}/{qname},{us:.3f},"
+                      f"{derived};coverage={cov:.3f}")
+                if not 0.9 <= cov <= 1.1:
+                    print(f"# profile WARNING: {model}/{qname} phase sum "
+                          f"covers {cov:.2f}x of wall time "
+                          f"(expected within 10%)", file=sys.stderr)
+                headline[f"profile/{model}/{qname}/us_per_op"] = \
+                    round(us, 4)
+                all_phases.merge(prof)
+    if "fleet" in sections:
+        from repro.fleet import FleetConfig, run_fleet
+        for model in models:
+            for qname in queues:
+                cfg = FleetConfig(queue=qname, model=model,
+                                  instances=args.fleet_instances,
+                                  ops=args.fleet_ops, seed=args.seed,
+                                  backend="numpy")
+                prof = PhaseProfiler()
+                t0 = time.perf_counter()
+                res = run_fleet(cfg, profile=prof)
+                wall = time.perf_counter() - t0
+                n = res.total_ops
+                per = prof.us_per_op(n)
+                cov = prof.coverage(wall)
+                us = res.run_s * 1e6 / n
+                row = {"section": "fleet", "queue": qname, "model": model,
+                       "threads": 1, "ops": n, "wall_s": round(wall, 4),
+                       "us_per_op": round(us, 4), "coverage": round(cov, 4),
+                       "fast_ops": 0, "bailed_ops": res.bails}
+                row.update(_phase_cols(per, FLEET_PHASES))
+                rows.append(row)
+                derived = ";".join(
+                    f"{c}={v}" for c, v in _phase_cols(per, FLEET_PHASES))
+                print(f"profile-fleet/{model}/{qname},{us:.4f},"
+                      f"{derived};coverage={cov:.3f}")
+                headline[f"profile-fleet/{model}/{qname}/us_per_op"] = \
+                    round(us, 4)
+                all_phases.merge(prof)
+    if "crash" in sections:
+        from repro.crash.sweep import sweep_queue
+        for model in models:
+            for qname in queues:
+                if qname not in DURABLE_QUEUES:
+                    continue   # the volatile baseline has no recovery
+                prof = PhaseProfiler()
+                t0 = time.perf_counter()
+                r = sweep_queue(qname, per_thread=args.crash_ops,
+                                model=model, profile=prof)
+                wall = time.perf_counter() - t0
+                cov_info = r.coverage()
+                checks = max(cov_info["crashes_checked"], 1)
+                per = prof.us_per_op(checks)   # us per recovery check
+                cov = prof.coverage(wall)
+                us = cov_info["recovery_us_total"] / checks
+                row = {"section": "crash", "queue": qname, "model": model,
+                       "threads": 3, "ops": checks,
+                       "wall_s": round(wall, 4), "us_per_op": round(us, 4),
+                       "coverage": round(cov, 4),
+                       "fast_ops": 0, "bailed_ops": 0}
+                row.update(_phase_cols(per, CRASH_PHASES))
+                rows.append(row)
+                derived = ";".join(
+                    f"{c}={v}" for c, v in _phase_cols(per, CRASH_PHASES))
+                print(f"profile-crash/{model}/{qname},{us:.3f},"
+                      f"{derived};coverage={cov:.3f}")
+                headline[f"profile-crash/{model}/{qname}"
+                         f"/recoveries_per_s"] = round(1e6 / max(us, 1e-9), 2)
+                all_phases.merge(prof)
+    if args.out and rows:
+        fieldnames = []
+        for r in rows:
+            for k in r:
+                if k not in fieldnames:
+                    fieldnames.append(k)
+        with open(args.out, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=fieldnames, restval="")
+            w.writeheader()
+            w.writerows(rows)
+        print(f"# wrote {len(rows)} rows to {args.out}")
+    _emit_manifest("profile", args, rows, headline,
+                   phases=all_phases.as_dict(),
+                   wall_s=time.perf_counter() - t_run0)
+
+
 def main(argv=None) -> None:
     argv = sys.argv[1:] if argv is None else list(argv)
     if argv and argv[0] == "fit-profiles":
@@ -610,6 +888,8 @@ def main(argv=None) -> None:
         return fastpath_smoke_main(argv[1:])
     if argv and argv[0] == "fleet":
         return fleet_main(argv[1:])
+    if argv and argv[0] == "profile":
+        return profile_main(argv[1:])
     args = parse_args(argv)
     threads = sorted({int(t) for t in args.threads.split(",")})
     models = args.models.split(",")
@@ -620,6 +900,7 @@ def main(argv=None) -> None:
         contention = ["off"]   # exact runs contend natively; one column
     sections = set(args.sections.split(","))
     rows = []
+    t_run0 = time.perf_counter()
     if "b1" in sections:
         rows += bench_fig2(args.ops, threads, models, workloads, queues,
                            args.engine, contention,
@@ -641,6 +922,21 @@ def main(argv=None) -> None:
         else:
             print(f"\n# warning: no CSV rows produced (sections "
                   f"{sorted(sections)} emit none); {args.out} not written")
+    # simulated per-op latencies are deterministic, so headline cells
+    # only move when the cost model (or a queue's schedule) changes --
+    # exactly the drift the manifest trajectory should record
+    headline = {}
+    for r in rows:
+        headline[f"{r['workload']}/{r['model']}/{r['contention']}"
+                 f"/t{r['threads']}/{r['queue']}/us_per_op_sim"] = \
+            round(r["us_per_op"], 4)
+    extra = None
+    if args.trace_out:
+        attribution = _trace_attribution(args.trace_out)
+        if attribution:
+            extra = {"post_flush_attribution": attribution}
+    _emit_manifest("bench", args, rows, headline,
+                   wall_s=time.perf_counter() - t_run0, extra=extra)
 
 
 if __name__ == "__main__":

@@ -249,7 +249,7 @@ class QueueHarness:
     def run_batched(self, plans: List[List[Tuple[str, Any]]],
                     contention: Union[ContentionModel, bool, None] = None,
                     trace=None, compiled: Optional[bool] = None,
-                    pause_gc: bool = True) -> RunResult:
+                    pause_gc: bool = True, profile=None) -> RunResult:
         """Clock-driven op-granularity execution: no OS threads, no yield
         points.  This is the throughput path -- hundreds of thousands of
         ops across 1..64+ threads are practical (the exact scheduler caps
@@ -272,7 +272,29 @@ class QueueHarness:
         per the queue's :meth:`retry_profile`; with one thread (or
         ``retry_scale=0``) the counts are bit-identical to the uncontended
         run.  Crash injection is not supported here; use
-        :meth:`run_scheduled` for crash/linearizability studies."""
+        :meth:`run_scheduled` for crash/linearizability studies.
+
+        ``profile`` attaches an observation-only phase profiler (e.g.
+        :class:`repro.obs.PhaseProfiler`): the whole call runs under a
+        ``bookkeeping`` phase, with the scheduler loop, op bodies, bails
+        and record-charging nested inside (see ``benchmarks/run.py
+        profile``).  Stats stay bit-identical; None (the default) leaves
+        every hot path untouched."""
+        if profile is not None:
+            profile.push("bookkeeping")
+            if self._rstore is not None:
+                self._rstore.profiler = profile
+        try:
+            return self._run_batched_inner(plans, contention, trace,
+                                           compiled, pause_gc, profile)
+        finally:
+            if profile is not None:
+                if self._rstore is not None:
+                    self._rstore.profiler = None
+                profile.pop()   # bookkeeping
+
+    def _run_batched_inner(self, plans, contention, trace, compiled,
+                           pause_gc, profile) -> RunResult:
         if contention is True:
             contention = ContentionModel()
         elif contention is False:
@@ -310,8 +332,9 @@ class QueueHarness:
             op_lists = [[self._make_op(t, kind, item)
                          for kind, item in plan]
                         for t, plan in enumerate(plans)]
-        sched = ClockScheduler(self.nvram, contention=contention, fast=fast,
-                               pause_gc=pause_gc)
+        sched = ClockScheduler(self.nvram, contention=contention,
+                               fast=fast, pause_gc=pause_gc,
+                               profile=profile)
         self._trace_begin(trace, len(plans), None, "batched")
         try:
             sched.run(op_lists, op_kinds=op_kinds, op_items=op_items,

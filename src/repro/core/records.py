@@ -134,6 +134,11 @@ class RecordStore:
         self._ex = None               # executor whose fast_ops we advance
         self.version = 0              # bumped on any mutation (view caches)
         self._lock = threading.Lock()
+        # optional observation-only phase profiler (duck-typed push/pop,
+        # e.g. repro.obs.PhaseProfiler): when attached, sync() charges its
+        # vector pass to the "record-charging" phase.  Never affects the
+        # records or engine charges themselves.
+        self.profiler = None
 
     # ------------------------------------------------------------- capacity
     def _ensure_ops(self, need: int) -> None:
@@ -215,9 +220,19 @@ class RecordStore:
         engine -- one vector pass, one ``charge_counts`` per distinct
         (outcome-key, tid, kind) triple.  Caller holds the lock or is the
         single-threaded batched scheduler."""
-        sm = self._sm
-        if not sm:
+        if not self._sm:
             return
+        prof = self.profiler
+        if prof is None:
+            return self._sync_impl()
+        prof.push("record-charging")
+        try:
+            self._sync_impl()
+        finally:
+            prof.pop()
+
+    def _sync_impl(self) -> None:
+        sm = self._sm
         n = len(sm)
         c = self.n_ops
         self._ensure_ops(c + n)

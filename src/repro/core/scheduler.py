@@ -195,11 +195,18 @@ class ClockScheduler:
     """
 
     def __init__(self, nvram: NVRAM, contention=None, fast=None,
-                 pause_gc: bool = True):
+                 pause_gc: bool = True, profile=None):
         self.nvram = nvram
         self.contention = contention   # Optional[ContentionModel]
         self.fast = fast               # Optional[opsched.FastPathExecutor]
         self.pause_gc = pause_gc       # False: seed-era GC behavior
+        # Optional observation-only phase profiler (duck-typed push/pop,
+        # e.g. repro.obs.PhaseProfiler).  When attached, run() takes a
+        # separate instrumented loop (_run_profiled) that dispatches the
+        # same compiled per-op fns the merged runner splices -- identical
+        # Stats/records (tests/test_obs_bit_identity.py), per-op timer
+        # cost only when profiling.  None leaves the hot loops untouched.
+        self.profile = profile
         self.ops_run = 0
 
     def run(self, op_lists: Optional[List[List[Callable[[], None]]]],
@@ -233,6 +240,8 @@ class ClockScheduler:
             raise ValueError("contention modeling needs op_kinds")
         if fast is not None and (op_kinds is None or op_items is None):
             raise ValueError("the fast path needs op_kinds and op_items")
+        if self.profile is not None:
+            return self._run_profiled(op_lists, op_kinds, op_items, make_op)
         prev_hook, nv.step_hook = nv.step_hook, None   # no yield points
         # Throughput runs allocate millions of small acyclic objects
         # (op records, event tuples, store-log entries); generational GC
@@ -319,4 +328,123 @@ class ClockScheduler:
             nv.step_hook = prev_hook
             if gc_was_enabled:
                 gc.enable()
+        return False
+
+    def _run_profiled(self, op_lists, op_kinds=None, op_items=None,
+                      make_op=None) -> bool:
+        """run() with scoped phase timers (self.profile is attached).
+
+        Same dispatch decision tree and same op-level calls as run(); the
+        only structural difference is that columnar dispatch calls the
+        per-kind staged fns (``fast.cfns``) from an instrumented Python
+        loop instead of through the merged ``fast.crunner`` -- those fns
+        are the exact bodies the runner splices, so every append, charge
+        and clock is bit-identical; the merged runner is purely a loop-
+        overhead optimization.  Phases: ``heap-loop`` (pop/push + cursor
+        bookkeeping), ``interpreted-body`` (op bodies: compiled replay or
+        plain thunks), ``bail-real-op`` (fast-path bails incl. resync),
+        ``record-charging`` (store sync, via RecordStore.profiler),
+        ``bookkeeping`` (setup/teardown, contention accounting).
+        """
+        nv = self.nvram
+        cm = self.contention
+        fast = self.fast
+        prof = self.profile
+        prev_hook, nv.step_hook = nv.step_hook, None
+        gc_was_enabled = self.pause_gc and gc.isenabled()
+        if gc_was_enabled:
+            gc.disable()
+        prof.push("bookkeeping")
+        try:
+            seed_src = op_lists if op_lists is not None else op_kinds
+            cursors = [0] * len(seed_src)
+            heap = [(nv.thread_time_ns(t), t) for t, ops in
+                    enumerate(seed_src) if ops]
+            heapq.heapify(heap)
+            heappush, heappop = heapq.heappush, heapq.heappop
+            timed = (fast is not None and cm is None and fast.timed)
+            columnar = (timed and fast.rstore is not None
+                        and not nv.contention_tracking)
+            if not columnar and op_lists is None:
+                raise ValueError("op_lists omitted but columnar dispatch "
+                                 "is unavailable on this run")
+            prof.push("heap-loop")
+            if columnar:
+                rs = fast.rstore
+                fns = fast.cfns
+                fenq, fdeq = fns["enq"], fns["deq"]
+                lens = [len(ks) for ks in op_kinds]
+                while heap:
+                    t_start, t = heappop(heap)
+                    i = cursors[t]
+                    kind = op_kinds[t][i]
+                    prof.push("interpreted-body")
+                    t_end = (fenq if kind == "enq" else fdeq)(
+                        t, op_items[t][i], t_start)
+                    prof.pop()
+                    if t_end is None:
+                        prof.push("bail-real-op")
+                        rs.sync()   # nests record-charging via rs.profiler
+                        nv.set_tid(t)
+                        if op_lists is not None:
+                            op_lists[t][i]()
+                        else:
+                            make_op(t, kind, op_items[t][i])()
+                        fast.after_real_op(t, kind)
+                        t_end = nv.thread_time_ns(t)
+                        rs.note_real_clocks(t, t_start, t_end)
+                        prof.pop()
+                    self.ops_run += 1
+                    cursors[t] = i + 1
+                    if i + 1 < lens[t]:
+                        heappush(heap, (t_end, t))
+                prof.pop()   # heap-loop
+                return False
+            while heap:
+                t_start, t = heappop(heap)
+                i = cursors[t]
+                if timed:
+                    prof.push("interpreted-body")
+                    t_end = fast.try_op_timed(t, op_kinds[t][i],
+                                              op_items[t][i], t_start)
+                    prof.pop()
+                    if t_end is None:
+                        prof.push("bail-real-op")
+                        nv.set_tid(t)
+                        op_lists[t][i]()
+                        fast.after_real_op(t, op_kinds[t][i])
+                        t_end = nv.thread_time_ns(t)
+                        prof.pop()
+                else:
+                    nv.set_tid(t)
+                    if cm is not None:
+                        nv.epoch += 1
+                    if fast is not None:
+                        kind = op_kinds[t][i]
+                        prof.push("interpreted-body")
+                        hit = fast.try_op(t, kind, op_items[t][i])
+                        prof.pop()
+                        if not hit:
+                            prof.push("bail-real-op")
+                            op_lists[t][i]()
+                            fast.after_real_op(t, kind)
+                            prof.pop()
+                    else:
+                        prof.push("interpreted-body")
+                        op_lists[t][i]()
+                        prof.pop()
+                    if cm is not None:
+                        t_end = cm.after_op(t, op_kinds[t][i], t_start)
+                    else:
+                        t_end = nv.thread_time_ns(t)
+                self.ops_run += 1
+                cursors[t] += 1
+                if cursors[t] < len(op_lists[t]):
+                    heappush(heap, (t_end, t))
+            prof.pop()   # heap-loop
+        finally:
+            nv.step_hook = prev_hook
+            if gc_was_enabled:
+                gc.enable()
+            prof.pop()   # bookkeeping
         return False

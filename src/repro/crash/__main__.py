@@ -71,7 +71,8 @@ def sweep_main(argv=None) -> int:
                          "(larger spaces fall back to the sampled modes)")
     ap.add_argument("--out", default=None,
                     help="write the per-crash-point coverage/recovery-cost "
-                         "CSV here")
+                         "CSV here (a versioned run manifest is written "
+                         "alongside it, see docs/observability.md)")
     ap.add_argument("--artifacts-dir", default=None,
                     help="write one repro JSON per violation here")
     args = ap.parse_args(argv)
@@ -84,7 +85,13 @@ def sweep_main(argv=None) -> int:
         names = _shard(sorted(names), args.shard)
         print(f"# shard {args.shard}: {','.join(names) or '(empty)'}")
 
+    from repro.obs import PhaseProfiler, build_manifest, manifest_path_for, \
+        write_manifest
+
     all_rows, n_failures = [], 0
+    headline, wall_total = {}, 0.0
+    checked_total = rec_us_total = 0
+    profile = PhaseProfiler()
     print("name,us_per_call,derived")
     for name in names:
         r = sweep_queue(name, nthreads=args.threads, per_thread=args.ops,
@@ -92,9 +99,16 @@ def sweep_main(argv=None) -> int:
                         area_nodes=args.area_nodes,
                         modes=tuple(args.modes.split(",")),
                         subset=not args.no_subset,
-                        subset_cap=args.subset_cap, log=print)
+                        subset_cap=args.subset_cap, log=print,
+                        profile=profile)
         cov = r.coverage()
         all_rows.extend(r.rows)
+        wall_total += r.wall_s
+        checked_total += cov["crashes_checked"]
+        rec_us_total += cov["recovery_us_total"]
+        if cov["recovery_us_total"] > 0:
+            headline[f"crash-sweep/{name}/recoveries_per_s"] = (
+                cov["crashes_checked"] * 1e6 / cov["recovery_us_total"])
         us_per_recovery = (cov["recovery_us_total"]
                            / max(cov["crashes_checked"], 1))
         print(f"crash/{name},{us_per_recovery:.3f},"
@@ -125,6 +139,19 @@ def sweep_main(argv=None) -> int:
             w.writeheader()
             w.writerows(all_rows)
         print(f"# wrote {len(all_rows)} rows to {args.out}")
+    if args.out:
+        if rec_us_total > 0:
+            headline["crash-sweep/recoveries_per_s"] = (
+                checked_total * 1e6 / rec_us_total)
+        man = build_manifest(
+            subcommand="crash-sweep", config=vars(args),
+            metrics=[{"queue": n.split("/", 2)[1],
+                      "recoveries_per_s": v}
+                     for n, v in headline.items()
+                     if n.count("/") == 2],
+            headline=headline, phases=profile.as_dict(), wall_s=wall_total)
+        mpath = write_manifest(man, manifest_path_for(args.out))
+        print(f"# wrote manifest {mpath}")
     if n_failures:
         print(f"# {n_failures} durable-linearizability violation(s)",
               file=sys.stderr)

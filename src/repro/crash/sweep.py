@@ -176,13 +176,27 @@ class SweepResult:
         }
 
 
+class _NullProfiler:
+    """No-op phase profiler so the sweep's inner loop has one shape."""
+
+    def push(self, name):
+        pass
+
+    def pop(self):
+        pass
+
+
+_NULL_PROF = _NullProfiler()
+
+
 def _check_point(harness: QueueHarness, capture: Capture, step: int,
                  mode: str, crash_seed: int,
-                 choices: Optional[CrashChoices] = None):
+                 choices: Optional[CrashChoices] = None, prof=_NULL_PROF):
     """Restore boundary `step`, crash with `mode`, recover, drain, check.
     Returns (ok, why, recovered, preads, pwrites, wall_us)."""
     b = capture.boundaries[step]
     nv = harness.nvram
+    prof.push("restore")
     nv.restore(b.snap)
     # the checker reads the Capture's frozen history, not the live record
     # state; truncate it so ~thousands of recoveries don't accumulate dead
@@ -196,13 +210,18 @@ def _check_point(harness: QueueHarness, capture: Capture, step: int,
     del harness.events[:]
     del harness.ops[:]
     p0, w0 = nv.pread_count, nv.pwrite_count
+    prof.pop()
+    prof.push("recover")
     t0 = time.perf_counter()
     harness.crash_and_recover(mode=mode, seed=crash_seed, choices=choices)
     recovered = harness.queue.drain(0)
     wall_us = (time.perf_counter() - t0) * 1e6
+    prof.pop()
+    prof.push("check")
     ok, why = check_durable_linearizability(
         capture.pre_crash_ops(step), capture.pre_crash_events(step),
         recovered)
+    prof.pop()
     return (ok, why, recovered,
             nv.pread_count - p0, nv.pwrite_count - w0, wall_us)
 
@@ -212,7 +231,8 @@ def sweep_queue(name: str, nthreads: int = 3, per_thread: int = 6,
                 model: str = "optane-clwb", area_nodes: int = 64,
                 modes: Tuple[str, ...] = DEFAULT_MODES, subset: bool = True,
                 subset_cap: int = 64, steps: Optional[range] = None,
-                exhaustive_log: bool = False, log=None) -> SweepResult:
+                exhaustive_log: bool = False, log=None,
+                profile=None) -> SweepResult:
     """Sweep every crash point of the standard workload for one queue.
 
     ``subset_cap`` bounds the per-boundary exhaustive enumeration: when a
@@ -225,15 +245,22 @@ def sweep_queue(name: str, nthreads: int = 3, per_thread: int = 6,
     store-prefix (see :class:`ChoiceSpace`); affordable only on small
     cells -- pair it with a tiny workload and ``area_nodes`` small enough
     that mid-area-zeroing boundaries fit under ``subset_cap``.
+
+    ``profile`` attaches an observation-only phase profiler (phases:
+    ``capture`` -- the hooked exact run, then per crash point
+    ``restore``/``recover``/``check``); rows and Stats are unchanged.
     """
     if name not in DURABLE_QUEUES:
         raise ValueError(f"unknown durable queue {name!r} "
                          f"(have {sorted(DURABLE_QUEUES)})")
+    prof = profile if profile is not None else _NULL_PROF
     t_start = time.perf_counter()
+    prof.push("capture")
     harness = QueueHarness(DURABLE_QUEUES[name], nthreads=nthreads,
                            area_nodes=area_nodes, model=model)
     plans = standard_plans(nthreads, per_thread)
     capture = capture_run(harness, plans, seed=seed, policy=policy)
+    prof.pop()
     result = SweepResult(queue=name, seed=seed, nthreads=nthreads,
                          per_thread=per_thread, model=model,
                          total_steps=capture.total_steps)
@@ -269,7 +296,7 @@ def sweep_queue(name: str, nthreads: int = 3, per_thread: int = 6,
         for mode in modes:
             row = base_row(step, space)
             ok, why, recovered, pr, pw, us = _check_point(
-                harness, capture, step, mode, crash_seed=seed)
+                harness, capture, step, mode, crash_seed=seed, prof=prof)
             row.update(mode=mode, subset_combos=None, ok=ok,
                        recovered_len=len(recovered), recovery_preads=pr,
                        recovery_pwrites=pw, recovery_us=us)
@@ -285,7 +312,7 @@ def sweep_queue(name: str, nthreads: int = 3, per_thread: int = 6,
                 for choices in enumerate_choices(space):
                     ok, why, recovered, pr, pw, us = _check_point(
                         harness, capture, step, "subset", crash_seed=seed,
-                        choices=choices)
+                        choices=choices, prof=prof)
                     row["subset_combos"] += 1
                     row["recovered_len"] = max(row["recovered_len"],
                                                len(recovered))

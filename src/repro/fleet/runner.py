@@ -216,32 +216,74 @@ def _final_counts(h) -> np.ndarray:
     return h.nvram._counts[0].astype(np.int64).copy()
 
 
+class _NullScope:
+    """No-op stand-ins so the runner's hot loop has one shape whether or
+    not a profiler/heartbeat is attached (observation-only contract)."""
+
+    def push(self, name):
+        pass
+
+    def pop(self):
+        pass
+
+    def configure(self, total_chunks=0, total_ops=0):
+        pass
+
+    def advance(self, chunks=0, ops=0, bails=0, rejoins=0, residents=0):
+        pass
+
+    def emit(self, now=None, final=False):
+        pass
+
+
+_NULL = _NullScope()
+
+
 def _run_batch(template: Template, cfg: FleetConfig, kinds: np.ndarray,
-               backend_name: str, devices: int, base: int):
+               backend_name: str, devices: int, base: int,
+               prof=_NULL, hb=_NULL):
     """Run one contiguous instance batch; kinds columns are the batch's
-    plans, ``base`` the batch's first global instance id (labels only)."""
+    plans, ``base`` the batch's first global instance id (labels only).
+    ``prof``/``hb`` are an optional phase profiler and heartbeat (both
+    observation-only; defaults are no-ops)."""
     n = kinds.shape[1]
+    prof.push("lowering")
     state = replicate(template.row, template.dims, n)
     backend = _make_backend(backend_name, template, state, devices)
+    prof.pop()
     resident_counts = {}
     bails = residents = 0
     for start in range(0, cfg.ops, cfg.chunk):
         end = min(start + cfg.chunk, cfg.ops)
+        prof.push("chunk-step")
         backend.run_chunk(kinds[start:end], start)
+        prof.pop()
+        prof.push("poll")
         ids, _ = backend.poll()
+        prof.pop()
+        rejoins = 0
         for i in ids.tolist():
             bails += 1
+            prof.push("bail-replay")
             h = _replay(template, kinds, i, end)
             row = export_instance(h, template.dims)
             if row is not None:
                 backend.rejoin(i, row)
+                rejoins += 1
+                prof.pop()
             else:
+                prof.pop()
                 residents += 1
+                prof.push("resident-replay")
                 rest = plan_of(kinds, i, end, cfg.ops)
                 if rest:
                     h.run_batched([rest])
                 resident_counts[i] = _final_counts(h)
                 backend.retire_resident(i)
+                prof.pop()
+        hb.advance(chunks=1, ops=n * (end - start), bails=len(ids),
+                   rejoins=rejoins,
+                   residents=len(ids) - rejoins)
     counts = np.asarray(backend.counts(), dtype=np.int64).copy()
     for i, c in resident_counts.items():
         counts[i] = c
@@ -249,10 +291,19 @@ def _run_batch(template: Template, cfg: FleetConfig, kinds: np.ndarray,
 
 
 def run_fleet(cfg: FleetConfig, fleet: Optional[Fleet] = None,
-              kinds: Optional[np.ndarray] = None) -> FleetResult:
+              kinds: Optional[np.ndarray] = None,
+              profile=None, heartbeat=None) -> FleetResult:
     """Build (unless given) and run one fleet cell.  ``kinds`` overrides
-    the generated plans (the bail/rejoin tests inject unclamped plans)."""
+    the generated plans (the bail/rejoin tests inject unclamped plans).
+
+    ``profile`` attaches an observation-only phase profiler (phases:
+    ``lowering``, ``chunk-step``, ``poll``, ``bail-replay``,
+    ``resident-replay``); ``heartbeat`` a :class:`repro.obs.Heartbeat`
+    that emits periodic progress lines.  Neither changes counts."""
+    prof = profile if profile is not None else _NULL
+    hb = heartbeat if heartbeat is not None else _NULL
     t0 = time.perf_counter()
+    prof.push("lowering")
     if fleet is None:
         fleet = build_fleet(cfg)
     if kinds is not None:
@@ -262,20 +313,27 @@ def run_fleet(cfg: FleetConfig, fleet: Optional[Fleet] = None,
                 f"kinds shape {kinds.shape} != {(cfg.ops, cfg.instances)}")
         fleet = replace(fleet, kinds=kinds)
     backend_name, devices = _resolve_backend(cfg.backend, cfg.devices)
+    prof.pop()
     build_s = time.perf_counter() - t0
 
     t1 = time.perf_counter()
     bsz = cfg.batch or cfg.instances
+    n_batches = (cfg.instances + bsz - 1) // bsz
+    chunks_per_batch = (cfg.ops + cfg.chunk - 1) // cfg.chunk
+    hb.configure(total_chunks=n_batches * chunks_per_batch,
+                 total_ops=cfg.instances * cfg.ops)
     counts = np.zeros((cfg.instances, N_EV), dtype=np.int64)
     bails = residents = 0
     for s in range(0, cfg.instances, bsz):
         e = min(s + bsz, cfg.instances)
         c, b, r = _run_batch(fleet.template, cfg, fleet.kinds[:, s:e],
-                             backend_name, devices, s)
+                             backend_name, devices, s, prof=prof, hb=hb)
         counts[s:e] = c
         bails += b
         residents += r
     run_s = time.perf_counter() - t1
+    if heartbeat is not None:
+        hb.emit(final=True)
     return FleetResult(cfg=cfg, backend=backend_name, devices=devices,
                        counts=counts, kinds=fleet.kinds, bails=bails,
                        residents=residents, build_s=build_s, run_s=run_s,

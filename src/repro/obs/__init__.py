@@ -1,0 +1,38 @@
+"""Observation-only telemetry: phase profilers, run manifests, heartbeats.
+
+The subsystem follows the trace-tap contract (PR 3): attaching any of its
+instruments must leave per-thread Stats, op records and simulated clocks
+bit-identical (``tests/test_obs_bit_identity.py`` is the gate), and a
+disabled instrument costs at most a ``None`` check on the hot path.
+
+Three instruments:
+
+* :class:`repro.obs.profiler.PhaseProfiler` -- scoped phase timers threaded
+  through the batched scheduler loop, the columnar record store's
+  staged-burst sync/charge passes, the fleet runner and the crash sweep;
+  surfaced as ``benchmarks/run.py profile``.
+* :mod:`repro.obs.manifest` -- versioned JSON run manifests (git sha,
+  config, seed, env, phase timings, headline metrics) written alongside
+  every benchmark CSV; folded into ``BENCH_<pr>.json`` snapshots by
+  ``benchmarks/bench_history.py``.
+* :class:`repro.obs.heartbeat.Heartbeat` -- periodic progress lines for
+  long fleet runs (stderr, rate-limited, off by default).
+
+Core modules never import this package: instruments are passed in and
+duck-typed (``push``/``pop``), so ``repro.core`` stays dependency-free.
+"""
+from .heartbeat import Heartbeat
+from .manifest import (MANIFEST_SCHEMA, ManifestError, build_manifest,
+                       collect_env, collect_git, load_manifest,
+                       manifest_path_for, validate_manifest, write_manifest)
+from .profiler import (PH_BAIL_REAL, PH_BOOKKEEPING, PH_CHARGE, PH_HEAP,
+                       PH_INTERP_BODY, PhaseProfiler)
+
+__all__ = [
+    "Heartbeat",
+    "MANIFEST_SCHEMA", "ManifestError", "build_manifest", "collect_env",
+    "collect_git", "load_manifest", "manifest_path_for", "validate_manifest",
+    "write_manifest",
+    "PH_BAIL_REAL", "PH_BOOKKEEPING", "PH_CHARGE", "PH_HEAP",
+    "PH_INTERP_BODY", "PhaseProfiler",
+]

@@ -1,0 +1,70 @@
+"""Rate-limited progress lines for long fleet runs.
+
+A :class:`Heartbeat` accumulates fleet progress counters (chunks, ops,
+bails, rejoins, residents) and emits a one-line summary to its stream at
+most every ``interval_s`` seconds -- frequent enough to show a 1M-instance
+run is alive, cheap enough to never shape the numbers.  Off by default:
+`benchmarks/run.py fleet` only constructs one when stderr progress is
+wanted (``--quiet`` suppresses it, tests never see one).
+"""
+import sys
+import time
+from typing import Optional, TextIO
+
+
+class Heartbeat:
+    """Periodic ``fleet-heartbeat:`` lines (chunks done, bails, rejoins,
+    residents, µs/op so far) on ``stream`` (default stderr)."""
+
+    def __init__(self, interval_s: float = 5.0,
+                 stream: Optional[TextIO] = None,
+                 label: str = "fleet") -> None:
+        self.interval_s = float(interval_s)
+        self.stream = stream if stream is not None else sys.stderr
+        self.label = label
+        self.total_chunks = 0
+        self.total_ops = 0
+        self.chunks_done = 0
+        self.ops_done = 0
+        self.bails = 0
+        self.rejoins = 0
+        self.residents = 0
+        self.emitted = 0
+        self._t0 = time.perf_counter()
+        self._last_emit = self._t0
+
+    def configure(self, total_chunks: int = 0, total_ops: int = 0) -> None:
+        """Set (or extend) the denominators shown in progress lines."""
+        self.total_chunks += int(total_chunks)
+        self.total_ops += int(total_ops)
+
+    def advance(self, chunks: int = 0, ops: int = 0, bails: int = 0,
+                rejoins: int = 0, residents: int = 0) -> None:
+        """Record progress; emits a line if ``interval_s`` has elapsed."""
+        self.chunks_done += chunks
+        self.ops_done += ops
+        self.bails += bails
+        self.rejoins += rejoins
+        self.residents += residents
+        now = time.perf_counter()
+        if now - self._last_emit >= self.interval_s:
+            self.emit(now=now)
+
+    def emit(self, now: Optional[float] = None, final: bool = False) -> None:
+        """Write one progress line unconditionally."""
+        if now is None:
+            now = time.perf_counter()
+        elapsed = now - self._t0
+        us_per_op = (elapsed * 1e6 / self.ops_done) if self.ops_done else 0.0
+        pct = (f" ({100.0 * self.ops_done / self.total_ops:.1f}%)"
+               if self.total_ops else "")
+        tc = f"/{self.total_chunks}" if self.total_chunks else ""
+        tag = "done" if final else "heartbeat"
+        self.stream.write(
+            f"# {self.label}-{tag}: chunks {self.chunks_done}{tc} "
+            f"ops {self.ops_done}{pct} bails {self.bails} "
+            f"rejoins {self.rejoins} residents {self.residents} "
+            f"{us_per_op:.2f}us/op {elapsed:.1f}s elapsed\n")
+        self.stream.flush()
+        self._last_emit = now
+        self.emitted += 1

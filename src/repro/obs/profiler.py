@@ -1,0 +1,125 @@
+"""Scoped per-phase timers for the execution layers.
+
+A :class:`PhaseProfiler` is a stack of named phases over a single
+monotonic clock.  ``push(name)`` charges the elapsed time since the last
+transition to the phase currently on top, then makes ``name`` the
+current phase; ``pop()`` charges the top phase and resumes its parent at
+the same timestamp.  Because every transition hands the clock from one
+phase to the next with no gap, the sum over ``totals`` equals the wall
+time between the outermost push and pop *exactly* -- the "phase sum
+within 10% of wall" acceptance check holds by construction, with the
+profiler's own overhead attributed to whichever phase was running when
+the timer fired.
+
+Phase names are plain strings so `repro.core` never imports this module:
+the scheduler, record store, fleet runner and crash sweep take an
+optional profiler object and call ``push``/``pop`` on it (duck-typed).
+The canonical names used by the batched-execution layers are the
+``PH_*`` constants below; `benchmarks/run.py profile` maps them to CSV
+columns by replacing ``-`` with ``_``.
+"""
+from contextlib import contextmanager
+from time import perf_counter_ns
+from typing import Dict, Iterator, List, Optional
+
+# Batched-execution phases (ClockScheduler / RecordStore / harness).
+PH_HEAP = "heap-loop"               # heap pop/push + cursor advance
+PH_INTERP_BODY = "interpreted-body" # compiled per-op fn (columnar/timed body)
+PH_CHARGE = "record-charging"       # RecordStore.sync vector pass + flush_counts
+PH_BOOKKEEPING = "bookkeeping"      # plan/thunk setup, store attach, teardown
+PH_BAIL_REAL = "bail-real-op"       # fast-path bail: real per-primitive op
+
+# Fleet phases (repro.fleet.runner).
+PH_FLEET_LOWER = "lowering"         # build_fleet: schedules -> stacked arrays
+PH_FLEET_CHUNK = "chunk-step"       # backend.run_chunk
+PH_FLEET_POLL = "poll"              # backend.poll: bail detection
+PH_FLEET_BAIL = "bail-replay"       # per-instance replay + export + rejoin
+PH_FLEET_RESIDENT = "resident-replay"  # instances finishing outside the fleet
+
+# Crash-sweep phases (repro.crash.sweep).
+PH_CRASH_CAPTURE = "capture"        # boundary capture run
+PH_CRASH_RESTORE = "restore"        # snapshot restore + log truncation
+PH_CRASH_RECOVER = "recover"        # crash_and_recover
+PH_CRASH_CHECK = "check"            # drain + durable-linearizability check
+
+
+class PhaseProfiler:
+    """Accumulates wall nanoseconds and entry counts per named phase."""
+
+    __slots__ = ("totals", "counts", "_stack")
+
+    def __init__(self) -> None:
+        self.totals: Dict[str, int] = {}   # phase -> ns
+        self.counts: Dict[str, int] = {}   # phase -> entries
+        self._stack: List[list] = []       # [name, resumed_at_ns]
+
+    def push(self, name: str) -> None:
+        now = perf_counter_ns()
+        stack = self._stack
+        if stack:
+            top = stack[-1]
+            totals = self.totals
+            totals[top[0]] = totals.get(top[0], 0) + now - top[1]
+        stack.append([name, now])
+        counts = self.counts
+        counts[name] = counts.get(name, 0) + 1
+
+    def pop(self) -> None:
+        now = perf_counter_ns()
+        name, since = self._stack.pop()
+        totals = self.totals
+        totals[name] = totals.get(name, 0) + now - since
+        if self._stack:
+            self._stack[-1][1] = now
+
+    @contextmanager
+    def phase(self, name: str) -> Iterator["PhaseProfiler"]:
+        self.push(name)
+        try:
+            yield self
+        finally:
+            self.pop()
+
+    def total_ns(self) -> int:
+        """Sum over all phases (open phases counted up to their last
+        transition only; call with an empty stack for exact totals)."""
+        return sum(self.totals.values())
+
+    def us_per_op(self, ops: int) -> Dict[str, float]:
+        """totals as microseconds per op (ops <= 0 yields raw µs)."""
+        div = ops if ops > 0 else 1
+        return {k: v / 1000.0 / div for k, v in self.totals.items()}
+
+    def coverage(self, wall_s: float) -> float:
+        """Fraction of a measured wall time the phase sum accounts for."""
+        if wall_s <= 0:
+            return 0.0
+        return self.total_ns() / (wall_s * 1e9)
+
+    def as_dict(self) -> Dict[str, Dict[str, int]]:
+        """JSON-ready ``{phase: {"ns": ..., "count": ...}}`` (manifests)."""
+        return {name: {"ns": ns, "count": self.counts.get(name, 0)}
+                for name, ns in sorted(self.totals.items())}
+
+    def merge(self, other: Optional["PhaseProfiler"]) -> "PhaseProfiler":
+        """Fold another profiler's totals/counts into this one."""
+        if other is not None:
+            for name, ns in other.totals.items():
+                self.totals[name] = self.totals.get(name, 0) + ns
+            for name, n in other.counts.items():
+                self.counts[name] = self.counts.get(name, 0) + n
+        return self
+
+    def report(self, ops: int = 0, indent: str = "  ") -> str:
+        """Human-readable per-phase table (µs/op when ops given)."""
+        lines = []
+        total = self.total_ns() or 1
+        for name, ns in sorted(self.totals.items(), key=lambda kv: -kv[1]):
+            frac = 100.0 * ns / total
+            if ops > 0:
+                lines.append(f"{indent}{name:<18} {ns / 1000.0 / ops:8.3f} "
+                             f"us/op  {frac:5.1f}%  x{self.counts.get(name, 0)}")
+            else:
+                lines.append(f"{indent}{name:<18} {ns / 1e6:10.3f} ms  "
+                             f"{frac:5.1f}%  x{self.counts.get(name, 0)}")
+        return "\n".join(lines)

@@ -34,7 +34,8 @@ PATH_RE = re.compile(r"^(?:src|tests|benchmarks|docs|examples)/[\w./\-]+$")
 def test_docs_exist():
     """The documentation set the architecture satellite promises."""
     for rel in ("docs/architecture.md", "docs/queues.md",
-                "docs/benchmarking.md", "docs/fleet.md", "README.md"):
+                "docs/benchmarking.md", "docs/fleet.md",
+                "docs/observability.md", "README.md"):
         assert (REPO / rel).is_file(), f"missing {rel}"
 
 
@@ -94,7 +95,8 @@ def test_readme_links_to_docs():
     """Satellite: the README must point readers at docs/."""
     text = (REPO / "README.md").read_text()
     for rel in ("docs/architecture.md", "docs/queues.md",
-                "docs/benchmarking.md", "docs/fleet.md"):
+                "docs/benchmarking.md", "docs/fleet.md",
+                "docs/observability.md"):
         assert rel in text, f"README does not link {rel}"
 
 
@@ -130,13 +132,36 @@ def test_docs_name_the_columnar_record_engine():
         assert flag in bench, f"benchmarking.md does not mention {flag}"
 
 
+def test_docs_name_the_observability_layer():
+    """Satellite: docs/observability.md pins the telemetry layer's
+    load-bearing symbols (verified importable by
+    test_code_spans_refer_to_real_things), the trajectory tool, and the
+    non-interference gate; architecture.md links to it."""
+    obs = (REPO / "docs" / "observability.md").read_text()
+    for span in ("repro.obs.profiler.PhaseProfiler",
+                 "repro.obs.Heartbeat",
+                 "repro.obs.manifest.build_manifest",
+                 "benchmarks/bench_history.py",
+                 "benchmarks/history/BENCH_8.json"):
+        assert span in obs, f"observability.md does not mention {span}"
+    for rel in ("tests/test_obs_bit_identity.py",
+                "tests/test_obs_manifest.py"):
+        assert rel in obs, f"observability.md does not mention {rel}"
+        assert (REPO / rel).is_file(), f"{rel} named in docs but missing"
+    arch = (REPO / "docs" / "architecture.md").read_text()
+    assert "observability.md" in arch, \
+        "architecture.md does not link docs/observability.md"
+
+
 ARGV0_RE = re.compile(r'argv\[0\] == "([\w-]+)"')
 ADDARG_RE = re.compile(r'add_argument\(\s*"(--[\w-]+)"')
 FLAG_TOKEN_RE = re.compile(r"(?<![=\w-])--[\w-]+")
 
-# Every CLI whose flags the docs may quote: the benchmark driver plus the
-# crash-sweep/repro entry point it forwards to.
-CLI_SOURCES = ("benchmarks/run.py", "src/repro/crash/__main__.py")
+# Every CLI whose flags the docs may quote: the benchmark driver, the
+# crash-sweep/repro entry point it forwards to, and the perf-trajectory
+# gate (docs/observability.md quotes its fold/compare flags).
+CLI_SOURCES = ("benchmarks/run.py", "src/repro/crash/__main__.py",
+               "benchmarks/bench_history.py")
 
 
 def _known_cli():
