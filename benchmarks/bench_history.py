@@ -194,6 +194,32 @@ def fold_main(argv) -> int:
     return 0
 
 
+def write_summary(path: str, baseline_name: str, baseline_pr,
+                  res: dict) -> None:
+    """Append the per-cell delta table as GitHub-flavored markdown (the
+    format ``$GITHUB_STEP_SUMMARY`` renders in the job summary)."""
+    lines = [
+        f"### Perf trajectory vs `{baseline_name}` (PR {baseline_pr})",
+        "",
+        "| status | cell | baseline | current | Δ% |",
+        "|---|---|---:|---:|---:|",
+    ]
+    for status, key, base, cur, pct in res["rows"]:
+        mark = {"FAIL": "❌ FAIL", "WARN": "⚠️ WARN"}.get(status, "✅ ok")
+        lines.append(f"| {mark} | `{key}` | {base:.4g} | {cur:.4g} "
+                     f"| {pct:+.1f}% |")
+    for key in res["only_base"]:
+        lines.append(f"| gone | `{key}` | — | — | not gated |")
+    for key in res["only_current"]:
+        lines.append(f"| new | `{key}` | — | — | not gated |")
+    lines.append("")
+    lines.append(f"{len(res['rows'])} cells compared: {res['fails']} fail, "
+                 f"{res['warns']} warn")
+    lines.append("")
+    with open(path, "a") as fh:
+        fh.write("\n".join(lines) + "\n")
+
+
 def compare_main(argv) -> int:
     ap = argparse.ArgumentParser(
         prog="bench_history.py compare",
@@ -207,6 +233,11 @@ def compare_main(argv) -> int:
                     help="regression %% that fails the gate (default 25)")
     ap.add_argument("--warn-pct", type=float, default=10.0,
                     help="regression %% that warns (default 10)")
+    ap.add_argument("--summary", default=os.environ.get(
+                        "GITHUB_STEP_SUMMARY"),
+                    help="append the delta table as markdown to this file "
+                         "(default: $GITHUB_STEP_SUMMARY when set, so CI "
+                         "shows it in the job summary)")
     args = ap.parse_args(argv)
     path = args.baseline
     if path == "auto":
@@ -235,6 +266,9 @@ def compare_main(argv) -> int:
     print(f"# {len(res['rows'])} cells compared: {res['fails']} fail, "
           f"{res['warns']} warn "
           f"(fail >{args.fail_pct:g}%, warn >{args.warn_pct:g}%)")
+    if args.summary:
+        write_summary(args.summary, os.path.basename(path), baseline["pr"],
+                      res)
     return 1 if res["fails"] else 0
 
 

@@ -2,6 +2,7 @@
 wins (later runs supersede earlier failures/retries)."""
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 
@@ -32,9 +33,23 @@ def merge(paths, out):
     return best
 
 
-if __name__ == "__main__":
-    paths = sorted(glob.glob("benchmarks/dryrun_results*.jsonl"))
-    out = "benchmarks/dryrun_merged.jsonl"
-    best = merge(paths, out)
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="merge_results.py",
+        description="Merge dry-run JSONL artifacts; last record per "
+                    "(arch, shape, mesh) wins, ok records preferred.")
+    ap.add_argument("inputs", nargs="*",
+                    help="JSONL files to merge (default: glob "
+                         "benchmarks/dryrun_results*.jsonl)")
+    ap.add_argument("--out", default="benchmarks/dryrun_merged.jsonl",
+                    help="merged JSONL destination")
+    args = ap.parse_args(argv)
+    paths = args.inputs or sorted(glob.glob("benchmarks/dryrun_results*.jsonl"))
+    best = merge(paths, args.out)
     ok = sum(1 for r in best.values() if r.get("ok"))
-    print(f"merged {len(best)} cells ({ok} ok) from {paths} -> {out}")
+    print(f"merged {len(best)} cells ({ok} ok) from {paths} -> {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

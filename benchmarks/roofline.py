@@ -80,7 +80,26 @@ def markdown_table(cells: List[dict]) -> str:
     return "\n".join(lines)
 
 
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        prog="roofline.py",
+        description="Render the roofline markdown table from a dry-run "
+                    "JSONL artifact.")
+    ap.add_argument("path", nargs="?",
+                    default="benchmarks/dryrun_results.jsonl",
+                    help="dry-run results JSONL (merged or raw)")
+    ap.add_argument("--out", default=None,
+                    help="write the markdown table here instead of stdout")
+    args = ap.parse_args(argv)
+    table = markdown_table(load_cells(args.path))
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(table + "\n")
+    else:
+        print(table)
+    return 0
+
+
 if __name__ == "__main__":
-    import sys
-    path = sys.argv[1] if len(sys.argv) > 1 else "benchmarks/dryrun_results.jsonl"
-    print(markdown_table(load_cells(path)))
+    raise SystemExit(main())

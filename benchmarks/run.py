@@ -532,10 +532,15 @@ def fleet_main(argv) -> None:
                     help="comma-separated: off, on (reporting axis; "
                          "per-instance counts are bit-identical either way "
                          "at one thread per instance)")
-    ap.add_argument("--backend", choices=["auto", "numpy", "jax"],
+    ap.add_argument("--backend",
+                    choices=["auto", "numpy", "jax", "jax-opcode", "pallas"],
                     default="numpy",
                     help="numpy (default; fastest on host CPU), jax (the "
-                         "sharded XLA path), or auto (jax if importable)")
+                         "sharded unrolled XLA path), jax-opcode (the "
+                         "opcode-interpreting scan: depth-independent "
+                         "compile), pallas (the opcode interpreter as a "
+                         "Pallas chunk kernel; interpret mode off-TPU), or "
+                         "auto (jax if importable)")
     ap.add_argument("--devices", type=int, default=8,
                     help="forced XLA host devices for the jax mesh")
     ap.add_argument("--chunk", type=int, default=48,
@@ -621,7 +626,12 @@ def fleet_main(argv) -> None:
                       f"fences_per_op={agg.fences / total:.2f};"
                       f"backend={res.backend};bails={res.bails};"
                       f"checked={check_ok}/{checked}")
-                headline[f"fleet/{model}/{cont}/{qname}/wall_us_per_op"] = \
+                # the numpy reference keeps the legacy trajectory cell
+                # name; other backends get backend-qualified cells so the
+                # perf gate never compares across backends
+                cell = ("wall_us_per_op" if res.backend == "numpy"
+                        else f"{res.backend}_wall_us_per_op")
+                headline[f"fleet/{model}/{cont}/{qname}/{cell}"] = \
                     round(res.run_s * 1e6 / total, 4)
     if args.out:
         with open(args.out, "w", newline="") as f:

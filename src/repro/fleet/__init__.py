@@ -16,10 +16,15 @@ one thread each) as a single batched array program:
   deterministic, so every instance shares the template's address layout);
 * :mod:`repro.fleet.stepper` -- the numpy reference stepper (mask-vectorized
   over instances; also the fallback when jax is unavailable);
-* :mod:`repro.fleet.jaxexec` -- the jax backend: a per-instance step
+* :mod:`repro.fleet.jaxexec` -- the jax backends: a per-instance step
   function, ``jax.vmap`` over the fleet, ``lax.scan`` over the op stream,
   sharded across forced host devices
-  (``XLA_FLAGS=--xla_force_host_platform_device_count=8``);
+  (``XLA_FLAGS=--xla_force_host_platform_device_count=8``).  Three
+  flavors: ``jax`` (unrolled trace), ``jax-opcode`` (interprets the
+  fixed-width opcode tables emitted by the lowering, so compile time is
+  independent of schedule depth) and ``pallas`` (the same opcode
+  interpreter as a Pallas chunk kernel,
+  :mod:`repro.kernels.fleet_step`);
 * :mod:`repro.fleet.runner` -- chunked execution with the bail/rejoin
   protocol: instances that hit a fast-path bail condition fall out of the
   vector program into a real per-instance harness (the existing

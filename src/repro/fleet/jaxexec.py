@@ -20,6 +20,20 @@ All arrays are int32/uint8 -- volatile addresses are offsets, counts are
 int32 deltas (converted back to int64 on the host) -- so the backend never
 needs jax x64 mode.  Bit-identity with the numpy stepper (and hence with
 ``run_batched``) is asserted by ``tests/test_fleet_equivalence.py``.
+
+Two steppers share the sections that don't depend on schedule depth
+(:func:`_op_prologue`: tail record, bail detection, epoch machinery, env
+binding + allocations):
+
+* the original **unrolled** stepper (:func:`_apply_one` /
+  :func:`make_chunk_fn`) traces every micro/aux entry inline -- fastest
+  compiled steps, but the jit trace grows with schedule depth;
+* the **opcode interpreter** (:func:`_apply_opcode_one` /
+  :func:`make_opcode_chunk_fn`) drives a ``lax.fori_loop`` +
+  ``lax.switch`` over the program's :class:`~repro.fleet.lowering.
+  OpcodeProgram` table, so the trace size is independent of depth
+  (asserted by ``tests/test_fleet_opcode.py``).  The same function is the
+  body of the Pallas kernel in :mod:`repro.kernels.fleet_step`.
 """
 from __future__ import annotations
 
@@ -28,9 +42,14 @@ import numpy as np
 from ..core.nvram import (EV_COLD_DRAM, EV_COLD_NVM, EV_DRAM, EV_HIT,
                           EV_POSTFLUSH, LINE_WORDS)
 from ..core.opsched import NULL, ST_EVERFL, ST_INVAL
-from .lowering import KIND_DEQ, KIND_ENQ, SYM
+from .lowering import (KIND_DEQ, KIND_ENQ, SYM, N_OPC, OPC_CLASS_P,
+                       OPC_CLASS_V, OPC_LIMBO, OPC_PADD, OPC_PDISCARD,
+                       OPC_RECACHE, OPC_SLOT, OPC_ST_EVERFL, OPC_ST_INVAL,
+                       encode_program)
 from .state import FleetState, Template
 from .stepper import EPOCH_ADV_OPS
+
+N_SYM = max(SYM.values()) + 1
 
 E_NEW_P, E_NEW_V = SYM["new_p"], SYM["new_v"]
 E_TAIL_P, E_TAIL_V = SYM["tail_p"], SYM["tail_v"]
@@ -72,8 +91,15 @@ def _advance_one(jnp, dims, c):
     return c
 
 
-def _apply_one(jnp, dims, prog, c, sel, oi):
-    """One lowered op on one instance's state dict, masked by ``sel``."""
+def _op_prologue(jnp, dims, prog, c, sel, oi):
+    """The depth-independent front half of one lowered op on one
+    instance's state dict: tail record, bail detection, op_begin epoch
+    machinery, env binding + allocations.  Shared verbatim by the
+    unrolled and opcode steppers; returns ``(c, m, env)``.
+
+    Guard-slot values are read through ``slot()`` so the same code serves
+    both state layouts: per-attr ``slot_<attr>`` keys (unrolled stepper)
+    and the stacked ``slots`` vector the opcode stepper gathers from."""
     c = dict(c)
     m = c["active"] & sel
     cap = dims.cap
@@ -82,13 +108,19 @@ def _apply_one(jnp, dims, prog, c, sel, oi):
     tpos = (head + jnp.maximum(length - 1, 0)) % cap
     tail_p = jnp.where(has, c["ring_p"][tpos], c["dummy_p"])
     tail_v = jnp.where(has, c["ring_v"][tpos], c["dummy_v"])
+
+    def slot(attr):
+        if "slots" in c:
+            return c["slots"][dims.slot_attrs.index(attr)]
+        return c["slot_" + attr]
+
     # ---- bail detection --------------------------------------------------
     bail = jnp.asarray(False)
     if prog.code == KIND_DEQ:
         bail = bail | (length == 0)
     for g in prog.guards:
         if g[0] == "slot_nonnull":
-            bail = bail | (c["slot_" + g[1]] == NULL)
+            bail = bail | (slot(g[1]) == NULL)
         else:                               # tail_persisted
             bail = bail | (c["persisted"][tail_p // LINE_WORDS] == 0)
     if prog.allocs_p:
@@ -116,7 +148,7 @@ def _apply_one(jnp, dims, prog, c, sel, oi):
         env[E_NEXT_P] = c["ring_p"][hpos]
         env[E_NEXT_V] = c["ring_v"][hpos]
     for attr in prog.slot_attrs:
-        env[E_PREV] = c["slot_" + attr]
+        env[E_PREV] = slot(attr)
     if prog.allocs_p:
         use = c["nfree"] > 0
         top = c["free_p"][jnp.maximum(c["nfree"] - 1, 0)]
@@ -131,6 +163,13 @@ def _apply_one(jnp, dims, prog, c, sel, oi):
             use, top, dims.chunk_base + c["vcursor"] * dims.node_words)
         c["nvfree"] = jnp.where(m & use, c["nvfree"] - 1, c["nvfree"])
         c["vcursor"] = jnp.where(m & ~use, c["vcursor"] + 1, c["vcursor"])
+    return c, m, env
+
+
+def _apply_one(jnp, dims, prog, c, sel, oi):
+    """One lowered op on one instance's state dict, masked by ``sel``
+    (unrolled form: every micro/aux entry traces inline)."""
+    c, m, env = _op_prologue(jnp, dims, prog, c, sel, oi)
     # ---- micro-ops on local copies --------------------------------------
     cached, finval, everfl = c["cached"], c["finval"], c["everfl"]
     vtouched, persisted = c["vtouched"], c["persisted"]
@@ -170,6 +209,8 @@ def _apply_one(jnp, dims, prog, c, sel, oi):
             finval = finval.at[ln].set(zero)
     c["counts"] = jnp.where(m, c["counts"] + cdelta, c["counts"])
     # ---- logical FIFO ----------------------------------------------------
+    cap = dims.cap
+    length, head = c["length"], c["head"]
     if prog.code == KIND_ENQ:
         pos = (head + length) % cap
         new_p = env[E_NEW_P] if prog.allocs_p else jnp.int32(0)
@@ -241,6 +282,179 @@ def make_chunk_fn(jax, programs, dims):
     return chunk
 
 
+def _apply_opcode_one(jnp, lax, dims, prog, opc, c, sel, oi,
+                      table=None, base_counts=None):
+    """One lowered op on one instance's state dict, masked by ``sel`` --
+    data-driven form: a ``fori_loop`` + ``switch`` interprets the int32
+    opcode table instead of tracing each micro/aux entry, so the jaxpr
+    does not grow with schedule depth.  Requires the stacked ``slots``
+    state layout (see :func:`make_opcode_chunk_fn`).  Bit-identical to
+    :func:`_apply_one`: same prologue, same effect order, same masked
+    commits.
+
+    ``table`` / ``base_counts`` default to trace constants from
+    ``opc`` / ``prog``; the Pallas kernel passes them explicitly (a
+    kernel cannot capture array constants)."""
+    c, m, env = _op_prologue(jnp, dims, prog, c, sel, oi)
+    # dense env vector for data-driven sym gathers (static keys)
+    envv = jnp.zeros((N_SYM,), jnp.int32)
+    for k, v in env.items():
+        envv = envv.at[k].set(v)
+    if table is None:
+        table = jnp.asarray(opc.table)          # (R, 5) int32
+    if base_counts is None:
+        base_counts = jnp.asarray(prog.base_counts.astype(np.int32))
+    epoch = c["epoch"]
+    one, zero = jnp.uint8(1), jnp.uint8(0)
+
+    def row_step(r, t):
+        (cached, finval, everfl, vtouched, persisted,
+         limbo_a, limbo_e, limbo_k, nlimbo, slots, cdelta) = t
+        row = table[r]
+        kind, amode, aval, off, imm = (row[0], row[1], row[2], row[3],
+                                       row[4])
+        bound = envv[jnp.clip(aval, 0, N_SYM - 1)] + off
+        a = jnp.where(amode == 1, bound, aval)
+        ln = a // LINE_WORDS
+
+        def b_nop(t):
+            return t
+
+        def b_class_p(t):
+            (ca, fi, ev_, vt, pe, la, le, lk, nl, sl, cd) = t
+            ev = jnp.where(ca[ln] == 1, EV_HIT,
+                           jnp.where(fi[ln] == 1, EV_POSTFLUSH,
+                                     jnp.where(ev_[ln] == 1, EV_COLD_NVM,
+                                               EV_COLD_DRAM)))
+            return (ca.at[ln].set(one), fi.at[ln].set(zero), ev_, vt, pe,
+                    la, le, lk, nl, sl, cd.at[ev].add(1))
+
+        def b_class_v(t):
+            (ca, fi, ev_, vt, pe, la, le, lk, nl, sl, cd) = t
+            ev = jnp.where(vt[a] == 1, EV_HIT, EV_DRAM)
+            return (ca, fi, ev_, vt.at[a].set(one), pe, la, le, lk, nl, sl,
+                    cd.at[ev].add(1))
+
+        def b_st_inval(t):
+            (ca, fi, ev_, vt, pe, la, le, lk, nl, sl, cd) = t
+            return (ca.at[ln].set(zero), fi.at[ln].set(one),
+                    ev_.at[ln].set(one), vt, pe, la, le, lk, nl, sl, cd)
+
+        def b_st_everfl(t):
+            (ca, fi, ev_, vt, pe, la, le, lk, nl, sl, cd) = t
+            return (ca, fi, ev_.at[ln].set(one), vt, pe, la, le, lk, nl,
+                    sl, cd)
+
+        def b_recache(t):
+            (ca, fi, ev_, vt, pe, la, le, lk, nl, sl, cd) = t
+            return (ca.at[ln].set(one), fi.at[ln].set(zero), ev_, vt, pe,
+                    la, le, lk, nl, sl, cd)
+
+        def b_limbo(t):
+            (ca, fi, ev_, vt, pe, la, le, lk, nl, sl, cd) = t
+            return (ca, fi, ev_, vt, pe, la.at[nl].set(a),
+                    le.at[nl].set(epoch), lk.at[nl].set(imm.astype(lk.dtype)),
+                    nl + 1, sl, cd)
+
+        def b_slot(t):
+            (ca, fi, ev_, vt, pe, la, le, lk, nl, sl, cd) = t
+            return (ca, fi, ev_, vt, pe, la, le, lk, nl, sl.at[imm].set(a),
+                    cd)
+
+        def b_pdiscard(t):
+            (ca, fi, ev_, vt, pe, la, le, lk, nl, sl, cd) = t
+            return (ca, fi, ev_, vt, pe.at[ln].set(zero), la, le, lk, nl,
+                    sl, cd)
+
+        def b_padd(t):
+            (ca, fi, ev_, vt, pe, la, le, lk, nl, sl, cd) = t
+            return (ca, fi, ev_, vt, pe.at[ln].set(one), la, le, lk, nl,
+                    sl, cd)
+
+        branches = [b_nop] * N_OPC
+        branches[OPC_CLASS_P] = b_class_p
+        branches[OPC_CLASS_V] = b_class_v
+        branches[OPC_ST_INVAL] = b_st_inval
+        branches[OPC_ST_EVERFL] = b_st_everfl
+        branches[OPC_RECACHE] = b_recache
+        branches[OPC_LIMBO] = b_limbo
+        branches[OPC_SLOT] = b_slot
+        branches[OPC_PDISCARD] = b_pdiscard
+        branches[OPC_PADD] = b_padd
+        return lax.switch(kind, branches, t)
+
+    t = (c["cached"], c["finval"], c["everfl"], c["vtouched"],
+         c["persisted"], c["limbo_a"], c["limbo_e"], c["limbo_k"],
+         c["nlimbo"], c["slots"], base_counts)
+    # micro rows, then the logical FIFO update, then aux rows -- the same
+    # effect order as _apply_one / the numpy stepper
+    t = lax.fori_loop(0, opc.n_micro, row_step, t)
+    cap = dims.cap
+    length, head = c["length"], c["head"]
+    if prog.code == KIND_ENQ:
+        pos = (head + length) % cap
+        new_p = env[E_NEW_P] if prog.allocs_p else jnp.int32(0)
+        new_v = env[E_NEW_V] if prog.allocs_v else jnp.int32(0)
+        c["ring_p"] = jnp.where(m, c["ring_p"].at[pos].set(new_p),
+                                c["ring_p"])
+        c["ring_v"] = jnp.where(m, c["ring_v"].at[pos].set(new_v),
+                                c["ring_v"])
+        c["length"] = jnp.where(m, length + 1, length)
+    else:
+        c["dummy_p"] = jnp.where(m, env[E_NEXT_P], c["dummy_p"])
+        c["dummy_v"] = jnp.where(m, env[E_NEXT_V], c["dummy_v"])
+        c["head"] = jnp.where(m, (head + 1) % cap, head)
+        c["length"] = jnp.where(m, length - 1, length)
+    t = lax.fori_loop(opc.n_micro, opc.n_rows, row_step, t)
+    (cached, finval, everfl, vtouched, persisted,
+     limbo_a, limbo_e, limbo_k, nlimbo, slots, cdelta) = t
+    c["counts"] = jnp.where(m, c["counts"] + cdelta, c["counts"])
+    for key, val in (("cached", cached), ("finval", finval),
+                     ("everfl", everfl), ("vtouched", vtouched),
+                     ("persisted", persisted), ("limbo_a", limbo_a),
+                     ("limbo_e", limbo_e), ("limbo_k", limbo_k),
+                     ("nlimbo", nlimbo), ("slots", slots)):
+        c[key] = jnp.where(m, val, c[key])
+    return c
+
+
+def make_opcode_chunk_fn(jax, programs, dims):
+    """Opcode-interpreting variant of :func:`make_chunk_fn` -- same
+    ``chunk(st, kcols, oi)`` signature and the same state-dict layout
+    outside the call (``slot_<attr>`` keys are stacked into a ``slots``
+    matrix around the vmapped scan).  The jit trace holds one
+    ``row_step`` body per op kind regardless of schedule depth."""
+    import jax.numpy as jnp
+    from jax import lax
+
+    progs = [(p, encode_program(p, dims.slot_attrs)) for p in programs]
+
+    def per_instance(c, kcol, oi):
+        def step(carry, xs):
+            k, o = xs
+            for prog, opc in progs:
+                carry = _apply_opcode_one(jnp, lax, dims, prog, opc, carry,
+                                          k == prog.code, o)
+            return carry, None
+        out, _ = lax.scan(step, c, (kcol, oi))
+        return out
+
+    def chunk(st, kcols, oi):
+        st = dict(st)
+        if dims.slot_attrs:
+            st["slots"] = jnp.stack(
+                [st.pop("slot_" + a) for a in dims.slot_attrs], axis=-1)
+        else:
+            st["slots"] = jnp.zeros((kcols.shape[0], 1), jnp.int32)
+        out = jax.vmap(per_instance, in_axes=(0, 0, None))(st, kcols, oi)
+        slots = out.pop("slots")
+        for i, a in enumerate(dims.slot_attrs):
+            out["slot_" + a] = slots[:, i]
+        return out
+
+    return chunk
+
+
 class JaxBackend:
     """Device-resident fleet state; same protocol as NumpyBackend."""
     name = "jax"
@@ -249,14 +463,10 @@ class JaxBackend:
                  devices: int = 8):
         import jax
         import jax.numpy as jnp
-        from jax.sharding import Mesh, NamedSharding, PartitionSpec
         self.jax, self.jnp = jax, jnp
         self.t = template
         self.n = state.n
-        ndev = len(jax.devices())
-        self.npad = -(-state.n // ndev) * ndev
-        mesh = Mesh(np.array(jax.devices()), ("i",))
-        self.sharding = NamedSharding(mesh, PartitionSpec("i"))
+        self._setup_layout(state)
 
         def put(a, pad_value=None):
             pad = self.npad - self.n
@@ -265,7 +475,7 @@ class JaxBackend:
                         else np.full((pad,) + a.shape[1:], pad_value,
                                      dtype=a.dtype))
                 a = np.concatenate([a, tile], axis=0)
-            return jax.device_put(a, self.sharding)
+            return self._put(a)
 
         st = {}
         for name in _ARRAY_FIELDS:
@@ -277,15 +487,32 @@ class JaxBackend:
         for attr, arr in state.slots.items():
             st["slot_" + attr] = put(arr)
         self.st = st
-        self._fn = jax.jit(make_chunk_fn(jax, template.programs,
-                                         template.dims),
-                           donate_argnums=(0,))
+        self._fn = self._make_fn()
+
+    def _setup_layout(self, state: FleetState) -> None:
+        """Instance-axis padding + sharding.  The base backend shards a 1D
+        mesh over every host device; subclasses override."""
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec
+        ndev = len(self.jax.devices())
+        self.npad = -(-state.n // ndev) * ndev
+        mesh = Mesh(np.array(self.jax.devices()), ("i",))
+        self.sharding = NamedSharding(mesh, PartitionSpec("i"))
+
+    def _put(self, a):
+        if self.sharding is None:
+            return self.jax.device_put(a)
+        return self.jax.device_put(a, self.sharding)
+
+    def _make_fn(self):
+        return self.jax.jit(make_chunk_fn(self.jax, self.t.programs,
+                                          self.t.dims),
+                            donate_argnums=(0,))
 
     def run_chunk(self, kinds: np.ndarray, start: int) -> None:
         C = kinds.shape[0]
         kc = np.zeros((self.npad, C), dtype=np.uint8)
         kc[:self.n] = kinds.T
-        kc = self.jax.device_put(kc, self.sharding)
+        kc = self._put(kc)
         oi = self.jnp.arange(start, start + C, dtype=self.jnp.int32)
         self.st = self._fn(self.st, kc, oi)
 
@@ -319,3 +546,46 @@ class JaxBackend:
 
     def counts(self) -> np.ndarray:
         return np.asarray(self.st["counts"])[:self.n].astype(np.int64)
+
+
+class OpcodeJaxBackend(JaxBackend):
+    """JaxBackend with the opcode-interpreting chunk fn: identical state
+    layout and protocol, but the jit trace no longer scales with schedule
+    depth -- the win is compile time on deep schedules, at some per-step
+    cost (a ``switch`` per table row instead of straight-line code)."""
+    name = "jax-opcode"
+
+    def _make_fn(self):
+        return self.jax.jit(make_opcode_chunk_fn(self.jax, self.t.programs,
+                                                 self.t.dims),
+                            donate_argnums=(0,))
+
+
+class PallasBackend(JaxBackend):
+    """Opcode interpreter as a Pallas kernel: instances map to the grid in
+    blocks, each program id steps its block's state rows through the whole
+    chunk.  On hosts without an accelerator the kernel runs in Pallas
+    interpret mode (still the kernel's dataflow, evaluated by XLA:CPU) --
+    that is what CI's ``fleet-pallas-smoke`` exercises; on TPU the same
+    kernel compiles to Mosaic.  Single-device: the grid replaces the mesh
+    sharding of the base backend."""
+    name = "pallas"
+    PHASE_COMPILED = "kernel-launch"
+    PHASE_INTERPRET = "kernel-interpret"
+    block = 128
+
+    def _setup_layout(self, state: FleetState) -> None:
+        self.sharding = None
+        self.interpret = self.jax.default_backend() != "tpu"
+        self.chunk_phase = (self.PHASE_INTERPRET if self.interpret
+                            else self.PHASE_COMPILED)
+        # shrink the block for tiny fleets (tests): padding 5 instances to
+        # a 128-row block would cost 25x the interpret-mode work
+        self.block = min(self.block, -(-state.n // 8) * 8)
+        self.npad = -(-state.n // self.block) * self.block
+
+    def _make_fn(self):
+        from ..kernels.fleet_step import make_pallas_chunk_fn
+        return make_pallas_chunk_fn(self.jax, self.t.programs, self.t.dims,
+                                    block=self.block,
+                                    interpret=self.interpret)

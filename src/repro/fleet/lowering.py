@@ -224,3 +224,196 @@ def lower_queue(queue, model) -> FleetPrograms:
         if g[0] == "slot_nonnull")
     return FleetPrograms(enq=lower_op(ops["enq"], guard_attrs),
                          deq=lower_op(ops["deq"], guard_attrs))
+
+
+# --------------------------------------------------------------------------
+# Opcode-table encoding: FleetProgram micro/aux entries as fixed-width int32
+# rows, so a stepper can interpret them with a data-driven loop instead of
+# tracing one unrolled instruction sequence per program (the jit-trace size
+# then no longer scales with schedule depth -- see repro.fleet.jaxexec).
+# --------------------------------------------------------------------------
+
+# row opcodes (column 0)
+OPC_NOP = 0            # padding row: no effect
+OPC_CLASS_P = 1        # dynamic persistent classification
+OPC_CLASS_V = 2        # dynamic volatile classification
+OPC_ST_INVAL = 3       # K_STATE ST_INVAL: cached=0, finval=1, everfl=1
+OPC_ST_EVERFL = 4      # K_STATE ST_EVERFL: everfl=1
+OPC_RECACHE = 5        # K_STATE ST_RECACHE and K_LINE: cached=1, finval=0
+OPC_LIMBO = 6          # aux retire: limbo append (imm 0 = p, 1 = v)
+OPC_SLOT = 7           # aux slot store: slots[imm] = addr (imm: slot index)
+OPC_PDISCARD = 8       # aux persisted.discard(addr line)
+OPC_PADD = 9           # aux persisted.add(addr line) -- one row per sym
+N_OPC = 10
+
+# columns: (kind, amode, a, off, imm).  amode 0 = const (a is an absolute
+# persistent address / volatile offset), amode 1 = sym (a indexes the op
+# env, off is added to the bound value).  imm carries the per-kind
+# immediate (limbo space, slot index); event charges are implied by kind
+# (class_p consults cached/finval/everfl, class_v consults vtouched).
+OPCODE_COLUMNS = 5
+
+# kinds whose address operand lives in the volatile space
+_OPC_VSPACE = frozenset((OPC_CLASS_V,))
+
+_ST_TO_OPC = {0: OPC_ST_INVAL, 1: OPC_ST_EVERFL, 2: OPC_RECACHE}
+_OPC_TO_ST = {v: k for k, v in _ST_TO_OPC.items()}
+
+
+@dataclass(frozen=True)
+class OpcodeProgram:
+    """One FleetProgram's effect ops as a fixed-width int32 table.
+
+    Rows ``[0, n_micro)`` encode ``micro`` (applied before the logical
+    FIFO update), rows ``[n_micro, len(table))`` encode ``aux`` (applied
+    after it).  ``table`` may be padded with trailing ``OPC_NOP`` rows --
+    interpreters must treat them as no-ops."""
+    table: np.ndarray            # (rows, OPCODE_COLUMNS) int32
+    n_micro: int
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.table.shape[0])
+
+    def padded(self, rows: int) -> "OpcodeProgram":
+        """Same program with the table NOP-padded to ``rows`` rows."""
+        if rows < self.n_rows:
+            raise ValueError(f"cannot pad {self.n_rows} rows down to {rows}")
+        out = np.zeros((rows, OPCODE_COLUMNS), dtype=np.int32)
+        out[:self.n_rows] = self.table
+        return OpcodeProgram(table=out, n_micro=self.n_micro)
+
+
+def _encode_ref(kind: int, ref: Ref, imm: int = 0) -> tuple:
+    if ref.mode == "const":
+        return (kind, 0, ref.const, 0, imm)
+    return (kind, 1, ref.sym, ref.off, imm)
+
+
+def encode_program(prog: FleetProgram,
+                   slot_attrs: Tuple[str, ...]) -> OpcodeProgram:
+    """FleetProgram -> opcode table.  ``slot_attrs`` is the fleet-wide
+    guard-slot layout (``FleetDims.slot_attrs``): aux slot stores encode
+    the attribute as an index into it."""
+    rows = []
+    for ins in prog.micro:
+        tag, ref = ins[0], ins[1]
+        if tag == "class_p":
+            rows.append(_encode_ref(OPC_CLASS_P, ref))
+        elif tag == "class_v":
+            rows.append(_encode_ref(OPC_CLASS_V, ref))
+        elif tag == "state":
+            rows.append(_encode_ref(_ST_TO_OPC[ins[2]], ref))
+        elif tag == "line":
+            rows.append(_encode_ref(OPC_RECACHE, ref))
+        else:
+            raise FleetLoweringError(f"unknown micro tag {tag!r}")
+    n_micro = len(rows)
+    for ax in prog.aux:
+        t0 = ax[0]
+        if t0 == "limbo":
+            rows.append((OPC_LIMBO, 1, ax[1], 0, 0 if ax[2] == "p" else 1))
+        elif t0 == "slot":
+            if ax[1] not in slot_attrs:
+                raise FleetLoweringError(
+                    f"slot store to {ax[1]!r} outside the guard-slot "
+                    f"layout {slot_attrs}")
+            rows.append((OPC_SLOT, 1, ax[2], 0, slot_attrs.index(ax[1])))
+        elif t0 == "pdiscard":
+            rows.append((OPC_PDISCARD, 1, ax[1], 0, 0))
+        elif t0 == "padd":
+            for sym in ax[1]:
+                rows.append((OPC_PADD, 1, sym, 0, 0))
+        else:
+            raise FleetLoweringError(f"unknown aux tag {t0!r}")
+    table = np.asarray(rows, dtype=np.int32).reshape(-1, OPCODE_COLUMNS)
+    opc = OpcodeProgram(table=table, n_micro=n_micro)
+    validate_opcodes(prog, opc, slot_attrs)
+    return opc
+
+
+_SYM_NAMES = {v: k for k, v in _SYM_INDEX.items()}
+_SYMS = _SYM_NAMES          # name used by _lower_addr's error message
+
+
+def decode_opcodes(opc: OpcodeProgram,
+                   slot_attrs: Tuple[str, ...]) -> Tuple[tuple, tuple]:
+    """Opcode table -> (micro, aux) in FleetProgram's tuple form, with
+    every ``padd`` group expanded to one entry per symbol (the encoding's
+    normal form).  NOP padding rows are skipped."""
+    micro, aux = [], []
+    for r, row in enumerate(map(tuple, opc.table.tolist())):
+        kind, amode, a, off, imm = row
+        if kind == OPC_NOP:
+            continue
+        in_micro = r < opc.n_micro
+        if kind in (OPC_CLASS_P, OPC_CLASS_V, OPC_ST_INVAL, OPC_ST_EVERFL,
+                    OPC_RECACHE):
+            space = "v" if kind in _OPC_VSPACE else "p"
+            if amode == 0:
+                ref = Ref(space, "const", const=a)
+            else:
+                ref = Ref(space, "sym", sym=a, off=off)
+            if not in_micro:
+                raise FleetLoweringError(
+                    f"row {r}: effect opcode {kind} in the aux region")
+            if kind == OPC_CLASS_P:
+                micro.append(("class_p", ref))
+            elif kind == OPC_CLASS_V:
+                micro.append(("class_v", ref))
+            elif kind == OPC_RECACHE:
+                micro.append(("state", ref, _OPC_TO_ST[OPC_RECACHE]))
+            else:
+                micro.append(("state", ref, _OPC_TO_ST[kind]))
+        elif kind in (OPC_LIMBO, OPC_SLOT, OPC_PDISCARD, OPC_PADD):
+            if in_micro:
+                raise FleetLoweringError(
+                    f"row {r}: aux opcode {kind} in the micro region")
+            if kind == OPC_LIMBO:
+                aux.append(("limbo", a, "p" if imm == 0 else "v"))
+            elif kind == OPC_SLOT:
+                aux.append(("slot", slot_attrs[imm], a))
+            elif kind == OPC_PDISCARD:
+                aux.append(("pdiscard", a))
+            else:
+                aux.append(("padd", (a,)))
+        else:
+            raise FleetLoweringError(f"row {r}: unknown opcode {kind}")
+    return tuple(micro), tuple(aux)
+
+
+def _normalize(prog: FleetProgram) -> Tuple[tuple, tuple]:
+    """The program's micro/aux in the encoding's normal form: ``line``
+    entries become ST_RECACHE state entries, ``padd`` groups expand."""
+    micro = []
+    for ins in prog.micro:
+        if ins[0] == "line":
+            micro.append(("state", ins[1], _OPC_TO_ST[OPC_RECACHE]))
+        else:
+            micro.append(ins)
+    aux = []
+    for ax in prog.aux:
+        if ax[0] == "padd":
+            aux.extend(("padd", (sym,)) for sym in ax[1])
+        else:
+            aux.append(ax)
+    return tuple(micro), tuple(aux)
+
+
+def validate_opcodes(prog: FleetProgram, opc: OpcodeProgram,
+                     slot_attrs: Tuple[str, ...]) -> None:
+    """Decode the table and require it to reproduce the source program's
+    effect semantics exactly (up to the documented normal form).  Runs at
+    every encode so a drifting encoder cannot silently ship wrong
+    tables."""
+    if opc.table.dtype != np.int32 or opc.table.ndim != 2 \
+            or opc.table.shape[1] != OPCODE_COLUMNS:
+        raise FleetLoweringError(
+            f"opcode table must be (rows, {OPCODE_COLUMNS}) int32, got "
+            f"{opc.table.dtype} {opc.table.shape}")
+    got = decode_opcodes(opc, slot_attrs)
+    want = _normalize(prog)
+    if got != want:
+        raise FleetLoweringError(
+            f"opcode round-trip mismatch for {prog.kind}:\n"
+            f"  decoded {got}\n  expected {want}")

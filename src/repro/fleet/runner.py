@@ -55,7 +55,7 @@ class FleetConfig:
     seed: int = 0
     p_deq: float = 0.5
     chunk: int = 64                 # plan steps per vector chunk
-    backend: str = "auto"           # auto | numpy | jax
+    backend: str = "auto"           # auto | numpy | jax | jax-opcode | pallas
     devices: int = 8                # forced host devices for the jax mesh
     batch: int = 0                  # instances per state batch (0 = all)
     contention: str = "off"         # CSV label; one thread per instance, so
@@ -179,16 +179,22 @@ class NumpyBackend:
 
 def _resolve_backend(name: str, devices: int):
     """-> (backend_name, device_count).  'auto' prefers jax, falls back to
-    numpy if jax is unavailable; forcing the host-device count only works
-    if jax has not been imported yet (harmless otherwise)."""
+    numpy if jax is unavailable; the explicit jax-family names
+    ('jax', 'jax-opcode', 'pallas') raise if jax is missing.  Forcing the
+    host-device count only works if jax has not been imported yet
+    (harmless otherwise)."""
     if name == "numpy":
         return "numpy", 1
     try:
         ensure_host_devices(devices)
         import jax
+        if name == "pallas":
+            return "pallas", 1          # grid-parallel, single device
+        if name == "jax-opcode":
+            return "jax-opcode", len(jax.devices())
         return "jax", len(jax.devices())
     except Exception:
-        if name == "jax":
+        if name != "auto":
             raise
         return "numpy", 1
 
@@ -197,6 +203,12 @@ def _make_backend(name: str, template: Template, state, devices: int):
     if name == "jax":
         from .jaxexec import JaxBackend
         return JaxBackend(template, state, devices)
+    if name == "jax-opcode":
+        from .jaxexec import OpcodeJaxBackend
+        return OpcodeJaxBackend(template, state, devices)
+    if name == "pallas":
+        from .jaxexec import PallasBackend
+        return PallasBackend(template, state, devices)
     return NumpyBackend(template, state)
 
 
@@ -253,9 +265,10 @@ def _run_batch(template: Template, cfg: FleetConfig, kinds: np.ndarray,
     prof.pop()
     resident_counts = {}
     bails = residents = 0
+    chunk_phase = getattr(backend, "chunk_phase", "chunk-step")
     for start in range(0, cfg.ops, cfg.chunk):
         end = min(start + cfg.chunk, cfg.ops)
-        prof.push("chunk-step")
+        prof.push(chunk_phase)
         backend.run_chunk(kinds[start:end], start)
         prof.pop()
         prof.push("poll")
@@ -298,7 +311,9 @@ def run_fleet(cfg: FleetConfig, fleet: Optional[Fleet] = None,
 
     ``profile`` attaches an observation-only phase profiler (phases:
     ``lowering``, ``chunk-step``, ``poll``, ``bail-replay``,
-    ``resident-replay``); ``heartbeat`` a :class:`repro.obs.Heartbeat`
+    ``resident-replay``; the pallas backend replaces ``chunk-step`` with
+    its ``chunk_phase`` -- ``kernel-launch`` or ``kernel-interpret``);
+    ``heartbeat`` a :class:`repro.obs.Heartbeat`
     that emits periodic progress lines.  Neither changes counts."""
     prof = profile if profile is not None else _NULL
     hb = heartbeat if heartbeat is not None else _NULL

@@ -20,7 +20,11 @@ generate_fast_fn``):
 
 This backend is the semantic reference for :mod:`repro.fleet.jaxexec`
 (cross-checked by ``tests/test_fleet_equivalence.py``) and the fallback
-when jax is unavailable.
+when jax is unavailable.  The effect order spelled out above is a
+three-way contract: the unrolled jax stepper, the opcode interpreter
+(``jax-opcode``) and the Pallas chunk kernel (``pallas``) all replay it
+exactly -- anything reordered here must be reordered there, and the
+opcode encoding in :mod:`repro.fleet.lowering` must keep round-tripping.
 """
 from __future__ import annotations
 

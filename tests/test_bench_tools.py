@@ -1,0 +1,70 @@
+"""CLI round-trip smokes for the dry-run artifact tools
+(``benchmarks/merge_results.py`` and ``benchmarks/roofline.py``) -- the
+entry points themselves, not just the library functions
+(``tests/test_roofline_tools.py`` covers the math).  Both are registered
+in ``tests/test_docs_refs.py`` CLI_SOURCES so their flags stay real.
+"""
+import json
+
+from benchmarks.merge_results import main as merge_main
+from benchmarks.merge_results import merge
+from benchmarks.roofline import main as roofline_main
+
+
+def _cell(arch, shape, mesh, ok=True, **kw):
+    c = {"arch": arch, "shape": shape, "mesh": mesh, "ok": ok,
+         "flops_per_device": 1e14,
+         "analytic_bytes_per_device": {"total": 1e12},
+         "collective_bytes_per_device": {"all-gather": 1e11},
+         "model_flops": 1e16, "n_chips": 256}
+    c.update(kw)
+    return c
+
+
+def _write_jsonl(path, cells):
+    with open(path, "w") as f:
+        for c in cells:
+            f.write(json.dumps(c) + "\n")
+
+
+def test_merge_last_wins_ok_preferred(tmp_path):
+    a = tmp_path / "a.jsonl"
+    b = tmp_path / "b.jsonl"
+    out = tmp_path / "merged.jsonl"
+    _write_jsonl(a, [_cell("x", "s", "m", ok=True, run=1),
+                     _cell("y", "s", "m", ok=False, run=1)])
+    _write_jsonl(b, [_cell("x", "s", "m", ok=False, run=2),   # loses: not ok
+                     _cell("y", "s", "m", ok=True, run=2)])   # wins
+    best = merge([str(a), str(b), str(tmp_path / "missing.jsonl")], str(out))
+    assert best[("x", "s", "m")]["run"] == 1
+    assert best[("y", "s", "m")]["run"] == 2
+    # file order preserved: first-seen key order
+    lines = [json.loads(line) for line in out.read_text().splitlines()]
+    assert [r["arch"] for r in lines] == ["x", "y"]
+
+
+def test_merge_cli_round_trip(tmp_path, capsys):
+    src = tmp_path / "dryrun_results_0.jsonl"
+    out = tmp_path / "merged.jsonl"
+    _write_jsonl(src, [_cell("a", "s", "m"), _cell("b", "s", "m", ok=False)])
+    rc = merge_main([str(src), "--out", str(out)])
+    assert rc == 0
+    assert "merged 2 cells (1 ok)" in capsys.readouterr().out
+    assert len(out.read_text().splitlines()) == 2
+
+
+def test_roofline_cli_round_trip(tmp_path, capsys):
+    src = tmp_path / "cells.jsonl"
+    md = tmp_path / "roofline.md"
+    _write_jsonl(src, [_cell("tpu", "train_4k", "2x2", ok=True),
+                       _cell("tpu", "decode", "2x2", ok=False,
+                             error="boom")])
+    rc = roofline_main([str(src)])
+    assert rc == 0
+    stdout = capsys.readouterr().out
+    assert "| arch |" in stdout and "FAIL: boom" in stdout
+    # --out writes the same table to a file instead
+    assert roofline_main([str(src), "--out", str(md)]) == 0
+    assert "FAIL: boom" in md.read_text()
+    assert md.read_text().strip() in stdout.strip() or \
+        stdout.strip() in md.read_text().strip()

@@ -142,7 +142,7 @@ def test_docs_name_the_observability_layer():
                  "repro.obs.Heartbeat",
                  "repro.obs.manifest.build_manifest",
                  "benchmarks/bench_history.py",
-                 "benchmarks/history/BENCH_8.json"):
+                 "benchmarks/history/BENCH_9.json"):
         assert span in obs, f"observability.md does not mention {span}"
     for rel in ("tests/test_obs_bit_identity.py",
                 "tests/test_obs_manifest.py"):
@@ -153,15 +153,36 @@ def test_docs_name_the_observability_layer():
         "architecture.md does not link docs/observability.md"
 
 
+def test_docs_name_the_fleet_backends():
+    """Satellite: docs/fleet.md carries the backend matrix (all four
+    `--backend` values, with the kernel source file), and
+    docs/observability.md names the Pallas phase constants exactly as
+    `repro.fleet.jaxexec.PallasBackend` reports them."""
+    fleet = (REPO / "docs" / "fleet.md").read_text()
+    for span in ("numpy", "jax-opcode", "pallas",
+                 "src/repro/kernels/fleet_step.py",
+                 "repro.fleet.lowering.encode_program"):
+        assert span in fleet, f"fleet.md does not mention {span}"
+    obs = (REPO / "docs" / "observability.md").read_text()
+    from repro.fleet.jaxexec import PallasBackend
+    for phase in (PallasBackend.PHASE_COMPILED, PallasBackend.PHASE_INTERPRET):
+        assert phase in obs, (
+            f"observability.md does not name the {phase!r} phase")
+    assert "_wall_us_per_op" in obs, (
+        "observability.md must document backend-qualified headline cells")
+
+
 ARGV0_RE = re.compile(r'argv\[0\] == "([\w-]+)"')
 ADDARG_RE = re.compile(r'add_argument\(\s*"(--[\w-]+)"')
 FLAG_TOKEN_RE = re.compile(r"(?<![=\w-])--[\w-]+")
 
 # Every CLI whose flags the docs may quote: the benchmark driver, the
-# crash-sweep/repro entry point it forwards to, and the perf-trajectory
-# gate (docs/observability.md quotes its fold/compare flags).
+# crash-sweep/repro entry point it forwards to, the perf-trajectory
+# gate (docs/observability.md quotes its fold/compare flags), and the
+# dry-run artifact tools (merge + roofline table).
 CLI_SOURCES = ("benchmarks/run.py", "src/repro/crash/__main__.py",
-               "benchmarks/bench_history.py")
+               "benchmarks/bench_history.py", "benchmarks/merge_results.py",
+               "benchmarks/roofline.py")
 
 
 def _known_cli():

@@ -142,3 +142,44 @@ def test_jax_matches_numpy_counts():
         rn = run_fleet(FleetConfig(backend="numpy", **base))
         rj = run_fleet(FleetConfig(backend="jax", **base))
         assert np.array_equal(rn.counts, rj.counts)
+
+
+# ---- opcode-interpreting backends: the full matrix -----------------------
+# The unrolled jax stepper shares its trace with the numpy reference line
+# by line, so reduced cells suffice above.  The jax-opcode and pallas
+# backends interpret the encoded opcode *tables* instead -- a second
+# program representation -- so they carry the full 8 queues x 3 models
+# bit-identity gate themselves.
+
+@pytest.mark.parametrize("model", MODELS)
+@pytest.mark.parametrize("queue", list(ALL_QUEUES))
+@pytest.mark.parametrize("backend", ["jax-opcode", "pallas"])
+def test_opcode_backends_match_run_batched(backend, queue, model):
+    cfg = FleetConfig(queue=queue, model=model, instances=5, ops=48,
+                      chunk=24, backend=backend, seed=3)
+    res = run_fleet(cfg)
+    assert res.backend == backend
+    _assert_all_ok(res, sample=5)
+
+
+@pytest.mark.parametrize("backend", ["jax-opcode", "pallas"])
+def test_opcode_backend_bail_rejoin_exact(backend):
+    rng = np.random.default_rng(5)
+    cfg = FleetConfig(queue="LinkedQ", model="cxl", instances=6, ops=60,
+                      chunk=20, backend=backend, prefill=3, seed=2)
+    kinds = (rng.random((cfg.ops, cfg.instances)) < 0.65).astype(np.uint8)
+    res = run_fleet(cfg, kinds=kinds)
+    assert res.bails > 0
+    _assert_all_ok(res, sample=6)
+
+
+@pytest.mark.parametrize("backend", ["jax-opcode", "pallas"])
+def test_opcode_backend_matches_numpy_counts(backend):
+    """Full counts arrays equal to the numpy reference, not just sampled
+    (epoch reclamation included: 200 ops cross three advances)."""
+    base = dict(queue="OptLinkedQ", model="optane-clwb", instances=5,
+                ops=200, chunk=50, seed=7)
+    rn = run_fleet(FleetConfig(backend="numpy", **base))
+    rb = run_fleet(FleetConfig(backend=backend, **base))
+    assert rn.bails == rb.bails == 0
+    assert np.array_equal(rn.counts, rb.counts)

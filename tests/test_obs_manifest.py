@@ -211,6 +211,35 @@ def test_bench_history_cli_smoke(tmp_path, capsys):
     assert bh.main(["show", str(snap_path)]) == 0
 
 
+def test_compare_summary_writes_delta_table(tmp_path):
+    """``compare --summary`` appends the GFM delta table CI shows in the
+    job summary: one row per shared cell with a status mark, plus
+    gone/new rows for unshared cells."""
+    base = _write_manifest(tmp_path, "base.manifest.json", dict(BASE))
+    snap_path = tmp_path / "BENCH_8.json"
+    assert bh.main(["fold", "--pr", "8", "--out", str(snap_path), base]) == 0
+    cur = {k: (v * 1.5 if k.endswith("_us_per_op") and "compiled" in k else v)
+           for k, v in BASE.items()}
+    del cur["crash-sweep/recoveries_per_s"]
+    cur["fleet/m/off/Q/pallas_wall_us_per_op"] = 1.0
+    m = _write_manifest(tmp_path, "cur.manifest.json", cur)
+    summary = tmp_path / "summary.md"
+    rc = bh.main(["compare", "--baseline", str(snap_path),
+                  "--summary", str(summary), m])
+    assert rc == 1  # the 50% regression still fails the gate
+    text = summary.read_text()
+    assert text.startswith("### Perf trajectory vs `BENCH_8.json` (PR 8)")
+    assert "| ❌ FAIL | `fastpath/DurableMSQ/compiled_us_per_op` |" in text
+    assert "| ✅ ok | `fastpath/DurableMSQ/speedup_vs_cap` |" in text
+    assert "| gone | `crash-sweep/recoveries_per_s` |" in text
+    assert "| new | `fleet/m/off/Q/pallas_wall_us_per_op` |" in text
+    assert "2 cells compared: 1 fail, 0 warn" in text
+    # appends (CI reuses $GITHUB_STEP_SUMMARY across steps)
+    assert bh.main(["compare", "--baseline", str(snap_path),
+                    "--summary", str(summary), base]) == 0
+    assert summary.read_text().count("### Perf trajectory") == 2
+
+
 def test_committed_bench_8_snapshot_is_valid():
     """The committed trajectory bootstrap: BENCH_8.json exists, validates,
     and carries the three cell families the gate is built around."""
