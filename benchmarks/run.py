@@ -304,6 +304,16 @@ def fastpath_smoke_main(argv) -> None:
     per-thread Stats field to be bit-identical to the columnar run -- the
     CI columnar-vs-legacy differential smoke, at full smoke scale rather
     than the equivalence suite's test sizes.
+
+    ``--burst`` adds the burst-executor rows: ``--burst-workload``
+    (default ``producers``) at the full ``--ops`` scale, once on the
+    merged columnar runner and once with the vectorized burst executor
+    (``run_batched(burst=...)``, window ``--burst-window``).  Two gates:
+    per-thread Stats must be bit-identical between the two runs, and the
+    burst run must be ``--min-speedup-burst`` (default 3x) cheaper per
+    op at the identical scale -- the PR-10 sub-microsecond cell the
+    trajectory snapshot tracks as
+    ``fastpath-burst/<queue>/burst_us_per_op``.
     """
     ap = argparse.ArgumentParser(
         prog="run.py fastpath-smoke",
@@ -340,6 +350,25 @@ def fastpath_smoke_main(argv) -> None:
     ap.add_argument("--differential", action="store_true",
                     help="rerun the compiled workload with records='legacy' "
                          "and require bit-identical per-thread Stats")
+    ap.add_argument("--burst", action="store_true",
+                    help="add the burst-executor rows: run --burst-workload "
+                         "at full scale on the columnar runner and again "
+                         "with run_batched(burst=...), require bit-identical "
+                         "per-thread Stats and >= --min-speedup-burst")
+    ap.add_argument("--burst-queues", default="MSQ",
+                    help="comma-separated queues for the burst rows "
+                         "(default MSQ: the queue whose op programs the "
+                         "whole-burst vector fast paths fully collapse)")
+    ap.add_argument("--burst-workload", default="producers",
+                    help="workload for the burst rows (default producers: "
+                         "the uncontended enqueue-only shape burst "
+                         "prediction targets)")
+    ap.add_argument("--burst-window", type=int, default=32768,
+                    help="burst window in ops (default 32768)")
+    ap.add_argument("--min-speedup-burst", type=float, default=3.0,
+                    help="required burst vs columnar speedup at identical "
+                         "scale (default 3x; measured ~3.3-3.6x on the "
+                         "reference container)")
     ap.add_argument("--out", default=None, help="CSV destination")
     ap.add_argument("--manifest", default=None,
                     help="run-manifest destination (default: alongside "
@@ -400,6 +429,7 @@ def fastpath_smoke_main(argv) -> None:
                 "fast_ops": h.fast.fast_ops if h.fast else 0,
                 "bailed_ops": h.fast.bailed_ops if h.fast else 0,
                 "speedup_vs_cap": "", "speedup_same_scale": "",
+                "speedup_burst": "",
             })
         speedup_cap = cell["per-op@cap"] / cell["compiled"]
         speedup_same = cell["per-op"] / cell["compiled"]
@@ -462,6 +492,7 @@ def fastpath_smoke_main(argv) -> None:
                 "fast_ops": h.fast.fast_ops if h.fast else 0,
                 "bailed_ops": h.fast.bailed_ops if h.fast else 0,
                 "speedup_vs_cap": "", "speedup_same_scale": "",
+                "speedup_burst": "",
             })
             print(f"fastpath/{qname}/differential,"
                   f"{wall * 1e6 / total:.3f},"
@@ -476,6 +507,90 @@ def fastpath_smoke_main(argv) -> None:
         if wall_compiled > args.budget_s:
             failures.append(f"{qname}: compiled run took {wall_compiled}s "
                             f"(> {args.budget_s}s budget)")
+    if args.burst:
+        bw = {"window": args.burst_window}
+        for qname in args.burst_queues.split(","):
+            burst_cell, burst_stats = {}, {}
+            for label, burst in (("columnar@burst-wl", None), ("burst", bw)):
+                # warm codegen caches outside timing, like `profile` cells
+                hw = QueueHarness(ALL_QUEUES[qname], nthreads=args.threads,
+                                  model=args.model,
+                                  area_nodes=args.area_nodes)
+                hw.nvram.enable_bulk_init = True
+                wplans, wprefill = make_plans(args.burst_workload,
+                                              args.threads, 8, seed=0)
+                for i in range(wprefill):
+                    hw.queue.enqueue(0, ("pre", i))
+                hw.run_batched(wplans, compiled=True, pause_gc=True,
+                               burst=burst)
+                h = QueueHarness(ALL_QUEUES[qname], nthreads=args.threads,
+                                 model=args.model,
+                                 area_nodes=args.area_nodes)
+                h.nvram.enable_bulk_init = True
+                plans, prefill = make_plans(args.burst_workload,
+                                            args.threads, ops_per_thread,
+                                            seed=0)
+                for i in range(prefill):
+                    h.queue.enqueue(0, ("pre", i))
+                base_stats = h.nvram.total_stats()
+                t0 = time.perf_counter()
+                res = h.run_batched(plans, compiled=True, pause_gc=True,
+                                    burst=burst)
+                wall = time.perf_counter() - t0
+                assert res.ops_completed == total
+                us = wall * 1e6 / total
+                burst_cell[label] = us
+                burst_stats[label] = {t: h.nvram.stats[t].snapshot()
+                                      for t in range(args.threads)}
+                d = h.nvram.total_stats().minus(base_stats)
+                rows.append({
+                    "queue": qname, "workload": args.burst_workload,
+                    "model": args.model, "threads": args.threads,
+                    "mode": label, "ops": total, "wall_s": round(wall, 3),
+                    "us_per_op": round(us, 3),
+                    "post_flush_per_op": round(
+                        d.post_flush_accesses / total, 3),
+                    "fast_ops": h.fast.fast_ops if h.fast else 0,
+                    "bailed_ops": h.fast.bailed_ops if h.fast else 0,
+                    "speedup_vs_cap": "", "speedup_same_scale": "",
+                    "speedup_burst": "",
+                })
+                bstats = h.last_burst_stats or {}
+            speedup_burst = burst_cell["columnar@burst-wl"] / \
+                burst_cell["burst"]
+            rows[-1]["speedup_burst"] = round(speedup_burst, 2)
+            mismatches = [
+                (t, f)
+                for t in range(args.threads)
+                for f in burst_stats["burst"][t].__dict__
+                if getattr(burst_stats["burst"][t], f) != getattr(
+                    burst_stats["columnar@burst-wl"][t], f)
+            ]
+            headline[f"fastpath-burst/{qname}/burst_us_per_op"] = \
+                round(burst_cell["burst"], 4)
+            headline[f"fastpath-burst/{qname}/columnar_us_per_op"] = \
+                round(burst_cell["columnar@burst-wl"], 4)
+            headline[f"fastpath-burst/{qname}/speedup_vs_columnar"] = \
+                round(speedup_burst, 2)
+            print(f"fastpath-burst/{qname}/burst,"
+                  f"{burst_cell['burst']:.3f},"
+                  f"columnar_us={burst_cell['columnar@burst-wl']:.3f};"
+                  f"speedup_burst={speedup_burst:.2f}x;"
+                  f"bursted={bstats.get('ops_bursted', 0)};"
+                  f"mispredicts={bstats.get('mispredicts', 0)};"
+                  f"stats={'MISMATCH' if mismatches else 'identical'}")
+            if speedup_burst < args.min_speedup_burst:
+                failures.append(
+                    f"{qname}: burst {speedup_burst:.2f}x vs columnar < "
+                    f"{args.min_speedup_burst:.1f}x required")
+            if mismatches:
+                t, f = mismatches[0]
+                failures.append(
+                    f"{qname}: burst run diverges from columnar on "
+                    f"{len(mismatches)} Stats fields (first: thread {t} "
+                    f"{f}: burst="
+                    f"{getattr(burst_stats['burst'][t], f)} columnar="
+                    f"{getattr(burst_stats['columnar@burst-wl'][t], f)})")
     if args.out:
         with open(args.out, "w", newline="") as f:
             w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
@@ -701,6 +816,8 @@ def crash_sweep_main(argv) -> None:
 # (see repro.obs.profiler); CSV columns replace '-' with '_'.
 EXEC_PHASES = ("heap-loop", "interpreted-body", "record-charging",
                "bookkeeping", "bail-real-op")
+BURST_PHASES = ("burst-predict", "burst-verify", "burst-vector-apply",
+                "mispredict-replay")
 FLEET_PHASES = ("lowering", "chunk-step", "poll", "bail-replay",
                 "resident-replay")
 CRASH_PHASES = ("capture", "restore", "recover", "check")
@@ -725,11 +842,18 @@ def profile_main(argv) -> None:
     The phase sum is within 10% of wall time by construction (gap-free
     scoped timers); a coverage outside [0.9, 1.1] prints a warning.
 
-    ``--sections fleet`` and ``--sections crash`` add the fleet runner
-    (lowering / chunk-step / poll / bail-replay / resident-replay) and
-    crash-sweep recovery (capture / restore / recover / check) phase
-    breakdowns.  Each cell does a small warmup run first so codegen and
-    cache fills are not attributed to the measured phases.
+    ``--sections burst`` reruns the cells with the vectorized burst
+    executor attached (``run_batched(burst=...)``) and adds its phase
+    group: ``burst-predict`` (heap simulation as segmented cumsums),
+    ``burst-verify`` (key comparison against the prediction),
+    ``burst-vector-apply`` (bulk memory effects + staged records) and
+    ``mispredict-replay`` (bounded columnar replay of rejected
+    stretches).  ``--sections fleet`` and ``--sections crash`` add the
+    fleet runner (lowering / chunk-step / poll / bail-replay /
+    resident-replay) and crash-sweep recovery (capture / restore /
+    recover / check) phase breakdowns.  Each cell does a small warmup
+    run first so codegen and cache fills are not attributed to the
+    measured phases.
     """
     ap = argparse.ArgumentParser(
         prog="run.py profile",
@@ -745,8 +869,12 @@ def profile_main(argv) -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--sections", default="exec",
                     help="comma-separated: exec (run_batched phases), "
+                         "burst (run_batched with the burst executor: "
+                         "predict/verify/vector-apply/mispredict-replay), "
                          "fleet (fleet-runner phases), crash (crash-sweep "
                          "recovery phases)")
+    ap.add_argument("--burst-window", type=int, default=32768,
+                    help="burst window for --sections burst cells")
     ap.add_argument("--fleet-instances", type=int, default=2000)
     ap.add_argument("--fleet-ops", type=int, default=48)
     ap.add_argument("--crash-ops", type=int, default=2,
@@ -757,7 +885,7 @@ def profile_main(argv) -> None:
                          "--out as <stem>.manifest.json)")
     args = ap.parse_args(argv)
     sections = set(args.sections.split(","))
-    unknown = sections - {"exec", "fleet", "crash"}
+    unknown = sections - {"exec", "burst", "fleet", "crash"}
     if unknown:
         ap.error(f"unknown --sections {sorted(unknown)}")
     queues = args.queues.split(",")
@@ -811,6 +939,55 @@ def profile_main(argv) -> None:
                           f"covers {cov:.2f}x of wall time "
                           f"(expected within 10%)", file=sys.stderr)
                 headline[f"profile/{model}/{qname}/us_per_op"] = \
+                    round(us, 4)
+                all_phases.merge(prof)
+    if "burst" in sections:
+        bw = {"window": args.burst_window}
+        for model in models:
+            for qname in queues:
+                hw = QueueHarness(ALL_QUEUES[qname], nthreads=args.threads,
+                                  model=model, area_nodes=args.area_nodes)
+                wplans, wprefill = make_plans(args.workload, args.threads,
+                                              8, seed=args.seed)
+                for i in range(wprefill):
+                    hw.queue.enqueue(0, ("pre", i))
+                hw.run_batched(wplans, burst=bw)
+                h = QueueHarness(ALL_QUEUES[qname], nthreads=args.threads,
+                                 model=model, area_nodes=args.area_nodes)
+                plans, prefill = make_plans(args.workload, args.threads,
+                                            args.ops, seed=args.seed)
+                for i in range(prefill):
+                    h.queue.enqueue(0, ("pre", i))
+                prof = PhaseProfiler()
+                t0 = time.perf_counter()
+                res = h.run_batched(plans, profile=prof, burst=bw)
+                wall = time.perf_counter() - t0
+                n = res.ops_completed
+                per = prof.us_per_op(n)
+                cov = prof.coverage(wall)
+                us = wall * 1e6 / max(n, 1)
+                bs = h.last_burst_stats or {}
+                row = {"section": "burst", "queue": qname, "model": model,
+                       "threads": args.threads, "ops": n,
+                       "wall_s": round(wall, 4), "us_per_op": round(us, 4),
+                       "coverage": round(cov, 4),
+                       "burst_commits": bs.get("commits", 0),
+                       "burst_mispredicts": bs.get("mispredicts", 0),
+                       "burst_rejects": bs.get("rejects", 0),
+                       "ops_bursted": bs.get("ops_bursted", 0),
+                       "replayed_ops": bs.get("replayed_ops", 0)}
+                row.update(_phase_cols(per, EXEC_PHASES + BURST_PHASES))
+                rows.append(row)
+                derived = ";".join(
+                    f"{c}={v}" for c, v in _phase_cols(per, BURST_PHASES))
+                print(f"profile-burst/{model}/{qname},{us:.3f},"
+                      f"{derived};bursted={bs.get('ops_bursted', 0)};"
+                      f"coverage={cov:.3f}")
+                if not 0.9 <= cov <= 1.1:
+                    print(f"# profile WARNING: burst {model}/{qname} phase "
+                          f"sum covers {cov:.2f}x of wall time "
+                          f"(expected within 10%)", file=sys.stderr)
+                headline[f"profile-burst/{model}/{qname}/us_per_op"] = \
                     round(us, 4)
                 all_phases.merge(prof)
     if "fleet" in sections:

@@ -249,7 +249,8 @@ class QueueHarness:
     def run_batched(self, plans: List[List[Tuple[str, Any]]],
                     contention: Union[ContentionModel, bool, None] = None,
                     trace=None, compiled: Optional[bool] = None,
-                    pause_gc: bool = True, profile=None) -> RunResult:
+                    pause_gc: bool = True, profile=None,
+                    burst=None) -> RunResult:
         """Clock-driven op-granularity execution: no OS threads, no yield
         points.  This is the throughput path -- hundreds of thousands of
         ops across 1..64+ threads are practical (the exact scheduler caps
@@ -279,14 +280,27 @@ class QueueHarness:
         ``bookkeeping`` phase, with the scheduler loop, op bodies, bails
         and record-charging nested inside (see ``benchmarks/run.py
         profile``).  Stats stay bit-identical; None (the default) leaves
-        every hot path untouched."""
+        every hot path untouched.
+
+        ``burst`` opts the run into the burst executor
+        (:mod:`repro.core.burst`): whole multi-thread clock-heap bursts
+        predicted and applied as array programs, mispredicted bursts
+        replayed through the merged columnar runner.  ``True`` uses the
+        defaults, a dict passes :class:`~repro.core.burst.BurstExecutor`
+        options through (``window``, ``min_ops``, ``max_fixpoint_iters``,
+        ``force_mispredict_every``, ``force_reject_every``).  Only
+        engages where columnar dispatch does and the queue is
+        burst-eligible; results stay bit-identical either way (the burst
+        equivalence suite is the gate).  Per-run predictor counters land
+        in :attr:`last_burst_stats`."""
         if profile is not None:
             profile.push("bookkeeping")
             if self._rstore is not None:
                 self._rstore.profiler = profile
         try:
             return self._run_batched_inner(plans, contention, trace,
-                                           compiled, pause_gc, profile)
+                                           compiled, pause_gc, profile,
+                                           burst)
         finally:
             if profile is not None:
                 if self._rstore is not None:
@@ -294,7 +308,7 @@ class QueueHarness:
                 profile.pop()   # bookkeeping
 
     def _run_batched_inner(self, plans, contention, trace, compiled,
-                           pause_gc, profile) -> RunResult:
+                           pause_gc, profile, burst=None) -> RunResult:
         if contention is True:
             contention = ContentionModel()
         elif contention is False:
@@ -334,11 +348,14 @@ class QueueHarness:
                         for t, plan in enumerate(plans)]
         sched = ClockScheduler(self.nvram, contention=contention,
                                fast=fast, pause_gc=pause_gc,
-                               profile=profile)
+                               profile=profile, burst=burst)
+        self.last_burst_stats = None
         self._trace_begin(trace, len(plans), None, "batched")
         try:
             sched.run(op_lists, op_kinds=op_kinds, op_items=op_items,
                       make_op=self._make_op)
+            if sched.burst_exec is not None:
+                self.last_burst_stats = sched.burst_exec.stats()
         finally:
             if fast is not None:
                 fast.flush_counts()   # land deferred compiled-op charges

@@ -188,7 +188,7 @@ class EngineSnapshot:
         self.log = {ln: list(entries) for ln, entries in nv._log.items()
                     if entries}
         nl = -(-nv._brk // LINE_WORDS)
-        self.log_start = nv._log_start[:nl]
+        self.log_start = nv._log_start[:nl]      # list slice == copy
         self.pending = {t: list(pl) for t, pl in nv._pending.items()}
         self.crashed = nv.crashed
         self.has_volatile = volatile
@@ -196,7 +196,7 @@ class EngineSnapshot:
             self.lstate = bytes(nv._lstate[:nl])
             self.vis = nv._vis[:nv._brk]
             vused = nv._vbrk - NVRAM._VOLATILE_BASE
-            self.vval = nv._vval[:vused]
+            self.vval = nv._vval[:vused].copy()   # ndarray slice is a view
             self.vtouched = bytes(nv._vtouched[:vused])
         else:
             # crash-sufficient: only the ever-flushed history matters
@@ -246,20 +246,34 @@ class NVRAM:
         # defaults across snapshot/restore/crash).
         cap = 1024
         self._pcap = cap
+        # the persistent planes stay plain lists: the compiled per-op
+        # paths do dozens of scalar/slice accesses per op and lists are
+        # measurably faster there (ndarray slice-assign alone costs ~2.5x).
+        # The burst executor batches its p-plane stores with C-level
+        # map(list.__setitem__) passes instead of fancy indexing.
         self._pmem: List[Any] = [None] * cap        # persistent image
         self._vis: List[Any] = [None] * cap         # coherent (cached) view
         # packed per-line flush state (LS_CACHED|LS_FINVAL|LS_EVERFL bits)
         self._lstate = bytearray(cap // LINE_WORDS)
         # per-line dirty prefix: unapplied stores (crash Assumption 1)
         self._log: Dict[int, List[Tuple[int, Any]]] = {}
-        # absolute log position already persisted, indexed by line
+        # absolute log position already persisted, indexed by line.  Stays
+        # a plain list: the per-op paths do scalar `+=` on it (ndarray
+        # scalar read-modify-write is ~3x slower and leaks np.int64 into
+        # downstream arithmetic); the burst path batches its updates with
+        # one C-level map(__setitem__) pass instead.
         self._log_start: List[int] = [0] * (cap // LINE_WORDS)
         # pending persists per thread: ('flush', line, upto) | ('nt', addr, v)
         self._pending: Dict[int, List[Tuple]] = {t: [] for t in range(nthreads)}
         # --- volatile space (dense above _VOLATILE_BASE) ------------------
         vcap = 1024
         self._vcap = vcap
-        self._vval: List[Any] = [None] * vcap
+        # the volatile value plane IS an object ndarray: the volatile-only
+        # fast paths touch it a handful of times per op (cheap either
+        # way), and it is exactly where the burst executor's vectorized
+        # apply lands whole bursts of stores as one fancy-indexed scatter.
+        # np.empty(object) initializes to None.
+        self._vval = np.empty(vcap, dtype=object)
         self._vtouched = bytearray(vcap)
         # --- address-space management (address 0 is reserved as NULL) -----
         self._brk = LINE_WORDS
@@ -346,7 +360,11 @@ class NVRAM:
         while cap < need:
             cap *= 2
         add = cap - self._vcap
-        self._vval.extend([None] * add)
+        # in-place growth: ndarray.resize keeps the array object itself
+        # (the compiled fast path holds it as a bound default); the new
+        # cells must be re-initialized to None (resize zero-fills)
+        self._vval.resize(cap, refcheck=False)
+        self._vval[self._vcap:] = None
         self._vtouched.extend(bytes(add))
         self._vcap = cap
 

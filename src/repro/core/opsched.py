@@ -62,6 +62,21 @@ from .records import MAX_STAGED_NCLASS, MAX_STAGED_THREADS, META_KEY_SHIFT
 
 NULL = 0
 
+# Codegen cache: the generated sources are pure functions of (queue
+# class, op schedule, model), so identical text recurs across harness
+# constructions -- re-``exec`` of the cached code object into fresh
+# globals is ~100x cheaper than re-``compile``.
+_CODE_CACHE: Dict[Tuple[str, str], Any] = {}
+
+
+def compile_cached(src: str, name: str):
+    key = (name, src)
+    code = _CODE_CACHE.get(key)
+    if code is None:
+        code = _CODE_CACHE[key] = compile(src, name, "exec")
+    return code
+
+
 # --------------------------------------------------------------------------
 # locations and value expressions (queue-facing, address-free)
 # --------------------------------------------------------------------------
@@ -675,7 +690,8 @@ def _val_src(v: Val) -> str:
 _VB = NVRAM._VOLATILE_BASE
 
 
-def _emit_prog(emit, op: CompiledOp, tracking: bool) -> None:
+def _emit_prog(emit, op: CompiledOp, tracking: bool,
+               values_only: bool = False) -> None:
     """Emit the effect-program body shared by both codegen variants.
 
     Line-state transitions go through the engine's packed ``_lstate``
@@ -684,6 +700,14 @@ def _emit_prog(emit, op: CompiledOp, tracking: bool) -> None:
     static transitions write the packed constant directly.  ``tracking``
     emits the contention-epoch taps (legacy variant only; the columnar
     variant is dispatched exclusively with tracking off).
+
+    ``values_only`` keeps just the value-carrying effects (vis/pmem/vval
+    stores, log appends and drains) and drops everything the burst
+    executor computes vectorized instead: outcome-key accounting and
+    every ``lstate``/``vtouched`` read or write.  The burst automaton
+    over the fleet lowering's opcode rows covers exactly the dropped
+    transitions, so running this body per grant followed by the
+    vectorized line-state scatter reproduces the full-body mutations.
 
     Address, line-number and volatile-index expressions are pure within
     one op body (they only read ``tid``/``item`` and the node locals
@@ -717,6 +741,8 @@ def _emit_prog(emit, op: CompiledOp, tracking: bool) -> None:
     prog = op.prog
     for pc, ins in enumerate(prog):
         code = ins[0]
+        if code in (K_CLASS_P, K_CLASS_V, K_STATE) and values_only:
+            continue
         if code == K_CLASS_P:
             ln = ref(_line_src(ins[1]))
             if tracking:
@@ -780,9 +806,11 @@ def _emit_prog(emit, op: CompiledOp, tracking: bool) -> None:
             # very next instruction overwrites this same line's state with
             # a constant (ST_INVAL/ST_RECACHE); nothing reads it between
             nxt = prog[pc + 1] if pc + 1 < len(prog) else None
-            if not (nxt is not None and nxt[0] == K_STATE
-                    and nxt[2] in (ST_INVAL, ST_RECACHE)
-                    and nxt[1] == ins[1]):
+            if values_only:
+                pass
+            elif not (nxt is not None and nxt[0] == K_STATE
+                      and nxt[2] in (ST_INVAL, ST_RECACHE)
+                      and nxt[1] == ins[1]):
                 emit(f"    lstate[{ln}] = lstate[{ln}] & {LS_EVERFL} | "
                      f"{LS_CACHED}")
         elif code == K_PENDW:
@@ -959,7 +987,7 @@ def generate_fast_fn(queue, op: CompiledOp) -> Callable:
     src = "\n".join(w)
     g = {"_op": op, "_vc": op._veccache, "_dc": op._deferred,
          "_tc": op._tcache, "_CT": TOUCH_CLASS, "_NS": TOUCH_NEXT}
-    exec(compile(src, f"<opsched:{type(queue).__name__}.{kind}>", "exec"), g)
+    exec(compile_cached(src, f"<opsched:{type(queue).__name__}.{kind}>"), g)
     fn = g["_fast_op"]
     fn.__source__ = src
     return fn
@@ -1116,8 +1144,8 @@ def generate_columnar_fn(queue, op: CompiledOp, nvram: NVRAM, fifo: deque,
          "_VTOUCHED": nvram._vtouched, "_VVAL": nvram._vval,
          "_VIS": nvram._vis, "_PMEM": nvram._pmem, "_LOG": nvram._log,
          "_LS": nvram._log_start}
-    exec(compile(src, f"<opsched-col:{type(queue).__name__}.{kind}>",
-                 "exec"), g)
+    exec(compile_cached(
+        src, f"<opsched-col:{type(queue).__name__}.{kind}>"), g)
     fn = g["_fast_op"]
     fn.__source__ = src
     fn.__params__ = params      # (name, global-name) pairs, in order
@@ -1181,9 +1209,9 @@ def generate_columnar_runner(cfns: dict, queue) -> Callable:
     w: List[str] = []
     emit = w.append
     emit(f"def _runner(heap, cursors, op_kinds, op_items, lens, bail, "
-         f"heappop=_HPOP, heappush=_HPUSH, {sig}):")
+         f"nops=-1, heappop=_HPOP, heappush=_HPUSH, {sig}):")
     emit("    ops_run = 0")
-    emit("    while heap:")
+    emit("    while heap and ops_run != nops:")
     emit("        t_start, tid = heappop(heap)")
     emit("        _i = cursors[tid]")
     emit("        if op_kinds[tid][_i] == 'enq':")
@@ -1210,11 +1238,109 @@ def generate_columnar_runner(cfns: dict, queue) -> Callable:
     src = "\n".join(w)
     env["_HPOP"] = heapq.heappop
     env["_HPUSH"] = heapq.heappush
-    exec(compile(src, f"<opsched-runner:{type(queue).__name__}>", "exec"),
+    exec(compile_cached(src, f"<opsched-runner:{type(queue).__name__}>"),
          env)
     runner = env["_runner"]
     runner.__source__ = src
     return runner
+
+
+def _op_value_syms(op: CompiledOp) -> set:
+    """Node-local symbol names the op's *value* effects read (addresses
+    and value expressions of the stores kept by ``values_only``)."""
+    used: set = set()
+
+    def _val(v) -> None:
+        tag = v[0]
+        if tag == "sym":
+            used.add(v[1])
+        elif tag == "tup":
+            _val(v[1])
+            _val(v[2])
+
+    def _addr(a) -> None:
+        if a is not None and a[0] == 1:
+            used.add(_SYMS[a[1]])
+
+    for ins in op.prog:
+        code = ins[0]
+        if code in (K_CLASS_P, K_CLASS_V, K_STATE, K_CASTAG, K_STAMP):
+            continue
+        _addr(ins[1])
+        if code == K_DRAINF:
+            for ent in ins[2]:
+                _addr(ent[1])
+                if ent[0] == "w":
+                    _val(ent[3])
+        elif code in (K_VVAL, K_LOGW, K_PMEMW, K_PENDW, K_NT, K_NTAPPLY):
+            _val(ins[3])
+    return used
+
+
+def generate_burst_apply_fn(queue, ops: Dict[str, CompiledOp],
+                            nvram: NVRAM) -> Callable:
+    """Generate the burst executor's merged per-grant value loop.
+
+    The burst path splits each compiled op body in two: everything that
+    feeds the outcome key (line-state and volatile-touch transitions) is
+    replayed vectorized from the fleet lowering's opcode rows, while the
+    value-carrying stores -- which may move arbitrary Python payloads
+    through ``vis``/``pmem``/``vval`` and the per-line write logs --
+    still need sequential grant-order execution because the engine's
+    value containers are plain Python lists.  This emits that sequential
+    half as ONE loop over the whole burst: per grant it binds the
+    planner-computed node locals from column lists and runs the
+    ``values_only`` rendering of the enq or deq body (see
+    :func:`_emit_prog`).  Drain branches (``K_DRAIN``/``K_DRAINF``) stay
+    exact without any prediction precisely because this loop runs in
+    grant order: each drain sees the log contents its predecessors left.
+
+    Signature of the generated fn::
+
+        _burst_apply(n, kb, tids, e_items, e_idxs, <e_syms...>,
+                     d_items, d_idxs, <d_syms...>)
+
+    ``kb`` is the per-grant kind bit (1 = deq); each kind's node-local
+    columns are *per-kind* lists (indexed by separate enq/deq cursors, so
+    the planner never pads the other kind's rows).  The sym column order
+    per kind is published as ``fn.__cols__``.  Engine containers ride as
+    positional defaults like the columnar fns.
+    """
+    nv = nvram
+    cols = {k: sorted(_op_value_syms(ops[k])) for k in ("enq", "deq")}
+    w: List[str] = []
+    emit = w.append
+    sig = ", ".join(
+        [f"e_items, e_idxs"] + [f"e_{s}" for s in cols["enq"]] +
+        [f"d_items, d_idxs"] + [f"d_{s}" for s in cols["deq"]])
+    emit(f"def _burst_apply(n, kb, tids, {sig}, "
+         "vis=_VIS, pmem=_PMEM, vval=_VVAL, log=_LOG, ls=_LS):")
+    emit("    g = 0")
+    emit("    ge = 0")
+    emit("    gd = 0")
+    emit("    while g < n:")
+    emit("        tid = tids[g]")
+    emit("        if kb[g]:")
+    for kind, pfx, cur in (("deq", "d", "gd"), ("enq", "e", "ge")):
+        op = ops[kind]
+        body: List[str] = [f"    item = {pfx}_items[{cur}]",
+                           f"    idx = {pfx}_idxs[{cur}]"]
+        for s in cols[kind]:
+            body.append(f"    {s} = {pfx}_{s}[{cur}]")
+        _emit_prog(body.append, op, tracking=False, values_only=True)
+        body.append(f"    {cur} += 1")
+        w.extend("        " + line for line in body)
+        if kind == "deq":
+            emit("        else:")
+    emit("        g += 1")
+    src = "\n".join(w)
+    env = {"_VIS": nv._vis, "_PMEM": nv._pmem, "_VVAL": nv._vval,
+           "_LOG": nv._log, "_LS": nv._log_start}
+    exec(compile_cached(src, f"<burst-apply:{type(queue).__name__}>"), env)
+    fn = env["_burst_apply"]
+    fn.__source__ = src
+    fn.__cols__ = cols
+    return fn
 
 
 # --------------------------------------------------------------------------

@@ -124,6 +124,10 @@ class RecordStore:
         self._sm = array("q")         # packed key/tid/kind words
         self._si: List[Any] = []      # op items (enq item / deq result)
         self._st = array("d")         # post-op thread clocks
+        # burst item chunks: (stream position, object ndarray) -- whole
+        # bursts stay as arrays so sync() block-copies them instead of
+        # converting a giant Python list element-wise
+        self._si_chunks: List[Tuple[int, Any]] = []
         # ---- per-thread chain carries ------------------------------------
         self._nextseq = np.zeros(nthreads, dtype=np.int64)
         self._last_tend = np.zeros(nthreads, dtype=np.float64)
@@ -215,6 +219,21 @@ class RecordStore:
         self._last_tend[:] = nv.thread_times_ns()
 
     # ------------------------------------------------------------- staging
+    def extend_staged(self, metas: bytes, items, tends: bytes) -> None:
+        """Append a whole committed burst to the staging arrays in one
+        bulk copy -- ``metas`` / ``tends`` are the packed int64 meta
+        words and float64 post-op clocks as raw bytes, ``items`` the
+        per-op payloads (an object ndarray, kept whole as a chunk, or a
+        plain list).  The rows are materialized and charged by the next
+        :meth:`sync`, exactly as per-op staged rows are; used by the
+        burst executor (:mod:`repro.core.burst`)."""
+        if isinstance(items, np.ndarray):
+            self._si_chunks.append((len(self._sm), items))
+        else:
+            self._si.extend(items)
+        self._sm.frombytes(metas)
+        self._st.frombytes(tends)
+
     def sync(self) -> None:
         """Materialize the staged burst into the columns and charge the
         engine -- one vector pass, one ``charge_counts`` per distinct
@@ -243,25 +262,47 @@ class RecordStore:
         self.tid[sl] = tids
         self.kind[sl] = kb
         self.completed[sl] = 1
-        self.items[sl] = self._si
+        icol = self.items[sl]
+        if self._si_chunks:
+            li = cur = 0
+            si = self._si
+            for pos, chunk in self._si_chunks:
+                if pos > cur:
+                    icol[cur:pos] = si[li:li + pos - cur]
+                    li += pos - cur
+                    cur = pos
+                k = len(chunk)
+                icol[cur:cur + k] = chunk
+                cur += k
+            if cur < n:
+                icol[cur:] = si[li:]
+        else:
+            icol[:] = self._si
         te = np.frombuffer(self._st, dtype=np.float64).copy()
         self.t_end[sl] = te
         # per-thread seq numbers + start-clock chain: a thread's clock only
         # advances inside ops, so op i's start clock is op i-1's end clock
         # (the carry bridges bursts and real-execution ops)
-        seq_v = self.seq[sl]
-        ts_v = self.t_start[sl]
-        for t in np.unique(tids):
-            idx = np.nonzero(tids == t)[0]
-            k = idx.size
-            ns = self._nextseq[t]
-            seq_v[idx] = np.arange(ns, ns + k)
-            self._nextseq[t] = ns + k
-            chain = np.empty(k, dtype=np.float64)
-            chain[0] = self._last_tend[t]
-            chain[1:] = te[idx[:-1]]
-            ts_v[idx] = chain
-            self._last_tend[t] = te[idx[-1]]
+        order = np.argsort(tids.astype(np.uint8), kind="stable")
+        ts_ = tids[order]
+        gstart = np.empty(n, dtype=bool)
+        gstart[0] = True
+        gstart[1:] = ts_[1:] != ts_[:-1]
+        starts = np.nonzero(gstart)[0]
+        gtids = ts_[starts]
+        cnt = np.empty(starts.size, np.int64)
+        cnt[:-1] = starts[1:] - starts[:-1]
+        cnt[-1] = n - starts[-1]
+        within = np.arange(n, dtype=np.int64) - np.repeat(starts, cnt)
+        seq_s = np.repeat(self._nextseq[gtids], cnt) + within
+        self._nextseq[gtids] += cnt
+        te_s = te[order]
+        ts_chain = np.empty(n, dtype=np.float64)
+        ts_chain[1:] = te_s[:-1]
+        ts_chain[starts] = self._last_tend[gtids]
+        self._last_tend[gtids] = te_s[starts + cnt - 1]
+        self.seq[sl][order] = seq_s
+        self.t_start[sl][order] = ts_chain
         # event-count columns + engine charge, one pass per distinct word
         uniq, inv, counts = np.unique(m, return_inverse=True,
                                       return_counts=True)
@@ -295,6 +336,7 @@ class RecordStore:
         del sm[:]
         del self._si[:]
         del self._st[:]
+        self._si_chunks.clear()
         self.version += 1
 
     def flush(self) -> None:

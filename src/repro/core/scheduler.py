@@ -168,6 +168,23 @@ class Scheduler:
         return self.crashed
 
 
+class _NullProfiler:
+    """No-op stand-in letting the profiled and unprofiled clock-heap
+    loops share one body (the hooks cost two empty calls per op on the
+    generic path; the columnar/burst hot paths never see them)."""
+
+    __slots__ = ()
+
+    def push(self, name: str) -> None:
+        pass
+
+    def pop(self) -> None:
+        pass
+
+
+_NULL_PROF = _NullProfiler()
+
+
 class ClockScheduler:
     """Batched discrete-event executor: no OS threads, no per-primitive
     yields.
@@ -195,18 +212,24 @@ class ClockScheduler:
     """
 
     def __init__(self, nvram: NVRAM, contention=None, fast=None,
-                 pause_gc: bool = True, profile=None):
+                 pause_gc: bool = True, profile=None, burst=None):
         self.nvram = nvram
         self.contention = contention   # Optional[ContentionModel]
         self.fast = fast               # Optional[opsched.FastPathExecutor]
         self.pause_gc = pause_gc       # False: seed-era GC behavior
         # Optional observation-only phase profiler (duck-typed push/pop,
-        # e.g. repro.obs.PhaseProfiler).  When attached, run() takes a
-        # separate instrumented loop (_run_profiled) that dispatches the
-        # same compiled per-op fns the merged runner splices -- identical
-        # Stats/records (tests/test_obs_bit_identity.py), per-op timer
-        # cost only when profiling.  None leaves the hot loops untouched.
+        # e.g. repro.obs.PhaseProfiler).  When attached, columnar runs
+        # take an instrumented per-op loop dispatching the same compiled
+        # fns the merged runner splices -- identical Stats/records
+        # (tests/test_obs_bit_identity.py), per-op timer cost only when
+        # profiling.  None leaves the hot loops untouched.
         self.profile = profile
+        # Burst execution (repro.core.burst): True enables it with
+        # defaults, a dict passes BurstExecutor options through.  Only
+        # engages on columnar runs of burst-eligible queues; everything
+        # else silently stays on the merged columnar runner.
+        self.burst = burst
+        self.burst_exec = None         # BurstExecutor of the last run
         self.ops_run = 0
 
     def run(self, op_lists: Optional[List[List[Callable[[], None]]]],
@@ -240,8 +263,7 @@ class ClockScheduler:
             raise ValueError("contention modeling needs op_kinds")
         if fast is not None and (op_kinds is None or op_items is None):
             raise ValueError("the fast path needs op_kinds and op_items")
-        if self.profile is not None:
-            return self._run_profiled(op_lists, op_kinds, op_items, make_op)
+        prof = self.profile
         prev_hook, nv.step_hook = nv.step_hook, None   # no yield points
         # Throughput runs allocate millions of small acyclic objects
         # (op records, event tuples, store-log entries); generational GC
@@ -250,175 +272,69 @@ class ClockScheduler:
         gc_was_enabled = self.pause_gc and gc.isenabled()
         if gc_was_enabled:
             gc.disable()
+        if prof is not None:
+            prof.push("bookkeeping")
         try:
             seed_src = op_lists if op_lists is not None else op_kinds
             cursors = [0] * len(seed_src)
             heap = [(nv.thread_time_ns(t), t) for t, ops in
                     enumerate(seed_src) if ops]
             heapq.heapify(heap)
-            heappush, heappop = heapq.heappush, heapq.heappop
             timed = (fast is not None and cm is None and fast.timed)
             if (timed and fast.rstore is not None
                     and not nv.contention_tracking):
-                # columnar dispatch: call the per-kind staged fns directly
-                # (they append to the record store's staging lists; charges
-                # and record materialization happen in vector bursts at
-                # sync points).  A None return is a bail: materialize the
-                # staged burst so the engine clock read after the real
-                # thunk is exact, then run the real thunk and stitch its
-                # clocks into the store's per-thread chain.
-                rs = fast.rstore
-                lens = [len(ks) for ks in op_kinds]
-
-                def bail(t, i, t_start, kind):
-                    # outside the compiled steady state: materialize the
-                    # staged burst so the engine clock read after the real
-                    # thunk is exact, run the real thunk, stitch its
-                    # clocks into the store's per-thread chain
-                    rs.sync()
-                    nv.set_tid(t)
-                    if op_lists is not None:
-                        op_lists[t][i]()
-                    else:
-                        make_op(t, kind, op_items[t][i])()
-                    fast.after_real_op(t, kind)
-                    t_end = nv.thread_time_ns(t)
-                    rs.note_real_clocks(t, t_start, t_end)
-                    return t_end
-
-                self.ops_run += fast.crunner(
-                    heap, cursors, op_kinds, op_items, lens, bail)
-                return False
+                return self._run_columnar(heap, cursors, op_lists,
+                                          op_kinds, op_items, make_op,
+                                          prof)
             if op_lists is None:
                 raise ValueError("op_lists omitted but columnar dispatch "
                                  "is unavailable on this run")
+            self._heap_loop(heap, cursors, op_lists, op_kinds, op_items,
+                            timed,
+                            prof if prof is not None else _NULL_PROF)
+        finally:
+            nv.step_hook = prev_hook
+            if gc_was_enabled:
+                gc.enable()
+            if prof is not None:
+                prof.pop()   # bookkeeping
+        return False
+
+    def _heap_loop(self, heap, cursors, op_lists, op_kinds, op_items,
+                   timed: bool, prof) -> None:
+        """The generic clock-heap loop (everything except columnar
+        dispatch), shared by the profiled and unprofiled paths -- ``prof``
+        is either the attached profiler or the no-op stand-in.  Phases:
+        ``heap-loop`` (pop/push + cursor bookkeeping),
+        ``interpreted-body`` (op bodies: compiled replay or plain
+        thunks), ``bail-real-op`` (fast-path bails incl. resync)."""
+        nv = self.nvram
+        cm = self.contention
+        fast = self.fast
+        heappush, heappop = heapq.heappush, heapq.heappop
+        prof.push("heap-loop")
+        try:
             while heap:
                 t_start, t = heappop(heap)
                 i = cursors[t]
                 if timed:
                     # compiled replay with exact incremental clocks: the
                     # engine is only consulted on bail (real execution)
+                    prof.push("interpreted-body")
                     t_end = fast.try_op_timed(t, op_kinds[t][i],
                                               op_items[t][i], t_start)
+                    prof.pop()
                     if t_end is None:
+                        prof.push("bail-real-op")
                         nv.set_tid(t)
                         op_lists[t][i]()
                         fast.after_real_op(t, op_kinds[t][i])
                         t_end = nv.thread_time_ns(t)
+                        prof.pop()
                 else:
                     nv.set_tid(t)
                     if cm is not None:
                         nv.epoch += 1     # one clock-window tick per op
-                    if fast is not None:
-                        kind = op_kinds[t][i]
-                        if not fast.try_op(t, kind, op_items[t][i]):
-                            op_lists[t][i]()
-                            fast.after_real_op(t, kind)
-                    else:
-                        op_lists[t][i]()
-                    if cm is not None:
-                        t_end = cm.after_op(t, op_kinds[t][i], t_start)
-                    else:
-                        t_end = nv.thread_time_ns(t)
-                self.ops_run += 1
-                cursors[t] += 1
-                if cursors[t] < len(op_lists[t]):
-                    heappush(heap, (t_end, t))
-        finally:
-            nv.step_hook = prev_hook
-            if gc_was_enabled:
-                gc.enable()
-        return False
-
-    def _run_profiled(self, op_lists, op_kinds=None, op_items=None,
-                      make_op=None) -> bool:
-        """run() with scoped phase timers (self.profile is attached).
-
-        Same dispatch decision tree and same op-level calls as run(); the
-        only structural difference is that columnar dispatch calls the
-        per-kind staged fns (``fast.cfns``) from an instrumented Python
-        loop instead of through the merged ``fast.crunner`` -- those fns
-        are the exact bodies the runner splices, so every append, charge
-        and clock is bit-identical; the merged runner is purely a loop-
-        overhead optimization.  Phases: ``heap-loop`` (pop/push + cursor
-        bookkeeping), ``interpreted-body`` (op bodies: compiled replay or
-        plain thunks), ``bail-real-op`` (fast-path bails incl. resync),
-        ``record-charging`` (store sync, via RecordStore.profiler),
-        ``bookkeeping`` (setup/teardown, contention accounting).
-        """
-        nv = self.nvram
-        cm = self.contention
-        fast = self.fast
-        prof = self.profile
-        prev_hook, nv.step_hook = nv.step_hook, None
-        gc_was_enabled = self.pause_gc and gc.isenabled()
-        if gc_was_enabled:
-            gc.disable()
-        prof.push("bookkeeping")
-        try:
-            seed_src = op_lists if op_lists is not None else op_kinds
-            cursors = [0] * len(seed_src)
-            heap = [(nv.thread_time_ns(t), t) for t, ops in
-                    enumerate(seed_src) if ops]
-            heapq.heapify(heap)
-            heappush, heappop = heapq.heappush, heapq.heappop
-            timed = (fast is not None and cm is None and fast.timed)
-            columnar = (timed and fast.rstore is not None
-                        and not nv.contention_tracking)
-            if not columnar and op_lists is None:
-                raise ValueError("op_lists omitted but columnar dispatch "
-                                 "is unavailable on this run")
-            prof.push("heap-loop")
-            if columnar:
-                rs = fast.rstore
-                fns = fast.cfns
-                fenq, fdeq = fns["enq"], fns["deq"]
-                lens = [len(ks) for ks in op_kinds]
-                while heap:
-                    t_start, t = heappop(heap)
-                    i = cursors[t]
-                    kind = op_kinds[t][i]
-                    prof.push("interpreted-body")
-                    t_end = (fenq if kind == "enq" else fdeq)(
-                        t, op_items[t][i], t_start)
-                    prof.pop()
-                    if t_end is None:
-                        prof.push("bail-real-op")
-                        rs.sync()   # nests record-charging via rs.profiler
-                        nv.set_tid(t)
-                        if op_lists is not None:
-                            op_lists[t][i]()
-                        else:
-                            make_op(t, kind, op_items[t][i])()
-                        fast.after_real_op(t, kind)
-                        t_end = nv.thread_time_ns(t)
-                        rs.note_real_clocks(t, t_start, t_end)
-                        prof.pop()
-                    self.ops_run += 1
-                    cursors[t] = i + 1
-                    if i + 1 < lens[t]:
-                        heappush(heap, (t_end, t))
-                prof.pop()   # heap-loop
-                return False
-            while heap:
-                t_start, t = heappop(heap)
-                i = cursors[t]
-                if timed:
-                    prof.push("interpreted-body")
-                    t_end = fast.try_op_timed(t, op_kinds[t][i],
-                                              op_items[t][i], t_start)
-                    prof.pop()
-                    if t_end is None:
-                        prof.push("bail-real-op")
-                        nv.set_tid(t)
-                        op_lists[t][i]()
-                        fast.after_real_op(t, op_kinds[t][i])
-                        t_end = nv.thread_time_ns(t)
-                        prof.pop()
-                else:
-                    nv.set_tid(t)
-                    if cm is not None:
-                        nv.epoch += 1
                     if fast is not None:
                         kind = op_kinds[t][i]
                         prof.push("interpreted-body")
@@ -441,10 +357,109 @@ class ClockScheduler:
                 cursors[t] += 1
                 if cursors[t] < len(op_lists[t]):
                     heappush(heap, (t_end, t))
-            prof.pop()   # heap-loop
         finally:
-            nv.step_hook = prev_hook
-            if gc_was_enabled:
-                gc.enable()
-            prof.pop()   # bookkeeping
+            prof.pop()   # heap-loop
+
+    def _run_columnar(self, heap, cursors, op_lists, op_kinds, op_items,
+                      make_op, prof) -> bool:
+        """Columnar dispatch: the per-kind staged fns append to the
+        record store's staging lists; charges and record materialization
+        happen in vector bursts at sync points.  Three drivers, all
+        bit-identical:
+
+        * the merged ``fast.crunner`` (default, no profiler) -- per-op
+          fn bodies spliced into one loop;
+        * the burst executor (``burst`` enabled and the queue is
+          burst-eligible) -- whole multi-thread bursts as array
+          programs, rejected bursts replayed through the merged runner
+          in bounded chunks (the ``mispredict-replay`` phase);
+        * an instrumented per-op loop (profiler attached, no burst) --
+          dispatches the exact fn bodies the runner splices, per-op
+          timer cost only when profiling.
+        """
+        nv = self.nvram
+        fast = self.fast
+        rs = fast.rstore
+        lens = [len(ks) for ks in op_kinds]
+
+        def bail(t, i, t_start, kind):
+            # outside the compiled steady state: materialize the staged
+            # burst so the engine clock read after the real thunk is
+            # exact, run the real thunk, stitch its clocks into the
+            # store's per-thread chain
+            rs.sync()
+            nv.set_tid(t)
+            if op_lists is not None:
+                op_lists[t][i]()
+            else:
+                make_op(t, kind, op_items[t][i])()
+            fast.after_real_op(t, kind)
+            t_end = nv.thread_time_ns(t)
+            rs.note_real_clocks(t, t_start, t_end)
+            return t_end
+
+        bx = None
+        if self.burst:
+            from .burst import BurstExecutor, build_burst_program
+            bprog = build_burst_program(fast)
+            if bprog is not None:
+                opts = dict(self.burst) if isinstance(self.burst, dict) \
+                    else {}
+                bx = BurstExecutor(bprog, fast, op_kinds, op_items, lens,
+                                   profile=prof, **opts)
+                self.burst_exec = bx
+        if bx is not None:
+            crunner = fast.crunner
+            if prof is not None:
+                prof.push("heap-loop")
+            try:
+                while heap:
+                    n = bx.try_burst(heap, cursors)
+                    self.ops_run += n
+                    if heap and n == 0:
+                        # burst rejected here: replay a bounded chunk on
+                        # the merged columnar runner, bit-identically
+                        if prof is not None:
+                            prof.push("mispredict-replay")
+                        m = crunner(heap, cursors, op_kinds, op_items,
+                                    lens, bail, bx.REPLAY_CHUNK)
+                        if prof is not None:
+                            prof.pop()
+                        self.ops_run += m
+                        bx.replayed_ops += m
+            finally:
+                if prof is not None:
+                    prof.pop()   # heap-loop
+            return False
+        if prof is None:
+            self.ops_run += fast.crunner(
+                heap, cursors, op_kinds, op_items, lens, bail)
+            return False
+        # instrumented per-op columnar loop: dispatches the per-kind
+        # staged fns -- the exact bodies the merged runner splices, so
+        # every append, charge and clock is bit-identical; the merged
+        # runner is purely a loop-overhead optimization
+        fns = fast.cfns
+        fenq, fdeq = fns["enq"], fns["deq"]
+        heappush, heappop = heapq.heappush, heapq.heappop
+        prof.push("heap-loop")
+        try:
+            while heap:
+                t_start, t = heappop(heap)
+                i = cursors[t]
+                kind = op_kinds[t][i]
+                prof.push("interpreted-body")
+                t_end = (fenq if kind == "enq" else fdeq)(
+                    t, op_items[t][i], t_start)
+                prof.pop()
+                if t_end is None:
+                    prof.push("bail-real-op")
+                    t_end = bail(t, i, t_start, kind)
+                    prof.pop()
+                self.ops_run += 1
+                cursors[t] = i + 1
+                if i + 1 < lens[t]:
+                    heappush(heap, (t_end, t))
+        finally:
+            prof.pop()   # heap-loop
         return False

@@ -61,16 +61,23 @@ class FleetLoweringError(ValueError):
 class Ref:
     """A lowered address: persistent line / volatile word, constant or
     env-relative.  ``const`` holds an absolute persistent address or a
-    volatile offset (addr - _VOLATILE_BASE); ``sym`` indexes the op env."""
+    volatile offset (addr - _VOLATILE_BASE); ``sym`` indexes the op env.
+    Mode ``"tid"`` (multi-thread lowering only, see ``pin_tid``) is a
+    per-thread root: effective address ``const + tid * LINE_WORDS``."""
     space: str            # "p" | "v"
-    mode: str             # "const" | "sym"
+    mode: str             # "const" | "sym" | "tid"
     const: int = 0
     sym: int = -1
     off: int = 0
 
 
-def _lower_addr(a, space: str) -> Ref:
-    """Compiler address descriptor -> Ref (tid pinned to 0)."""
+def _lower_addr(a, space: str, pin_tid: bool = True) -> Ref:
+    """Compiler address descriptor -> Ref.
+
+    ``pin_tid=True`` (the fleet default: one simulated tenant per
+    instance) folds per-tid roots to their tid-0 constant; the burst
+    executor lowers with ``pin_tid=False`` to keep them symbolic
+    (mode ``"tid"``), resolved per grant against the granted thread."""
     mode = a[0]
     if mode == 0:
         addr = a[1]
@@ -80,8 +87,16 @@ def _lower_addr(a, space: str) -> Ref:
                     f"volatile address {addr} in persistent context")
             return Ref("v", "const", const=addr - _VB)
         return Ref(space, "const", const=addr)
-    if mode == 2:                       # per-tid root, tid == 0
-        return Ref(space, "const", const=a[1] + a[2])
+    if mode == 2:                       # per-tid root
+        addr = a[1] + a[2]
+        if addr >= _VB:
+            if space == "p":
+                raise FleetLoweringError(
+                    f"volatile address {addr} in persistent context")
+            addr -= _VB
+        if pin_tid:
+            return Ref(space, "const", const=addr)
+        return Ref(space, "tid", const=addr)
     sym, off = a[1], a[2]
     sp = "v" if sym in VOLATILE_SYM else "p"
     if sp != space:
@@ -131,24 +146,27 @@ class FleetProgram:
     slot_attrs: Tuple[str, ...] = field(default=())   # guard slot attrs
 
 
-def lower_op(op: CompiledOp, guard_attrs: frozenset) -> FleetProgram:
+def lower_op(op: CompiledOp, guard_attrs: frozenset,
+             pin_tid: bool = True) -> FleetProgram:
     """Lower one CompiledOp.  ``guard_attrs`` is the set of slot attributes
     any guard of this queue consults -- slot stores to other attrs carry no
     Stats information (their values feed dropped value stores only) and are
-    elided; a tuple-valued store to a *guarded* slot is an error."""
+    elided; a tuple-valued store to a *guarded* slot is an error.
+    ``pin_tid`` is forwarded to :func:`_lower_addr` (the burst executor
+    lowers with ``pin_tid=False`` to keep per-tid roots symbolic)."""
     micro = []
     for ins in op.prog:
         code = ins[0]
         if code in _DROPPED:
             continue
         if code == K_CLASS_P:
-            micro.append(("class_p", _lower_addr(ins[1], "p")))
+            micro.append(("class_p", _lower_addr(ins[1], "p", pin_tid)))
         elif code == K_CLASS_V:
-            micro.append(("class_v", _lower_addr(ins[1], "v")))
+            micro.append(("class_v", _lower_addr(ins[1], "v", pin_tid)))
         elif code == K_STATE:
-            micro.append(("state", _lower_addr(ins[1], "p"), ins[2]))
+            micro.append(("state", _lower_addr(ins[1], "p", pin_tid), ins[2]))
         elif code == K_LINE:
-            micro.append(("line", _lower_addr(ins[1], "p")))
+            micro.append(("line", _lower_addr(ins[1], "p", pin_tid)))
         else:
             raise FleetLoweringError(f"unknown opcode {code} in {op.kind}")
     aux = []
@@ -211,7 +229,7 @@ class FleetPrograms:
             or any(ax[0] in ("pdiscard", "padd") for p in self for ax in p.aux)
 
 
-def lower_queue(queue, model) -> FleetPrograms:
+def lower_queue(queue, model, pin_tid: bool = True) -> FleetPrograms:
     """Compile + lower both steady-state ops of one queue instance."""
     schedules = queue.op_schedule()
     if schedules is None:
@@ -222,8 +240,8 @@ def lower_queue(queue, model) -> FleetPrograms:
     guard_attrs = frozenset(
         g[1] for op in ops.values() for g in op.guard_specs
         if g[0] == "slot_nonnull")
-    return FleetPrograms(enq=lower_op(ops["enq"], guard_attrs),
-                         deq=lower_op(ops["deq"], guard_attrs))
+    return FleetPrograms(enq=lower_op(ops["enq"], guard_attrs, pin_tid),
+                         deq=lower_op(ops["deq"], guard_attrs, pin_tid))
 
 
 # --------------------------------------------------------------------------
@@ -248,9 +266,12 @@ N_OPC = 10
 
 # columns: (kind, amode, a, off, imm).  amode 0 = const (a is an absolute
 # persistent address / volatile offset), amode 1 = sym (a indexes the op
-# env, off is added to the bound value).  imm carries the per-kind
-# immediate (limbo space, slot index); event charges are implied by kind
-# (class_p consults cached/finval/everfl, class_v consults vtouched).
+# env, off is added to the bound value), amode 2 = per-tid root (a is the
+# tid-0 address; effective address a + tid * LINE_WORDS -- only emitted by
+# the burst lowering's ``pin_tid=False`` tables, never by fleet programs).
+# imm carries the per-kind immediate (limbo space, slot index); event
+# charges are implied by kind (class_p consults cached/finval/everfl,
+# class_v consults vtouched).
 OPCODE_COLUMNS = 5
 
 # kinds whose address operand lives in the volatile space
@@ -287,6 +308,8 @@ class OpcodeProgram:
 def _encode_ref(kind: int, ref: Ref, imm: int = 0) -> tuple:
     if ref.mode == "const":
         return (kind, 0, ref.const, 0, imm)
+    if ref.mode == "tid":
+        return (kind, 2, ref.const, 0, imm)
     return (kind, 1, ref.sym, ref.off, imm)
 
 
@@ -352,6 +375,8 @@ def decode_opcodes(opc: OpcodeProgram,
             space = "v" if kind in _OPC_VSPACE else "p"
             if amode == 0:
                 ref = Ref(space, "const", const=a)
+            elif amode == 2:
+                ref = Ref(space, "tid", const=a)
             else:
                 ref = Ref(space, "sym", sym=a, off=off)
             if not in_micro:

@@ -25,14 +25,16 @@ from .heartbeat import Heartbeat
 from .manifest import (MANIFEST_SCHEMA, ManifestError, build_manifest,
                        collect_env, collect_git, load_manifest,
                        manifest_path_for, validate_manifest, write_manifest)
-from .profiler import (PH_BAIL_REAL, PH_BOOKKEEPING, PH_CHARGE, PH_HEAP,
-                       PH_INTERP_BODY, PhaseProfiler)
+from .profiler import (PH_BAIL_REAL, PH_BOOKKEEPING, PH_BURST_APPLY,
+                       PH_BURST_PREDICT, PH_BURST_REPLAY, PH_BURST_VERIFY,
+                       PH_CHARGE, PH_HEAP, PH_INTERP_BODY, PhaseProfiler)
 
 __all__ = [
     "Heartbeat",
     "MANIFEST_SCHEMA", "ManifestError", "build_manifest", "collect_env",
     "collect_git", "load_manifest", "manifest_path_for", "validate_manifest",
     "write_manifest",
-    "PH_BAIL_REAL", "PH_BOOKKEEPING", "PH_CHARGE", "PH_HEAP",
+    "PH_BAIL_REAL", "PH_BOOKKEEPING", "PH_BURST_APPLY", "PH_BURST_PREDICT",
+    "PH_BURST_REPLAY", "PH_BURST_VERIFY", "PH_CHARGE", "PH_HEAP",
     "PH_INTERP_BODY", "PhaseProfiler",
 ]

@@ -29,6 +29,12 @@ PH_CHARGE = "record-charging"       # RecordStore.sync vector pass + flush_count
 PH_BOOKKEEPING = "bookkeeping"      # plan/thunk setup, store attach, teardown
 PH_BAIL_REAL = "bail-real-op"       # fast-path bail: real per-primitive op
 
+# Burst-execution phases (repro.core.burst; nested under heap-loop).
+PH_BURST_PREDICT = "burst-predict"  # pool + duration/interleave prediction
+PH_BURST_VERIFY = "burst-verify"    # plan + vector automaton + key compare
+PH_BURST_APPLY = "burst-vector-apply"  # commit: staging, stores, splice
+PH_BURST_REPLAY = "mispredict-replay"  # rejected bursts on the merged runner
+
 # Fleet phases (repro.fleet.runner).
 PH_FLEET_LOWER = "lowering"         # build_fleet: schedules -> stacked arrays
 PH_FLEET_CHUNK = "chunk-step"       # backend.run_chunk

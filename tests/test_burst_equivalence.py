@@ -1,0 +1,145 @@
+"""The burst executor's equivalence gate.
+
+``run_batched(burst=...)`` runs whole multi-thread stretches of the
+clock-heap schedule as one array program: predict the interleave from
+per-(tid, kind) outcome seeds, plan allocations, classify line touches
+with the vector automatons, verify the predicted keys, then commit
+memory effects and staged records in bulk -- with misprediction falling
+back to fixpoint re-prediction, prefix truncation, or rejection (the
+scheduler then replays a bounded chunk through the merged columnar
+runner).  The acceptance criterion is the same one every execution tier
+in this repo carries: **bit identity**.  For all 8 queues x 3 memory
+models x contention off/on/learned, a burst run must produce exactly
+the per-thread Stats (every counter AND the float ``time_ns``), op
+records, linearization events and final queue contents as the columnar
+runner with bursts disabled.
+
+Forced-misprediction knobs (``force_mispredict_every`` /
+``force_reject_every``) pin the bail paths: truncated commits and
+rejected bursts must leave no trace beyond the ops they legitimately
+committed.  The vectorized planner and row-batched apply fast paths
+assert engagement on the workloads they were built for (enqueue-only
+bursts), so a silent fallback cannot masquerade as coverage.
+"""
+import pytest
+
+from repro.core import ALL_QUEUES, MEMORY_MODELS, QueueHarness
+from benchmarks.workloads import make_plans, resolve_contention
+
+QUEUES8 = sorted(ALL_QUEUES)
+BURST = {"window": 512, "min_ops": 8}
+
+
+def _run(qname, model, contention="off", workload="mixed5050",
+         nthreads=4, ops=48, area_nodes=256, seed=0, burst=None):
+    h = QueueHarness(ALL_QUEUES[qname], nthreads=nthreads,
+                     area_nodes=area_nodes, model=model)
+    plans, wl_prefill = make_plans(workload, nthreads, ops, seed=seed)
+    for i in range(wl_prefill):
+        h.queue.enqueue(0, ("pre", i))
+    _, cmodel = resolve_contention(contention, qname)
+    res = h.run_batched(plans, contention=cmodel, burst=burst)
+    return h, res
+
+
+def assert_bit_identical(qname, model, contention="off", burst=BURST,
+                         **kw):
+    h_ref, r_ref = _run(qname, model, contention, burst=None, **kw)
+    h_b, r_b = _run(qname, model, contention, burst=burst, **kw)
+    s_ref, s_b = h_ref.nvram.stats, h_b.nvram.stats
+    for t in s_ref:
+        assert s_ref[t] == s_b[t], (
+            f"{qname}/{model}/{contention}: thread {t} Stats diverge\n"
+            f"  columnar: {s_ref[t]}\n  burst:    {s_b[t]}")
+    assert list(r_b.ops) == list(r_ref.ops)
+    assert list(r_b.events) == list(r_ref.events)
+    assert r_b.ops_completed == r_ref.ops_completed
+    assert r_b.sim_time_ns == r_ref.sim_time_ns
+    assert h_b.queue.drain(0) == h_ref.queue.drain(0)
+    return h_b
+
+
+@pytest.mark.parametrize("model", sorted(MEMORY_MODELS))
+@pytest.mark.parametrize("qname", QUEUES8)
+def test_burst_bit_identical_all_models(qname, model):
+    """The core gate: 8 queues x 3 models, mixed workload."""
+    assert_bit_identical(qname, model)
+
+
+@pytest.mark.parametrize("contention", ["on", "learned"])
+@pytest.mark.parametrize("qname", QUEUES8)
+def test_burst_bit_identical_contended(qname, contention):
+    """Contended dispatch bypasses bursts entirely (prediction only
+    covers the uncontended steady state); the burst=on run must still
+    be bit-identical through the generic path."""
+    assert_bit_identical(qname, "optane-clwb", contention)
+
+
+@pytest.mark.parametrize("qname", QUEUES8)
+def test_burst_commits_engage_uncontended(qname):
+    """Burst-capable queues must actually commit bursts on the mixed
+    workload -- equivalence through a silent never-burst fallback would
+    test nothing.  Queues whose programs cannot compile are the
+    documented exception and must report zero attempts."""
+    h = assert_bit_identical(qname, "optane-clwb", ops=96)
+    st = h.last_burst_stats or {}
+    if st.get("bursts", 0):
+        assert st["ops_bursted"] > 0 or st["rejects"] > 0
+
+
+def test_burst_vector_fast_paths_engage():
+    """Enqueue-only bursts must take both vector fast paths: the
+    sequential-planner bypass and the row-batched value apply."""
+    h = assert_bit_identical("MSQ", "optane-clwb", workload="producers",
+                             nthreads=4, ops=96)
+    st = h.last_burst_stats or {}
+    assert st.get("vec_plans", 0) > 0, "vectorized planner never engaged"
+    assert st.get("vec_applies", 0) > 0, "row-batched apply never engaged"
+    assert st.get("ops_bursted", 0) > 0
+
+
+@pytest.mark.parametrize("qname", ["MSQ", "DurableMSQ", "OptUnlinkedQ"])
+def test_burst_bit_identical_forced_mispredict(qname):
+    """Forced truncations exercise the mispredict bail: every other
+    burst commits only its verified prefix, with the disagreeing
+    grant's clock fixed to its true duration."""
+    h = assert_bit_identical(
+        qname, "optane-clwb", ops=96,
+        burst={"window": 512, "min_ops": 8, "force_mispredict_every": 2})
+    st = h.last_burst_stats or {}
+    if st.get("bursts", 0):
+        # a forced truncation either commits a verified prefix or, when
+        # the prefix is below min_ops, rejects the burst outright
+        assert st.get("mispredicts", 0) + st.get("rejects", 0) > 0, \
+            "forcing never fired"
+
+
+@pytest.mark.parametrize("qname", ["MSQ", "DurableMSQ"])
+def test_burst_bit_identical_forced_reject(qname):
+    """Forced rejections exercise the full bail: the scheduler replays
+    the rejected stretch through the merged columnar runner."""
+    h = assert_bit_identical(
+        qname, "optane-clwb", ops=96,
+        burst={"window": 512, "min_ops": 8, "force_reject_every": 2})
+    st = h.last_burst_stats or {}
+    if st.get("bursts", 0):
+        assert st.get("rejects", 0) > 0, "forcing never fired"
+        assert st.get("replayed_ops", 0) > 0, "rejection never replayed"
+
+
+@pytest.mark.parametrize("workload", ["producers", "consumers", "pairs",
+                                      "prodcons"])
+def test_burst_bit_identical_workload_shapes(workload):
+    """Workload shapes stress different burst paths: enqueue-only
+    (vector plan), dequeue-only (consumed-chain resolution), and the
+    mixed shapes that route through the sequential planner."""
+    assert_bit_identical("DurableMSQ", "optane-clwb", workload=workload,
+                         nthreads=4, ops=64)
+
+
+def test_burst_single_thread_and_tiny_windows():
+    """Degenerate shapes: one live thread, and windows below min_ops
+    (every burst rejected) must both stay bit-identical."""
+    assert_bit_identical("MSQ", "optane-clwb", nthreads=1, ops=40)
+    assert_bit_identical("MSQ", "optane-clwb",
+                         burst={"window": 4, "min_ops": 64})
